@@ -1,0 +1,223 @@
+"""Roofline analysis from the dry-run artifacts.
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+(cost_analysis and the parsed HLO are post-SPMD = per device, so the
+"/chips" in the spec's formulas is already applied.)
+
+Also reported: MODEL_FLOPS (analytic useful compute, 6·N_active·D for
+training) and MODEL_FLOPS / HLO_FLOPs — the fraction of compiled compute
+that is "useful" (exposes remat recompute, layer padding, whisper's
+cond-duplicated paths, MoE dispatch overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.core.hardware import TPU_V5E
+from repro.core.profiler import profile_arch
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+UNROLL_DIR = os.path.join(os.path.dirname(__file__), "results",
+                          "dryrun_unroll")
+
+
+def best_dir() -> str:
+    """Prefer loop-aware (--unroll diff) records when they exist."""
+    import glob as _g
+    return UNROLL_DIR if _g.glob(os.path.join(UNROLL_DIR, "*.json")) \
+        else DRYRUN_DIR
+
+PEAK = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9         # bytes/s per chip
+LINK_BW = 50e9         # bytes/s per ICI link
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_dev: int) -> float:
+    """Analytic useful FLOPs per device (6·N_active·D for training;
+    forward-only for prefill; one token per sequence for decode, with the
+    attention span set to the cache length)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        prof = profile_arch(cfg, seq=shape.seq_len)
+        per_tok = prof.total_flops_fwd() + prof.head.flops_fwd
+        total = 3.0 * per_tok * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        prof = profile_arch(cfg, seq=shape.seq_len)
+        per_tok = prof.total_flops_fwd() + prof.head.flops_fwd
+        total = per_tok * shape.global_batch * shape.seq_len
+    else:  # decode: one new token attending the full cache
+        prof = profile_arch(cfg, seq=2 * shape.seq_len)   # span = seq_len
+        per_tok = prof.total_flops_fwd() + prof.head.flops_fwd
+        total = per_tok * shape.global_batch
+    return total / n_dev
+
+
+def hbm_traffic_lb(arch: str, shape_name: str, M: int,
+                   gated: bool = False) -> float:
+    """Analytic LOWER bound on per-device HBM traffic per step.
+
+    ``cost_analysis()``'s "bytes accessed" counts every producer-consumer
+    edge (zero fusion residency) and overshoots HBM traffic by orders of
+    magnitude, so it is reported as an upper bound only.  The lower bound
+    counts what MUST move through HBM: stage weights re-read every pipeline
+    tick (fwd + bwd + remat fwd), boundary/intermediate activations at ~8
+    tensor passes per layer, and for decode the full KV/SSM cache read per
+    generated token."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    S = cfg.stages
+    ticks = M + S - 1
+    prof = profile_arch(cfg, seq=min(shape.seq_len, 8192))
+    stage_w = prof.total_bytes_weights() / S        # bf16 already (bpp=2)
+    d = cfg.d_model
+    Lps = -(-cfg.n_layers // S)
+    n_batch_shards = 16                             # data axis
+    if shape.kind == "train":
+        tok_mb = shape.global_batch * shape.seq_len / n_batch_shards / M
+        act = Lps * tok_mb * d * 2 * 8
+        return ticks * (3 * stage_w + 3 * act)
+    if shape.kind == "prefill":
+        b_loc = max(1, shape.global_batch // n_batch_shards)
+        tok_mb = b_loc * shape.seq_len / M
+        act = Lps * tok_mb * d * 2 * 8
+        cache_w = _cache_bytes_per_dev(cfg, shape, S)
+        return ticks * (stage_w + act) + cache_w
+    # decode: one token/sequence; cache read once, weights per tick —
+    # or per VALID tick (M of them) when invalid ticks are cond-gated
+    cache_r = _cache_bytes_per_dev(cfg, shape, S)
+    b_loc = max(1, shape.global_batch // n_batch_shards)
+    act = Lps * b_loc * d * 2 * 8
+    eff_ticks = M if gated else ticks
+    return eff_ticks * (stage_w + act) + cache_r
+
+
+def _cache_bytes_per_dev(cfg, shape, S) -> float:
+    """KV/SSM cache bytes per device (stage-sharded, tensor-sharded heads)."""
+    L = cfg.n_layers
+    per_layer = 0.0
+    b_loc = max(1, shape.global_batch // 16)
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        nh = s.n_heads(cfg.d_model)
+        per_layer += b_loc * nh * s.head_dim * s.d_state * 2
+    if cfg.attn_kind == "mla":
+        per_layer += b_loc * shape.seq_len * (
+            cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
+    elif cfg.attn_kind == "gqa":
+        win = cfg.window or shape.seq_len
+        n_global = sum(cfg.is_global_layer(i) for i in range(L))
+        frac_g = n_global / L
+        eff = frac_g * shape.seq_len + (1 - frac_g) * min(win, shape.seq_len)
+        nkv = max(1, cfg.n_kv_heads // max(1, cfg.tensor))
+        per_layer += 2 * b_loc * eff * nkv * cfg.resolved_head_dim * 2
+    return per_layer * L / S
+
+
+def analyse_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    flops = float(rec["cost"].get("flops", 0.0))
+    nbytes = float(rec["cost"].get("bytes accessed", 0.0))
+    coll = float(rec["collectives"]["total"])
+    M = rec.get("n_microbatches") or 1
+    t_compute = flops / PEAK
+    t_memory_ub = nbytes / HBM_BW
+    t_memory = hbm_traffic_lb(rec["arch"], rec["shape"], M,
+                              gated=bool(rec.get("gated"))) / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    dominant = max(terms, key=terms.get)
+    mflops = model_flops_per_device(rec["arch"], rec["shape"], n_dev)
+    bound = max(terms.values())
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], M=M,
+        t_compute=t_compute, t_memory=t_memory, t_memory_ub=t_memory_ub,
+        t_collective=t_coll,
+        dominant=dominant,
+        model_flops=mflops,
+        useful_ratio=(mflops / flops) if flops else 0.0,
+        roofline_fraction=(mflops / PEAK) / bound if bound else 0.0,
+        collectives=rec["collectives"],
+        hlo_flops=flops, hlo_bytes=nbytes,
+    )
+
+
+def load_all(mesh: str | None = None, dryrun_dir: str | None = None,
+             include_overrides: bool = False) -> list[dict]:
+    dryrun_dir = dryrun_dir or best_dir()
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if not include_overrides and rec.get("overrides"):
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        a = analyse_record(rec)
+        if a:
+            a["file"] = os.path.basename(path)
+            out.append(a)
+    return out
+
+
+def pick_hillclimb_pairs(rows: list[dict]) -> dict:
+    """The three mandated hillclimb targets (deduplicated): worst roofline
+    fraction, most collective-bound, and most representative of the paper's
+    technique (the train shape with the most pipeline p2p traffic — the
+    deepest pipeline)."""
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    picks: dict = {}
+    used: set = set()
+
+    def take(name, pool, key, biggest=True):
+        pool = [r for r in pool if (r["arch"], r["shape"]) not in used]
+        r = max(pool, key=key) if biggest else min(pool, key=key)
+        used.add((r["arch"], r["shape"]))
+        picks[name] = r
+
+    take("worst_fraction", single, lambda r: r["roofline_fraction"],
+         biggest=False)
+    take("most_collective_bound", single,
+         lambda r: r["t_collective"] / max(1e-12, max(r["t_compute"],
+                                                      r["t_memory"])))
+    take("most_representative",
+         [r for r in single if r["shape"] == "train_4k"],
+         lambda r: r["collectives"]["collective-permute"])
+    return picks
+
+
+def rows_csv(rows):
+    out = []
+    for r in rows:
+        name = f"roofline.{r['mesh']}.{r['arch']}.{r['shape']}"
+        bound_us = max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6
+        out.append((name, round(bound_us, 3),
+                    f"dom={r['dominant']} comp={r['t_compute']*1e6:.1f}us "
+                    f"mem={r['t_memory']*1e6:.1f}us "
+                    f"coll={r['t_collective']*1e6:.1f}us "
+                    f"useful={r['useful_ratio']:.2f} "
+                    f"frac={r['roofline_fraction']:.3f}"))
+    return out
+
+
+def main():
+    rows = load_all()
+    for name, val, extra in rows_csv(rows):
+        print(f"{name},{val},{extra}")
+    picks = pick_hillclimb_pairs(rows)
+    for k, r in picks.items():
+        print(f"hillclimb.{k},{r['arch']}/{r['shape']},"
+              f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

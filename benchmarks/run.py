@@ -1,0 +1,31 @@
+"""Benchmark harness: one function per paper table plus the roofline
+summary from the dry-run artifacts.  Prints ``name,value,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks.paper_tables import ALL_TABLES
+    from benchmarks import roofline
+
+    print("name,value,derived")
+    for fn in ALL_TABLES:
+        for name, value, derived in fn():
+            print(f"{name},{value:.4g},{derived}" if isinstance(value, float)
+                  else f"{name},{value},{derived}")
+    rows = roofline.load_all()
+    if rows:
+        for name, val, extra in roofline.rows_csv(rows):
+            print(f"{name},{val},{extra}")
+        picks = roofline.pick_hillclimb_pairs(rows)
+        for k, r in picks.items():
+            print(f"hillclimb.{k},{r['arch']}/{r['shape']},"
+                  f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}")
+    else:
+        print("roofline,skipped,run `python -m repro.launch.dryrun` first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Design-space exploration: how BaPipe's choices move with the hardware.
+
+Sweeps micro-batch counts and cluster shapes for one architecture and
+prints the explorer's decision surface — which schedule wins where, when
+DP beats pipelining, and what the memory fine-tuner does under a tight
+HBM budget.
+
+Run:  PYTHONPATH=src python examples/explore_cluster.py [arch]
+"""
+import dataclasses
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core.explorer import explore
+from repro.core.hardware import TPU_V5E, V100, homogeneous_cluster
+from repro.core.profiler import profile_arch
+from repro.core.schedules import SCHEDULES
+from repro.core.simulator import simulate
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-1.7b"
+    cfg = get_config(arch)
+    prof = profile_arch(cfg, seq=4096)
+    print(f"arch={arch}: {cfg.n_layers} layers, "
+          f"{prof.total_bytes_weights()/2/1e9:.2f}B params (body)")
+
+    print("\n-- cluster-size sweep (TPU v5e chips, minibatch 256) --")
+    for n in (2, 4, 8, 16):
+        r = explore(prof, homogeneous_cluster(TPU_V5E, n), 256)
+        lps = r.plan.layers_per_stage() if r.plan else "-"
+        print(f"  N={n:2d}: {r.mode:13s} sched={str(r.schedule):9s} "
+              f"M={r.M:3d} t={r.minibatch_time*1e3:8.2f}ms "
+              f"speedup={r.speedup_over_dp:5.2f}x layers/stage={lps}")
+
+    print("\n-- schedule cost surface (N=8, analytic vs simulator) --")
+    r = explore(prof, homogeneous_cluster(TPU_V5E, 8), 256,
+                consider_dp=False)
+    F, B = r.plan.bottleneck_FB()
+    SR = max(max(c.comm_in, c.comm_out) for c in r.plan.stage_costs)
+    for M in (4, 8, 16, 32):
+        row = [f"M={M:3d}"]
+        for sched in ("1F1B-AS", "FBP-AS", "1F1B-SNO", "1F1B-SO"):
+            ev = SCHEDULES[sched](M, 8, F, B, SR, 1.0, 1.0)
+            sim = simulate(sched, M, 8, F, B, SR)
+            row.append(f"{sched}:{ev.minibatch_time*1e3:7.2f}ms"
+                       f"(sim {sim.makespan*1e3:7.2f})")
+        print("  " + "  ".join(row))
+
+    print("\n-- tight-memory fine-tuning (4 GiB HBM per chip) --")
+    tight = dataclasses.replace(TPU_V5E, memory_capacity=4 * 1024**3)
+    r = explore(prof, homogeneous_cluster(tight, 8), 256, consider_dp=False)
+    print(f"  feasible={r.feasible} sched={r.schedule} M={r.M} "
+          f"layers/stage={r.plan.layers_per_stage() if r.plan else '-'}")
+    print(f"  per-stage memory (GiB): "
+          f"{[round(m/1024**3, 2) for m in r.per_stage_memory]}")
+
+
+if __name__ == "__main__":
+    main()

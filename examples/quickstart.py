@@ -1,0 +1,53 @@
+"""Quickstart: BaPipe's automatic exploration in 30 seconds (CPU-only).
+
+Profiles VGG-16 / ResNet-50 / GNMT (the paper's models) and one assigned
+transformer, then runs the full BaPipe flow — balanced partition,
+communication coarse-graining, memory fine-tuning, schedule selection —
+on a GPU cluster and an FPGA cluster.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core.explorer import explore
+from repro.core.hardware import (V100, VCU118, VCU129, TPU_V5E,
+                                 heterogeneous_cluster, homogeneous_cluster)
+from repro.core.profiler import (profile_arch, profile_gnmt,
+                                 profile_resnet50, profile_vgg16)
+
+
+def show(title, prof, cluster, minibatch):
+    r = explore(prof, cluster, minibatch)
+    print(f"\n=== {title} ===")
+    print(f"  chosen mode : {r.mode}")
+    if r.mode == "pipeline":
+        print(f"  schedule    : {r.schedule}  (micro-batches M={r.M})")
+        print(f"  partition   : {r.plan.layers_per_stage()} layers/stage")
+        print(f"  bottleneck  : {r.plan.bottleneck*1e6:.0f} us/micro-batch")
+    print(f"  mini-batch  : {r.minibatch_time*1e3:.2f} ms "
+          f"(DP baseline {r.dp_time*1e3:.2f} ms -> "
+          f"{r.speedup_over_dp:.2f}x)")
+
+
+def main():
+    show("VGG-16, 4x V100 (paper Table 3)",
+         profile_vgg16(), homogeneous_cluster(V100, 4), 128)
+    show("ResNet-50, 8x V100 (paper: explorer must answer 'use DP')",
+         profile_resnet50(), homogeneous_cluster(V100, 8), 128)
+    show("GNMT-8, 4x V100",
+         profile_gnmt(8), homogeneous_cluster(V100, 4), 256)
+    show("ResNet-50, heterogeneous FPGA cluster (paper Table 6)",
+         profile_resnet50(),
+         heterogeneous_cluster([VCU129, VCU129, VCU118, VCU118]), 128)
+    show("llama3.2-1b @ seq 4096, 16x TPU v5e chips",
+         profile_arch(get_config("llama3.2-1b"), seq=4096),
+         homogeneous_cluster(TPU_V5E, 16), 256)
+    show("deepseek-v2-lite (MoE), 16x TPU v5e chips",
+         profile_arch(get_config("deepseek-v2-lite-16b"), seq=4096),
+         homogeneous_cluster(TPU_V5E, 16), 256)
+
+
+if __name__ == "__main__":
+    main()

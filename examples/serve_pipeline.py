@@ -1,0 +1,26 @@
+"""Pipelined batched serving on CPU (8 virtual devices).
+
+Prefill a batch of prompts through the stage-sharded pipeline, then greedy-
+decode with the per-stage KV cache (micro-batches keep every stage busy).
+
+Run:  PYTHONPATH=src python examples/serve_pipeline.py [arch]
+Try ``mamba2-2.7b`` for the O(1)-state SSM decode path.
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b"
+    tensor = "1" if arch in ("mamba2-2.7b", "hymba-1.5b") else "2"
+    data = "2" if tensor == "2" else "4"
+    serve_main([
+        "--arch", arch, "--reduced",
+        "--data", data, "--stages", "2", "--tensor", tensor,
+        "--microbatches", "2",
+        "--batch", "8", "--prompt-len", "32", "--gen", "16",
+    ])

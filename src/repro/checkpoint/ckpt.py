@@ -1,0 +1,67 @@
+"""Checkpointing: pytree <-> npz (+ msgpack metadata), sharding-aware.
+
+Arrays are gathered to host (fully replicated view) before writing; restore
+re-places each leaf with the provided sharding tree when given.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+import jax
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype.kind == "V":          # bfloat16 has no numpy equivalent
+            a = a.astype(np.float32)
+        arrays[k] = a
+    np.savez(path + ".npz", **arrays)
+    meta = dict(step=step, keys=sorted(arrays), dtypes=dtypes)
+    with open(path + ".meta", "wb") as f:
+        f.write(msgpack.packb(meta))
+
+
+def restore_checkpoint(path: str, like: Any,
+                       shardings: Optional[Any] = None) -> Any:
+    data = np.load(path + ".npz")
+    flat_like = _flatten(like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k], f"{prefix}{k}/") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        key = prefix[:-1]
+        arr = jax.numpy.asarray(data[key]).astype(flat_like[key].dtype)
+        sh = flat_sh.get(key)
+        return jax.device_put(arr, sh) if sh is not None else arr
+
+    return rebuild(like)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(path + ".meta", "rb") as f:
+        return msgpack.unpackb(f.read())["step"]

@@ -1,0 +1,34 @@
+"""Config registry: ``get_config(arch_id)`` -> ArchConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES,
+                                LONG_CONTEXT_OK)
+
+_ARCHS = (
+    "minicpm3_4b", "mamba2_2p7b", "hymba_1p5b", "gemma3_1b", "llama3p2_1b",
+    "whisper_base", "qwen2_vl_7b", "qwen3_1p7b", "deepseek_v3_671b",
+    "deepseek_v2_lite_16b",
+)
+
+_BY_ID: dict[str, ArchConfig] = {}
+
+
+def _load():
+    if _BY_ID:
+        return
+    for mod_name in _ARCHS:
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        cfg: ArchConfig = mod.CONFIG
+        _BY_ID[cfg.arch_id] = cfg
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    _load()
+    return _BY_ID[arch_id]
+
+
+def all_arch_ids() -> list[str]:
+    _load()
+    return sorted(_BY_ID)

@@ -1,0 +1,21 @@
+"""DeepSeek-V2-Lite-16B [arXiv:2405.04434] — MoE + MLA.
+
+27L d_model=2048 16H d_ff(expert)=1408 vocab=102400.
+MoE: 2 shared + 64 routed, top-6 (V2-Lite model card; the assignment
+line's "160 routed" belongs to full V2 — see DESIGN.md §5).
+MLA: kv_lora=512, no q compression, qk_nope=128, qk_rope=64, v=128.
+"""
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-v2-lite-16b", family="moe", source="arXiv:2405.04434",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=102400, head_dim=128,
+    attn_kind="mla",
+    mla=MLAConfig(q_lora_rank=0, kv_lora_rank=512, qk_nope_dim=128,
+                  qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_routed=64, n_shared=2, top_k=6, d_ff_expert=1408,
+                  first_k_dense=0),
+    rope_theta=10_000.0, tie_embeddings=False,
+    stages=4, tensor=4,   # 7 layers/stage (1 pad), 16 experts/device
+)

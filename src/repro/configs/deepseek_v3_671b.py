@@ -1,0 +1,25 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437] — MoE + MLA (+ MTP).
+
+61L d_model=7168 128H d_ff(expert)=2048 vocab=129280.
+MoE: 1 shared + 256 routed, top-8.  MLA: q_lora=1536, kv_lora=512,
+qk_nope=128, qk_rope=64, v=128.
+
+Deviation note (DESIGN.md §5): the HF model keeps the first 3 layers as
+wide dense FFN; the assignment specifies d_ff=2048 uniformly, so the
+pipeline config uses first_k_dense=0 (all-MoE trunk).  MTP is available as
+an optional extra head in the training driver.
+"""
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-v3-671b", family="moe", source="arXiv:2412.19437",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, d_ff=2048,
+    vocab=129280, head_dim=128,
+    attn_kind="mla",
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                  qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_routed=256, n_shared=1, top_k=8, d_ff_expert=2048,
+                  first_k_dense=0, ep_data=True),
+    rope_theta=10_000.0, mtp=True, tie_embeddings=False,
+    stages=8, tensor=2, fsdp=True,   # experts 256/(16 data x 2 tensor)=8 per chip
+)

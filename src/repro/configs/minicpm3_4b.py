@@ -1,0 +1,17 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B] — dense, MLA attention.
+
+62L d_model=2560 40H (kv=40) d_ff=6400 vocab=73448.  MLA dims from the
+model card: q_lora=768, kv_lora=256, qk_nope=64, qk_rope=32, v=64.
+"""
+from repro.configs.base import ArchConfig, MLAConfig
+
+CONFIG = ArchConfig(
+    arch_id="minicpm3-4b", family="dense", source="hf:openbmb/MiniCPM3-4B",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, d_ff=6400,
+    vocab=73448, head_dim=64,
+    attn_kind="mla",
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64,
+                  qk_rope_dim=32, v_head_dim=64),
+    rope_theta=10_000.0,
+    stages=16, tensor=1,
+)

@@ -1,0 +1,19 @@
+"""Qwen2-VL-7B [arXiv:2409.12191] — VLM language backbone with M-RoPE.
+
+28L d_model=3584 28H (kv=4) d_ff=18944 vocab=152064.  The ViT vision
+encoder + projector is a STUB: input_specs() provides interleaved
+text/patch embeddings plus the 3-axis (t,h,w) M-RoPE position ids.
+head_dim=128 -> M-RoPE sections (16,24,24) over the 64 half-dims.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen2-vl-7b", family="vlm", source="arXiv:2409.12191",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab=152064, head_dim=128,
+    attn_kind="gqa",
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    frontend="vision", tie_embeddings=False,
+    stages=4, tensor=4,    # 7 layers/stage
+)

@@ -1,0 +1,93 @@
+"""Auto-planning: BaPipe's explorer drives the runtime configuration.
+
+Closes the loop the paper describes in Fig. 3: profile the architecture,
+explore (stage x tensor) factorisations of the mesh model axis and
+micro-batch counts with the schedule cost models, and emit the runtime
+``PipelineConfig`` + stage plan that the train/serve launchers consume
+(``--auto-plan``).
+
+A stage backed by T tensor-parallel chips is modelled as one BaPipe
+"accelerator" with T x compute and T x HBM bandwidth but per-link ICI
+bandwidth (tensor-parallel psums are accounted as an activation-size
+communication term on top of the boundary transfer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.explorer import explore
+from repro.core.hardware import DeviceSpec, TPU_V5E, homogeneous_cluster
+from repro.core.profiler import profile_arch
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoPlan:
+    stages: int
+    tensor: int
+    n_microbatches: int
+    schedule: str
+    predicted_step_time: float
+    predicted_speedup_over_dp: float
+
+    def apply(self, cfg: ArchConfig) -> ArchConfig:
+        return dataclasses.replace(cfg, stages=self.stages,
+                                   tensor=self.tensor)
+
+
+def _stage_device(base: DeviceSpec, tensor: int) -> DeviceSpec:
+    return dataclasses.replace(
+        base,
+        name=f"{base.name}x{tensor}",
+        peak_flops=base.peak_flops * tensor,
+        hbm_bandwidth=base.hbm_bandwidth * tensor,
+        memory_capacity=base.memory_capacity * tensor)
+
+
+def _valid_factorisations(cfg: ArchConfig, model_axis: int):
+    t = 1
+    while t <= model_axis:
+        s = model_axis // t
+        if model_axis % t == 0 and s <= cfg.n_layers:
+            # tensor must divide the sharded dims (heads may replicate kv)
+            heads_ok = cfg.n_heads % t == 0 or t == 1
+            ssm_ok = cfg.ssm is None or t == 1
+            ff_ok = (cfg.d_ff % t == 0) if cfg.d_ff else True
+            if heads_ok and ssm_ok and ff_ok:
+                yield s, t
+        t *= 2
+
+
+def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
+              model_axis: int = 16, data_axis: int = 16,
+              device: DeviceSpec = TPU_V5E,
+              max_microbatches: Optional[int] = None) -> AutoPlan:
+    """Pick (stages, tensor, M, schedule) minimising the predicted
+    mini-batch time subject to per-chip memory."""
+    prof = profile_arch(cfg, seq=seq_len)
+    # per-stage workload unit = tokens per data shard
+    local_batch_tokens = max(1, global_batch // data_axis) * seq_len
+    best: Optional[AutoPlan] = None
+    for s, t in _valid_factorisations(cfg, model_axis):
+        dev = _stage_device(device, t)
+        cluster = homogeneous_cluster(dev, s)
+        b_loc = max(1, global_batch // data_axis)
+        ms = [m for m in (1, 2, 4, 8, 16, 32) if m <= b_loc and b_loc % m == 0]
+        if max_microbatches:
+            ms = [m for m in ms if m <= max_microbatches] or ms[:1]
+        r = explore(prof, cluster, local_batch_tokens,
+                    candidate_Ms=[m for m in ms], consider_dp=False)
+        if r.plan is None:
+            continue
+        cand = AutoPlan(stages=s, tensor=t, n_microbatches=max(1, r.M),
+                        schedule=r.schedule or "1F1B-AS",
+                        predicted_step_time=r.minibatch_time,
+                        predicted_speedup_over_dp=r.speedup_over_dp)
+        if best is None or cand.predicted_step_time < best.predicted_step_time:
+            best = cand
+    if best is None:
+        raise ValueError(f"no feasible (stage, tensor) factorisation for "
+                         f"{cfg.arch_id} on model_axis={model_axis}")
+    return best

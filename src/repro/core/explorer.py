@@ -1,0 +1,193 @@
+"""BaPipe automatic exploration (paper Fig. 3).
+
+Profile -> balanced partition -> schedule selection, with data parallelism
+evaluated as a first-class alternative (the paper's ResNet-50 result: the
+explorer must be able to answer "don't pipeline, use DP").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.core.hardware import ClusterSpec
+from repro.core.partition import (PartitionPlan, comm_bound, coarse_partition,
+                                  dp_partition, intra_layer_refine,
+                                  memory_fine_tune, stage_memory)
+from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
+from repro.core.schedules import SCHEDULES, ScheduleEval, schedules_for
+
+FEAT_MULT = {"1F1B-AS": 1, "FBP-AS": 2, "1F1B-SNO": 1, "1F1B-SO": 2}
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    mode: str                       # "pipeline" | "data_parallel"
+    schedule: Optional[str]
+    M: int                          # micro-batches per mini-batch
+    microbatch: int                 # units per micro-batch
+    plan: Optional[PartitionPlan]
+    minibatch_time: float
+    per_stage_memory: list[float]
+    feasible: bool
+    sched_eval: Optional[ScheduleEval] = None
+    dp_time: float = float("inf")
+    dp_feasible: bool = False
+
+    @property
+    def speedup_over_dp(self) -> float:
+        return self.dp_time / self.minibatch_time if self.minibatch_time else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel baseline model (synchronous ring all-reduce).
+# ---------------------------------------------------------------------------
+
+def dp_time_and_memory(prof: NetworkProfile, cluster: ClusterSpec,
+                       minibatch: int) -> tuple[float, float, bool]:
+    N = cluster.n
+    per_dev = max(1, minibatch // N)
+    slowest = 0.0
+    for dev in cluster.devices:
+        t = sum(fwd_time(l, dev, per_dev) + bwd_time(l, dev, per_dev)
+                for l in prof.layers)
+        if prof.embed is not None:
+            t += fwd_time(prof.embed, dev, per_dev) + bwd_time(prof.embed, dev, per_dev)
+        if prof.head is not None:
+            t += fwd_time(prof.head, dev, per_dev) + bwd_time(prof.head, dev, per_dev)
+        slowest = max(slowest, t)
+    wbytes = prof.total_bytes_weights()
+    if prof.embed is not None:
+        wbytes += prof.embed.bytes_weights
+    if prof.head is not None:
+        wbytes += prof.head.bytes_weights
+    link = min(d.link_bandwidth for d in cluster.devices)
+    allreduce = 2.0 * (N - 1) / N * wbytes / link if N > 1 else 0.0
+    t_total = slowest + allreduce
+    act = sum(l.bytes_act_out for l in prof.layers) * per_dev
+    mem = 2.0 * wbytes + act
+    feasible = all(mem <= d.memory_capacity for d in cluster.devices)
+    return t_total, mem, feasible
+
+
+# ---------------------------------------------------------------------------
+# The exploration loop.
+# ---------------------------------------------------------------------------
+
+def _candidate_Ms(minibatch: int, n_stages: int) -> list[int]:
+    ms = []
+    m = 1
+    while m <= minibatch:
+        ms.append(m)
+        m *= 2
+    # always consider M = 2N and 4N (enough to hide the bubble)
+    for extra in (2 * n_stages, 4 * n_stages):
+        if extra <= minibatch and extra not in ms:
+            ms.append(extra)
+    return sorted(ms)
+
+
+def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
+            candidate_Ms: Optional[Sequence[int]] = None,
+            consider_dp: bool = True) -> ExplorationResult:
+    """Run the full BaPipe exploration and return the chosen plan."""
+    N = cluster.n
+    dp_t, dp_mem, dp_ok = dp_time_and_memory(prof, cluster, minibatch)
+    async_ok = all(d.async_capable for d in cluster.devices)
+    scheds = schedules_for(async_ok)
+    best: Optional[ExplorationResult] = None
+    Ms = list(candidate_Ms) if candidate_Ms else _candidate_Ms(minibatch, N)
+    for sched in scheds:
+        feat_mult = FEAT_MULT[sched]
+        # async schedules fully overlap comm; sync-overlap hides comm too,
+        # sync-no-overlap pays it on the critical path.
+        overlap = sched != "1F1B-SNO"
+        for M in Ms:
+            if M < 1 or minibatch // M < 1:
+                continue
+            mb = minibatch // M
+            plan = dp_partition(prof, cluster, mb, overlap=overlap)
+            if comm_bound(plan):
+                plan = coarse_partition(prof, cluster, mb, overlap)
+            plan, mem_ok = memory_fine_tune(prof, cluster, plan, mb,
+                                            feat_mult, M)
+            if not comm_bound(plan):
+                # intra-layer (fractional) balancing LAST — memory
+                # fine-tuning re-finalises integer bounds and would
+                # discard the fractional shifts
+                plan = intra_layer_refine(prof, cluster, plan, mb)
+            F, B = plan.bottleneck_FB()
+            SR = max((max(c.comm_in, c.comm_out) for c in plan.stage_costs),
+                     default=0.0)
+            a = plan.max_boundary_act()
+            w = max(c.weight_bytes for c in plan.stage_costs)
+            ev = SCHEDULES[sched](M, N, F, B, SR, a, w)
+            mem = stage_memory(plan, feat_mult, M)
+            t = ev.minibatch_time
+            if not mem_ok:
+                # paper §4.3: weights kept on-chip "as much as possible";
+                # the remainder streams from the spill tier every micro-batch
+                spill_bw = min(d.spill_bandwidth for d in cluster.devices)
+                if spill_bw <= 0:
+                    continue
+                spill = max(m - d.memory_capacity
+                            for m, d in zip(mem, cluster.devices))
+                t += M * spill / spill_bw
+            cand = ExplorationResult(
+                mode="pipeline", schedule=sched, M=M, microbatch=mb,
+                plan=plan, minibatch_time=t,
+                per_stage_memory=mem, feasible=True, sched_eval=ev,
+                dp_time=dp_t, dp_feasible=dp_ok)
+            if best is None or cand.minibatch_time < best.minibatch_time \
+                    * 0.999:
+                best = cand
+            elif (cand.minibatch_time < best.minibatch_time * 1.001
+                  and best.sched_eval is not None
+                  and ev.bandwidth_demand < best.sched_eval.bandwidth_demand):
+                # tie-break on demanded link bandwidth (paper §3.2.1: FPGAs
+                # pick FBP-AS when times tie — gentler 2a/(F+B) demand)
+                best = cand
+    if best is None:
+        best = ExplorationResult(
+            mode="pipeline", schedule=scheds[0], M=1, microbatch=minibatch,
+            plan=None, minibatch_time=float("inf"), per_stage_memory=[],
+            feasible=False, dp_time=dp_t, dp_feasible=dp_ok)
+    if consider_dp and dp_ok and dp_t < best.minibatch_time:
+        return ExplorationResult(
+            mode="data_parallel", schedule=None, M=1, microbatch=minibatch,
+            plan=None, minibatch_time=dp_t, per_stage_memory=[dp_mem] * N,
+            feasible=True, dp_time=dp_t, dp_feasible=True)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Baseline frameworks for Table 3 / Table 4 (analytic counterparts).
+# ---------------------------------------------------------------------------
+
+def gpipe_time(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
+               M: int) -> tuple[float, list[float]]:
+    """GPipe: all-FP then all-BP; stores ALL M micro-batch activations
+    (no recompute, as in the paper's comparison); uses BaPipe's partition."""
+    mb = max(1, minibatch // M)
+    plan = dp_partition(prof, cluster, mb, overlap=False)
+    F, B = plan.balanced_F(), plan.balanced_B()
+    SR = max((max(c.comm_in, c.comm_out) for c in plan.stage_costs), default=0.0)
+    N = cluster.n
+    t = (M + N - 1) * (F + B) + (N + M - 2) * 2 * SR
+    mem = [2.0 * c.weight_bytes + M * c.act_out_bytes for c in plan.stage_costs]
+    return t, mem
+
+
+def pipedream_time(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int
+                   ) -> tuple[float, list[float]]:
+    """PipeDream: inter-batch 1F1B, no bubble in steady state, but weight
+    stashing keeps up to N weight versions per stage."""
+    mb = minibatch                 # PipeDream pipelines whole minibatches
+    plan = dp_partition(prof, cluster, mb, overlap=False)
+    F, B = plan.balanced_F(), plan.balanced_B()
+    SR = max((max(c.comm_in, c.comm_out) for c in plan.stage_costs), default=0.0)
+    N = cluster.n
+    t = (F + B) + 2 * SR           # steady-state per mini-batch
+    mem = [(N - i) * 2.0 * c.weight_bytes + (N - i) * c.act_out_bytes
+           for i, c in enumerate(plan.stage_costs)]
+    return t, mem

@@ -1,0 +1,119 @@
+"""Hardware descriptions for BaPipe's explorer.
+
+BaPipe consumes per-accelerator *hardware constraints*: compute power,
+memory bandwidth, memory capacity, and link (communication) bandwidth
+(paper Fig. 3).  Clusters may be heterogeneous — every accelerator in the
+daisy chain can be a different device.
+
+Units: FLOP/s, bytes/s, bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+GiB = 1024 ** 3
+GB = 1e9
+TFLOPS = 1e12
+GBps = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """One accelerator."""
+
+    name: str
+    peak_flops: float          # dense matmul peak (training precision)
+    hbm_bandwidth: float       # high-bandwidth (device) memory, bytes/s
+    memory_capacity: float     # high-bandwidth memory capacity, bytes
+    link_bandwidth: float      # p2p link to the pipeline neighbour, bytes/s
+    # FPGA-ish knob: can this device compute FP and BP concurrently
+    # (spatial dataflow) and stream outputs while computing?
+    async_capable: bool = False
+    # Fraction of peak actually achievable on DNN layers (efficiency).
+    efficiency: float = 0.5
+    # Second-tier memory for weight spill (FPGA DDR).  0 => hard limit.
+    spill_bandwidth: float = 0.0
+
+    @property
+    def effective_flops(self) -> float:
+        return self.peak_flops * self.efficiency
+
+
+# ---------------------------------------------------------------------------
+# Catalogue: the paper's devices + our TPU target.
+# ---------------------------------------------------------------------------
+
+# TPU v5e — the target of this reproduction (per-chip).
+TPU_V5E = DeviceSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,          # bf16
+    hbm_bandwidth=819 * GBps,
+    memory_capacity=16 * GiB,
+    link_bandwidth=50 * GBps,   # per ICI link
+    async_capable=True,         # XLA async collectives overlap with compute
+    efficiency=0.55,
+)
+
+# NVIDIA V100 16GB (paper's GPU cluster), PCIe Gen3 x16 interconnect.
+V100 = DeviceSpec(
+    name="v100",
+    peak_flops=125e12,          # tensor-core fp16
+    hbm_bandwidth=900 * GBps,
+    memory_capacity=16 * GiB,
+    link_bandwidth=13 * GBps,   # PCIe gen3 x16 effective
+    async_capable=False,        # paper: GPUs compute/communicate synchronously
+    efficiency=0.35,
+)
+
+def _fpga(name: str, dsp: int, onchip_mb: float, ddr_gbps: float,
+          transceiver_gbps: float) -> DeviceSpec:
+    # Paper Table 5.  DSP slice @ ~500 MHz, 2 MACs/cycle (fp16 packed).
+    peak = dsp * 500e6 * 2 * 2      # 2 ops per MAC
+    # On-chip BRAM/URAM aggregate bandwidth: thousands of 72-bit ports at
+    # 500 MHz — effectively tens of TB/s; weights resident on-chip stream
+    # for free (BaPipe's §4.3 premise).  DDR (40 GB/s) is the *DP* tier.
+    onchip_bw = (onchip_mb * 1e6 / 8) / 36e3 * 500e6    # ~0.6 TB/s per MB
+    return DeviceSpec(
+        name=name,
+        peak_flops=peak,
+        hbm_bandwidth=onchip_bw,
+        memory_capacity=onchip_mb * 1e6 / 8,              # Mb -> bytes
+        link_bandwidth=transceiver_gbps * GBps,
+        async_capable=True,          # FPGA: streaming dataflow (paper §3.2)
+        efficiency=0.8,
+        spill_bandwidth=ddr_gbps * GBps,   # weights beyond on-chip -> DDR
+    )
+
+VCU118 = _fpga("vcu118", dsp=6840, onchip_mb=345.9, ddr_gbps=40,
+               transceiver_gbps=25)
+VCU129 = _fpga("vcu129", dsp=12288, onchip_mb=454.9, ddr_gbps=40,
+               transceiver_gbps=25)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """A 1-D daisy chain of (possibly heterogeneous) accelerators."""
+
+    devices: tuple[DeviceSpec, ...]
+
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+    @property
+    def homogeneous(self) -> bool:
+        return len({d.name for d in self.devices}) == 1
+
+    def link_bandwidth(self, i: int) -> float:
+        """Bandwidth of the link between stage i and stage i+1 (min of ends)."""
+        return min(self.devices[i].link_bandwidth,
+                   self.devices[i + 1].link_bandwidth)
+
+
+def homogeneous_cluster(dev: DeviceSpec, n: int) -> ClusterSpec:
+    return ClusterSpec(devices=(dev,) * n)
+
+
+def heterogeneous_cluster(devs: Sequence[DeviceSpec]) -> ClusterSpec:
+    return ClusterSpec(devices=tuple(devs))

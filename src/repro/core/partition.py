@@ -1,0 +1,381 @@
+"""BaPipe balanced-partition exploration (paper §3.3).
+
+Pipeline of refinements:
+
+1. **Inter-layer partition** — Eq.(1) harmonic initialisation followed by
+   iterative load balancing.  We implement the iteration's fixed point
+   exactly: an O(L²·N) dynamic program over contiguous layer ranges that
+   minimises the bottleneck stage time on a (possibly heterogeneous) device
+   chain.
+2. **Coarse-grained partition on communication** — when a stage's boundary
+   transfer time exceeds its compute time, restrict cut points to layer
+   boundaries whose activation size is ≤ a_th (merge the rest into
+   super-layers) and re-run the DP.
+3. **Intra-layer partition** — fractional split of the boundary layer
+   between adjacent stages (FPDeep-style); only applied when communication
+   is not the bottleneck.  Realised on TPU as tensor-parallel sharding.
+4. **Memory fine-tuning** — shift boundary layers away from stages whose
+   schedule-dependent memory requirement exceeds device capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.hardware import ClusterSpec
+from repro.core.profiler import (LayerProfile, NetworkProfile, bwd_time,
+                                 comm_time, fwd_time)
+
+
+@dataclasses.dataclass
+class StageCost:
+    fwd: float
+    bwd: float
+    comm_in: float
+    comm_out: float
+    weight_bytes: float
+    act_out_bytes: float     # per micro-batch boundary activation
+
+    def compute(self) -> float:
+        return self.fwd + self.bwd
+
+    def total(self, overlap: bool) -> float:
+        c = max(self.comm_in, self.comm_out)
+        return max(self.compute(), 2 * c) if overlap else self.compute() + 2 * c
+
+
+@dataclasses.dataclass
+class PartitionPlan:
+    bounds: tuple[tuple[int, int], ...]     # per-stage [start, end) layer range
+    stage_costs: tuple[StageCost, ...]
+    bottleneck: float                        # max per-stage total time
+    overlap: bool
+    frac_shift: tuple[float, ...] = ()       # intra-layer fractional refinement
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.bounds)
+
+    def layers_per_stage(self) -> list[int]:
+        return [e - s for s, e in self.bounds]
+
+    def balanced_F(self) -> float:
+        return max(c.fwd for c in self.stage_costs)
+
+    def balanced_B(self) -> float:
+        return max(c.bwd for c in self.stage_costs)
+
+    def bottleneck_FB(self) -> tuple[float, float]:
+        """(fwd, bwd) of the bottleneck-compute stage (the pair the
+        schedule formulas should see — independent maxima overcount)."""
+        c = max(self.stage_costs, key=lambda c: c.compute())
+        return c.fwd, c.bwd
+
+    def max_boundary_act(self) -> float:
+        return max((c.act_out_bytes for c in self.stage_costs[:-1]), default=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Cost of a contiguous layer range on a given device.
+# ---------------------------------------------------------------------------
+
+def _range_cost(prof: NetworkProfile, cluster: ClusterSpec, n: int,
+                s: int, e: int, mb: int, include_embed_head: bool) -> StageCost:
+    dev = cluster.devices[n]
+    fwd = sum(fwd_time(prof.layers[k], dev, mb) for k in range(s, e))
+    bwd = sum(bwd_time(prof.layers[k], dev, mb) for k in range(s, e))
+    wbytes = sum(prof.layers[k].bytes_weights for k in range(s, e))
+    if include_embed_head:
+        if n == 0 and prof.embed is not None:
+            fwd += fwd_time(prof.embed, dev, mb)
+            bwd += bwd_time(prof.embed, dev, mb)
+            wbytes += prof.embed.bytes_weights
+        if n == cluster.n - 1 and prof.head is not None:
+            fwd += fwd_time(prof.head, dev, mb)
+            bwd += bwd_time(prof.head, dev, mb)
+            wbytes += prof.head.bytes_weights
+    act_in = prof.layers[s - 1].bytes_act_out * mb if s > 0 else 0.0
+    act_out = prof.layers[e - 1].bytes_act_out * mb if e < prof.n_layers else 0.0
+    ci = comm_time(act_in, cluster.link_bandwidth(n - 1)) if n > 0 else 0.0
+    co = comm_time(act_out, cluster.link_bandwidth(n)) if n < cluster.n - 1 else 0.0
+    return StageCost(fwd=fwd, bwd=bwd, comm_in=ci, comm_out=co,
+                     weight_bytes=wbytes,
+                     act_out_bytes=prof.layers[e - 1].bytes_act_out * mb
+                     if e - 1 < prof.n_layers else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq.(1) initialisation.
+# ---------------------------------------------------------------------------
+
+def eq1_targets(prof: NetworkProfile, cluster: ClusterSpec, mb: int) -> list[float]:
+    """Per-stage target times from T = 1 / sum(1/T_n) (paper Eq. 1)."""
+    T_n = []
+    for dev in cluster.devices:
+        T_n.append(sum(fwd_time(l, dev, mb) + bwd_time(l, dev, mb)
+                       for l in prof.layers))
+    T = 1.0 / sum(1.0 / t for t in T_n)
+    return [T] * cluster.n
+
+
+def eq1_partition(prof: NetworkProfile, cluster: ClusterSpec, mb: int,
+                  overlap: bool = True) -> PartitionPlan:
+    """Greedy sweep to the Eq.(1) harmonic target (the paper's init step)."""
+    T_n = [sum(fwd_time(l, d, mb) + bwd_time(l, d, mb) for l in prof.layers)
+           for d in cluster.devices]
+    T = 1.0 / sum(1.0 / t for t in T_n)
+    bounds, s = [], 0
+    L, N = prof.n_layers, cluster.n
+    for n in range(N):
+        if n == N - 1:
+            e = L
+        else:
+            acc, e = 0.0, s
+            dev = cluster.devices[n]
+            while e < L - (N - 1 - n):        # leave >=1 layer per later stage
+                step = (fwd_time(prof.layers[e], dev, mb)
+                        + bwd_time(prof.layers[e], dev, mb))
+                if acc + step > T and e > s:
+                    break
+                acc += step
+                e += 1
+            e = max(e, s + 1)
+        bounds.append((s, e))
+        s = e
+    return _finalize(prof, cluster, tuple(bounds), mb, overlap)
+
+
+# ---------------------------------------------------------------------------
+# Exact contiguous-partition DP (the load-balancing iteration's fixed point).
+# ---------------------------------------------------------------------------
+
+def dp_partition(prof: NetworkProfile, cluster: ClusterSpec, mb: int,
+                 overlap: bool = True,
+                 allowed_cuts: Optional[set[int]] = None,
+                 include_embed_head: bool = True) -> PartitionPlan:
+    """Minimise the bottleneck stage time over contiguous partitions.
+
+    ``allowed_cuts``: set of layer indices where a stage boundary may be
+    placed (coarse-grained communication partition restricts this).
+    """
+    L, N = prof.n_layers, cluster.n
+    if N > L:
+        raise ValueError(f"more stages ({N}) than layers ({L})")
+    cuts = allowed_cuts if allowed_cuts is not None else set(range(1, L))
+    # O(1) range costs via per-device prefix sums
+    pre_f = []   # pre_f[n][i] = sum of fwd+bwd time of layers [0, i) on dev n
+    for dev in cluster.devices:
+        acc, arr = 0.0, [0.0]
+        for l in prof.layers:
+            acc += fwd_time(l, dev, mb) + bwd_time(l, dev, mb)
+            arr.append(acc)
+        pre_f.append(arr)
+
+    def rc(n: int, s: int, e: int) -> float:
+        dev = cluster.devices[n]
+        t = pre_f[n][e] - pre_f[n][s]
+        if include_embed_head:
+            if n == 0 and prof.embed is not None:
+                t += fwd_time(prof.embed, dev, mb) + bwd_time(prof.embed, dev, mb)
+            if n == N - 1 and prof.head is not None:
+                t += fwd_time(prof.head, dev, mb) + bwd_time(prof.head, dev, mb)
+        act_in = prof.layers[s - 1].bytes_act_out * mb if s > 0 else 0.0
+        act_out = prof.layers[e - 1].bytes_act_out * mb if e < L else 0.0
+        ci = comm_time(act_in, cluster.link_bandwidth(n - 1)) if n > 0 else 0.0
+        co = comm_time(act_out, cluster.link_bandwidth(n)) if n < N - 1 else 0.0
+        c = max(ci, co)
+        return max(t, 2 * c) if overlap else t + 2 * c
+
+    INF = float("inf")
+    # best[n][e] = minimal bottleneck assigning layers [0,e) to stages [0,n]
+    best = [[INF] * (L + 1) for _ in range(N)]
+    arg = [[-1] * (L + 1) for _ in range(N)]
+    for e in range(1, L + 1):
+        if e == L or e in cuts:
+            best[0][e] = rc(0, 0, e)
+    for n in range(1, N):
+        for e in range(n + 1, L + 1):
+            if e != L and e not in cuts:
+                continue
+            for s in range(n, e):
+                if s != 0 and s not in cuts:
+                    continue
+                if best[n - 1][s] == INF:
+                    continue
+                v = max(best[n - 1][s], rc(n, s, e))
+                if v < best[n][e]:
+                    best[n][e] = v
+                    arg[n][e] = s
+    if best[N - 1][L] == INF:
+        raise ValueError("no feasible partition under allowed cuts")
+    bounds, e = [], L
+    for n in range(N - 1, 0, -1):
+        s = arg[n][e]
+        bounds.append((s, e))
+        e = s
+    bounds.append((0, e))
+    bounds.reverse()
+    return _finalize(prof, cluster, tuple(bounds), mb, overlap,
+                     include_embed_head)
+
+
+def _finalize(prof: NetworkProfile, cluster: ClusterSpec,
+              bounds: tuple[tuple[int, int], ...], mb: int, overlap: bool,
+              include_embed_head: bool = True) -> PartitionPlan:
+    costs = tuple(_range_cost(prof, cluster, n, s, e, mb, include_embed_head)
+                  for n, (s, e) in enumerate(bounds))
+    bott = max(c.total(overlap) for c in costs)
+    return PartitionPlan(bounds=bounds, stage_costs=costs, bottleneck=bott,
+                         overlap=overlap)
+
+
+# ---------------------------------------------------------------------------
+# Coarse-grained partition based on communication (paper §3.3.3).
+# ---------------------------------------------------------------------------
+
+def comm_bound(plan: PartitionPlan) -> bool:
+    """Is any stage's boundary transfer longer than its compute?"""
+    return any(max(c.comm_in, c.comm_out) * 2 > c.compute()
+               for c in plan.stage_costs)
+
+
+def coarse_cuts(prof: NetworkProfile, a_th: float) -> set[int]:
+    """Cut points whose boundary activation is small enough to overlap."""
+    return {k for k in range(1, prof.n_layers)
+            if prof.layers[k - 1].bytes_act_out <= a_th}
+
+
+def coarse_partition(prof: NetworkProfile, cluster: ClusterSpec, mb: int,
+                     overlap: bool) -> PartitionPlan:
+    """Lower a_th from the max activation until comm is no longer the
+    bottleneck (or no finer threshold is feasible)."""
+    sizes = sorted({l.bytes_act_out for l in prof.layers}, reverse=True)
+    plan = dp_partition(prof, cluster, mb, overlap)
+    for a_th in sizes:
+        cuts = coarse_cuts(prof, a_th)
+        if len(cuts) + 1 < cluster.n:
+            break                              # too coarse to form N stages
+        try:
+            cand = dp_partition(prof, cluster, mb, overlap, allowed_cuts=cuts)
+        except ValueError:
+            break
+        plan = cand
+        if not comm_bound(cand):
+            return cand
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Intra-layer fractional refinement (paper §3.3.2, FPDeep-style).
+# ---------------------------------------------------------------------------
+
+def intra_layer_refine(prof: NetworkProfile, cluster: ClusterSpec,
+                       plan: PartitionPlan, mb: int) -> PartitionPlan:
+    """Fractionally shift boundary-layer work toward under-loaded
+    neighbours.  Analytic (the TPU runtime realises it as tensor-parallel
+    sharding of the boundary layer).  Only valid when comm is not the
+    bottleneck — intra-layer splits add communication.
+    """
+    if comm_bound(plan):
+        return plan
+    times = [c.compute() for c in plan.stage_costs]
+    fracs = [0.0] * plan.n_stages
+    # smoothing sweeps: move fractions of boundary layers from slower
+    # stages to faster neighbours until the bottleneck stops improving
+    # (FPDeep's fine-grained workload balancing, applied analytically).
+    for _ in range(8 * plan.n_stages):
+        before = max(times)
+        for n in range(plan.n_stages - 1):
+            s, e = plan.bounds[n]
+            s2, e2 = plan.bounds[n + 1]
+            dev_a, dev_b = cluster.devices[n], cluster.devices[n + 1]
+            if times[n] > times[n + 1] and e - s > 1:
+                lay = prof.layers[e - 1]
+                t_a = fwd_time(lay, dev_a, mb) + bwd_time(lay, dev_a, mb)
+                t_b = fwd_time(lay, dev_b, mb) + bwd_time(lay, dev_b, mb)
+                # move fraction x: times[n]-x*t_a == times[n+1]+x*t_b
+                x = (times[n] - times[n + 1]) / (t_a + t_b)
+                x = max(0.0, min(1.0, x))
+                times[n] -= x * t_a
+                times[n + 1] += x * t_b
+                fracs[n] -= x
+            elif times[n + 1] > times[n] and e2 - s2 > 1:
+                lay = prof.layers[s2]
+                t_a = fwd_time(lay, dev_a, mb) + bwd_time(lay, dev_a, mb)
+                t_b = fwd_time(lay, dev_b, mb) + bwd_time(lay, dev_b, mb)
+                x = (times[n + 1] - times[n]) / (t_a + t_b)
+                x = max(0.0, min(1.0, x))
+                times[n + 1] -= x * t_b
+                times[n] += x * t_a
+                fracs[n] += x
+        if max(times) > before - 1e-12:
+            break
+    new_bott = max(max(t, 2 * max(c.comm_in, c.comm_out))
+                   if plan.overlap else t + 2 * max(c.comm_in, c.comm_out)
+                   for t, c in zip(times, plan.stage_costs))
+    # scale each stage's (fwd, bwd) to the refined compute total so the
+    # schedule evaluator sees post-refinement bottleneck times
+    new_costs = tuple(
+        dataclasses.replace(c, fwd=c.fwd * (t / c.compute()),
+                            bwd=c.bwd * (t / c.compute()))
+        if c.compute() > 0 else c
+        for t, c in zip(times, plan.stage_costs))
+    return dataclasses.replace(plan, frac_shift=tuple(fracs),
+                               stage_costs=new_costs,
+                               bottleneck=min(plan.bottleneck, new_bott))
+
+
+# ---------------------------------------------------------------------------
+# Memory fine-tuning (paper §3.3, final step).
+# ---------------------------------------------------------------------------
+
+def stage_memory(plan: PartitionPlan, feat_mult: int, M: int) -> list[float]:
+    """Schedule-dependent per-stage memory: 2w (weights+grads) plus
+    feat_mult*(N-i+1) live micro-batch boundary activations."""
+    N = plan.n_stages
+    out = []
+    for i, c in enumerate(plan.stage_costs, start=1):
+        live = min(M, feat_mult * (N - i + 1))
+        out.append(2.0 * c.weight_bytes + live * c.act_out_bytes)
+    return out
+
+
+def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
+                     plan: PartitionPlan, mb: int, feat_mult: int,
+                     M: int, max_iters: int = 64) -> tuple[PartitionPlan, bool]:
+    """Shift boundary layers off over-capacity stages.  Returns
+    (plan, feasible)."""
+    bounds = [list(b) for b in plan.bounds]
+    N = plan.n_stages
+    for _ in range(max_iters):
+        cur = _finalize(prof, cluster, tuple(tuple(b) for b in bounds), mb,
+                        plan.overlap)
+        mem = stage_memory(cur, feat_mult, M)
+        caps = [d.memory_capacity for d in cluster.devices]
+        over = [i for i in range(N) if mem[i] > caps[i]]
+        if not over:
+            return cur, True
+        moved = False
+        for i in over:
+            s, e = bounds[i]
+            if e - s <= 1:
+                continue
+            # shift one layer to the neighbour with more headroom
+            left_head = (caps[i - 1] - mem[i - 1]) if i > 0 else -1.0
+            right_head = (caps[i + 1] - mem[i + 1]) if i < N - 1 else -1.0
+            if right_head >= left_head and i < N - 1:
+                bounds[i][1] -= 1
+                bounds[i + 1][0] -= 1
+                moved = True
+            elif i > 0:
+                bounds[i][0] += 1
+                bounds[i - 1][1] += 1
+                moved = True
+        if not moved:
+            return cur, False
+    cur = _finalize(prof, cluster, tuple(tuple(b) for b in bounds), mb,
+                    plan.overlap)
+    mem = stage_memory(cur, feat_mult, M)
+    ok = all(m <= d.memory_capacity for m, d in zip(mem, cluster.devices))
+    return cur, ok

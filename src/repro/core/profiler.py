@@ -1,0 +1,287 @@
+"""DNN profiling for BaPipe.
+
+The paper profiles every layer of the network to obtain (a) FP/BP compute
+time per accelerator type, (b) weights size, (c) output-feature size
+(paper Fig. 3, "DNN profile").  On GPU clusters it measures a 1000-minibatch
+run; for FPGA clusters it *derives* the profile analytically from the DNN
+configuration and the hardware constraints.  We take the analytic route for
+the TPU target (same approach as the paper's FPGA simulator) and expose a
+measured mode for CPU-runnable reduced models.
+
+Units: ``flops_*``  are FLOPs per *unit* (one token for sequence models, one
+sample for conv nets); ``bytes_*`` are bytes at the profile dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Sequence
+
+from repro.core.hardware import DeviceSpec
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProfile:
+    name: str
+    flops_fwd: float            # per unit
+    bytes_weights: float        # parameter bytes
+    bytes_act_out: float        # boundary activation bytes per unit
+    flops_bwd: float = 0.0      # default: 2x fwd (dL/dx and dL/dw matmuls)
+
+    def __post_init__(self):
+        if self.flops_bwd == 0.0:
+            object.__setattr__(self, "flops_bwd", 2.0 * self.flops_fwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkProfile:
+    """Per-layer profile of a network, at a fixed sequence length."""
+
+    name: str
+    layers: tuple[LayerProfile, ...]
+    unit: str                   # "token" | "sample"
+    bytes_per_param: int = 2    # bf16
+    # embed / head live outside the partitioned layer sequence but count
+    # toward stage-0 / stage-(N-1) load and memory.
+    embed: LayerProfile | None = None
+    head: LayerProfile | None = None
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def total_flops_fwd(self) -> float:
+        return sum(l.flops_fwd for l in self.layers)
+
+    def total_bytes_weights(self) -> float:
+        return sum(l.bytes_weights for l in self.layers)
+
+
+# ---------------------------------------------------------------------------
+# Analytic time model (per micro-batch of ``units`` tokens/samples).
+# ---------------------------------------------------------------------------
+
+def fwd_time(layer: LayerProfile, dev: DeviceSpec, units: int) -> float:
+    """Roofline per layer: compute-bound or weight-streaming-bound."""
+    compute = units * layer.flops_fwd / dev.effective_flops
+    memory = layer.bytes_weights / dev.hbm_bandwidth
+    return max(compute, memory)
+
+
+def bwd_time(layer: LayerProfile, dev: DeviceSpec, units: int) -> float:
+    compute = units * layer.flops_bwd / dev.effective_flops
+    memory = 2.0 * layer.bytes_weights / dev.hbm_bandwidth   # read W, write dW
+    return max(compute, memory)
+
+
+def comm_time(act_bytes: float, link_bandwidth: float) -> float:
+    return act_bytes / link_bandwidth
+
+
+# ---------------------------------------------------------------------------
+# Transformer-family analytic profiles (the 10 assigned architectures).
+# ---------------------------------------------------------------------------
+
+def _attn_flops(cfg: ArchConfig, seq: int, layer_idx: int) -> tuple[float, float]:
+    """(flops_per_token, weight_params) for the attention sub-block."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    # effective attended length (causal average; window caps it)
+    span = seq / 2
+    if cfg.window > 0 and not cfg.is_global_layer(layer_idx):
+        span = min(span, cfg.window)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        qk_dim = m.qk_nope_dim + m.qk_rope_dim
+        w = 0.0
+        if m.q_lora_rank:
+            w += d * m.q_lora_rank + m.q_lora_rank * nh * qk_dim
+        else:
+            w += d * nh * qk_dim
+        w += d * (m.kv_lora_rank + m.qk_rope_dim)
+        w += m.kv_lora_rank * nh * (m.qk_nope_dim + m.v_head_dim)
+        w += nh * m.v_head_dim * d
+        proj_flops = 2.0 * w
+        attn_flops = 2.0 * span * nh * (qk_dim + m.v_head_dim)
+        return proj_flops + attn_flops, w
+    else:
+        w = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+        proj_flops = 2.0 * w
+        attn_flops = 2.0 * span * nh * hd * 2     # QK^T and PV
+        return proj_flops + attn_flops, w
+
+
+def _ffn_flops(cfg: ArchConfig, layer_idx: int) -> tuple[float, float]:
+    d = cfg.d_model
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense:
+        m = cfg.moe
+        w_active = (m.n_shared + m.top_k) * 3 * d * m.d_ff_expert + d * m.n_routed
+        w_total = (m.n_shared + m.n_routed) * 3 * d * m.d_ff_expert + d * m.n_routed
+        return 2.0 * w_active, w_total
+    w = 3 * d * cfg.d_ff
+    return 2.0 * w, w
+
+
+def _ssm_flops(cfg: ArchConfig) -> tuple[float, float]:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner = s.expand * d
+    nh = s.n_heads(d)
+    w = (d * (2 * d_inner + 2 * s.d_state + nh)   # in_proj (x,z,B,C,dt)
+         + s.d_conv * (d_inner + 2 * s.d_state)   # conv1d
+         + d_inner * d)                            # out_proj
+    proj = 2.0 * w
+    scan = 6.0 * d_inner * s.d_state               # state update + readout
+    return proj + scan, w
+
+
+def profile_arch(cfg: ArchConfig, seq: int = 4096) -> NetworkProfile:
+    """Analytic per-layer profile at sequence length ``seq``."""
+    bpp = 2
+    d = cfg.d_model
+    act_out = float(d * bpp)
+    layers = []
+    for i in range(cfg.n_layers):
+        f, w = 0.0, 0.0
+        is_enc = i < cfg.n_enc_layers
+        if cfg.family == "ssm":
+            fs, ws = _ssm_flops(cfg)
+            f, w = f + fs, w + ws
+        else:
+            if cfg.attn_kind != "none":
+                fa, wa = _attn_flops(cfg, seq, i)
+                f, w = f + fa, w + wa
+            if cfg.family == "hybrid":
+                fs, ws = _ssm_flops(cfg)
+                f, w = f + fs, w + ws
+            if cfg.n_enc_layers and not is_enc:
+                # decoder cross-attention over encoder frames
+                fa, wa = _attn_flops(cfg, seq, i)
+                f, w = f + fa, w + wa
+        ff, wf = _ffn_flops(cfg, i)
+        f, w = f + ff, w + wf
+        # norms etc: negligible flops, tiny weights
+        w += 2 * d
+        layers.append(LayerProfile(
+            name=f"{cfg.arch_id}.L{i}", flops_fwd=f,
+            bytes_weights=w * bpp, bytes_act_out=act_out))
+    embed = LayerProfile(name="embed", flops_fwd=0.0,
+                         bytes_weights=float(cfg.vocab * d * bpp),
+                         bytes_act_out=act_out)
+    head = LayerProfile(name="lm_head", flops_fwd=2.0 * d * cfg.vocab,
+                        bytes_weights=0.0 if cfg.tie_embeddings
+                        else float(cfg.vocab * d * bpp),
+                        bytes_act_out=float(cfg.vocab * bpp))
+    return NetworkProfile(name=cfg.arch_id, layers=tuple(layers),
+                          unit="token", bytes_per_param=bpp,
+                          embed=embed, head=head)
+
+
+# ---------------------------------------------------------------------------
+# The paper's own models (per-sample profiles) — feed the Table 3/4/6 benches.
+# ---------------------------------------------------------------------------
+
+_VGG16_CONV = [
+    # (out_ch, spatial, in_ch)   224x224 ImageNet
+    (64, 224, 3), (64, 224, 64),
+    (128, 112, 64), (128, 112, 128),
+    (256, 56, 128), (256, 56, 256), (256, 56, 256),
+    (512, 28, 256), (512, 28, 512), (512, 28, 512),
+    (512, 14, 512), (512, 14, 512), (512, 14, 512),
+]
+
+
+def profile_vgg16(bpp: int = 2) -> NetworkProfile:
+    layers = []
+    for i, (oc, sp, ic) in enumerate(_VGG16_CONV):
+        w = 3 * 3 * ic * oc
+        f = 2.0 * w * sp * sp
+        layers.append(LayerProfile(
+            name=f"conv{i}", flops_fwd=f, bytes_weights=w * bpp,
+            bytes_act_out=float(oc * (sp // (2 if i in (1, 3, 6, 9) else 1)) ** 2 * bpp)))
+    fcs = [(7 * 7 * 512, 4096), (4096, 4096), (4096, 1000)]
+    for i, (fi, fo) in enumerate(fcs):
+        layers.append(LayerProfile(
+            name=f"fc{i}", flops_fwd=2.0 * fi * fo,
+            bytes_weights=float(fi * fo * bpp), bytes_act_out=float(fo * bpp)))
+    return NetworkProfile("vgg16", tuple(layers), unit="sample",
+                          bytes_per_param=bpp)
+
+
+_RESNET50_STAGES = [  # (n_blocks, width, spatial)
+    (3, 64, 56), (4, 128, 28), (6, 256, 14), (3, 512, 7)]
+
+
+def profile_resnet50(bpp: int = 2) -> NetworkProfile:
+    layers = [LayerProfile("stem", flops_fwd=2.0 * 7 * 7 * 3 * 64 * 112 * 112,
+                           bytes_weights=7 * 7 * 3 * 64 * bpp,
+                           bytes_act_out=float(64 * 56 * 56 * bpp))]
+    in_ch = 64
+    for (n, w, sp) in _RESNET50_STAGES:
+        for b in range(n):
+            c_out = w * 4
+            wts = in_ch * w + 3 * 3 * w * w + w * c_out
+            if b == 0:
+                wts += in_ch * c_out   # projection shortcut
+            f = 2.0 * wts * sp * sp
+            layers.append(LayerProfile(
+                name=f"res{w}_{b}", flops_fwd=f, bytes_weights=wts * bpp,
+                bytes_act_out=float(c_out * sp * sp * bpp)))
+            in_ch = c_out
+    layers.append(LayerProfile("fc", flops_fwd=2.0 * 2048 * 1000,
+                               bytes_weights=2048 * 1000 * bpp,
+                               bytes_act_out=1000.0 * bpp))
+    return NetworkProfile("resnet50", tuple(layers), unit="sample",
+                          bytes_per_param=bpp)
+
+
+def profile_gnmt(n_lstm: int = 8, d: int = 1024, seq: int = 50,
+                 vocab: int = 32000, bpp: int = 2) -> NetworkProfile:
+    """GNMT: n_lstm/2 encoder + n_lstm/2 decoder LSTM layers (+attention)."""
+    layers = []
+    per_lstm_w = 4 * (d * d + d * d)          # input + recurrent gates
+    per_lstm_f = 2.0 * per_lstm_w * seq       # per sample (seq tokens)
+    for i in range(n_lstm):
+        half = n_lstm // 2
+        name = f"enc{i}" if i < half else f"dec{i - half}"
+        f, w = per_lstm_f, per_lstm_w
+        if i == half:                          # decoder attention layer
+            w += 2 * d * d
+            f += 2.0 * (2 * d * d) * seq + 2.0 * seq * seq * d
+        layers.append(LayerProfile(
+            name=name, flops_fwd=f, bytes_weights=float(w * bpp),
+            bytes_act_out=float(d * seq * bpp)))
+    layers.append(LayerProfile(
+        "softmax", flops_fwd=2.0 * d * vocab * seq,
+        bytes_weights=float(d * vocab * bpp),
+        bytes_act_out=float(vocab * bpp)))
+    return NetworkProfile(f"gnmt-{n_lstm}", tuple(layers), unit="sample",
+                          bytes_per_param=bpp)
+
+
+def profile_gnmt_L(n_lstm: int) -> NetworkProfile:
+    """GNMT-L of paper Table 4: stacked L/2 encoder + L/2 decoder layers."""
+    return profile_gnmt(n_lstm=n_lstm)
+
+
+# ---------------------------------------------------------------------------
+# Measured profiling (CPU-runnable reduced models) — paper's GPU mode.
+# ---------------------------------------------------------------------------
+
+def measure_layer(fn: Callable, *args, iters: int = 5) -> float:
+    """Median wall-time of a jitted callable (CPU measured mode)."""
+    import jax
+    fn_j = jax.jit(fn)
+    out = fn_j(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn_j(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

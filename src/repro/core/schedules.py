@@ -1,0 +1,94 @@
+"""Closed-form pipeline-schedule cost models — paper Tables 1 and 2.
+
+Four schedules:
+
+* ``1F1B-AS`` — async (FPGA-style) one-forward-one-backward.
+* ``FBP-AS``  — async, FP and BP computed in parallel on each accelerator
+  (FPDeep).  Same makespan, double activation memory, lower bandwidth demand.
+* ``1F1B-SNO`` — synchronous, communication NOT overlapped with compute.
+* ``1F1B-SO``  — synchronous, overlapped via doubled warm-up micro-batches
+  (the paper's contribution). Double activation memory vs SNO.
+
+Symbols (paper):  M = micro-batches per mini-batch, N = pipeline stages,
+F/B = per-micro-batch FP/BP compute time of one (balanced) stage,
+SR = send/receive time of one stage boundary, a = activation bytes of one
+stage boundary (per micro-batch), w = weight bytes of one stage,
+i = stage index 1..N.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleEval:
+    name: str
+    minibatch_time: float
+    bubble_fraction: float
+    features_memory: tuple[float, ...]   # per stage i=1..N
+    weights_memory: float                # per stage (2w: weights + grads)
+    bandwidth_demand: float              # bytes/s needed to fully overlap
+
+
+def _feat(mult: int, N: int, a: float) -> tuple[float, ...]:
+    return tuple(float(mult * (N - i + 1)) * a for i in range(1, N + 1))
+
+
+def eval_1f1b_as(M: int, N: int, F: float, B: float, SR: float,
+                 a: float, w: float) -> ScheduleEval:
+    t = (M + N - 1) * (F + B)
+    return ScheduleEval(
+        name="1F1B-AS", minibatch_time=t,
+        bubble_fraction=(N - 1) / (M + N - 1),
+        features_memory=_feat(1, N, a), weights_memory=2 * w,
+        bandwidth_demand=(a / F) if F > 0 else float("inf"))
+
+
+def eval_fbp_as(M: int, N: int, F: float, B: float, SR: float,
+                a: float, w: float) -> ScheduleEval:
+    t = (M + N - 1) * (F + B)
+    return ScheduleEval(
+        name="FBP-AS", minibatch_time=t,
+        bubble_fraction=(N - 1) / (M + N - 1),
+        features_memory=_feat(2, N, a), weights_memory=2 * w,
+        bandwidth_demand=(2 * a / (F + B)) if F + B > 0 else float("inf"))
+
+
+def eval_1f1b_sno(M: int, N: int, F: float, B: float, SR: float,
+                  a: float, w: float) -> ScheduleEval:
+    extra = (N + M - 2 - math.ceil((M - 1) / N)) * 2 * SR
+    t = (M + N - 1) * (F + B) + extra
+    bubble = ((N - 1) * (F + B + 2 * SR)
+              + (M - 1 - math.ceil((M - 1) / N)) * 2 * SR) / t if t else 0.0
+    return ScheduleEval(
+        name="1F1B-SNO", minibatch_time=t, bubble_fraction=bubble,
+        features_memory=_feat(1, N, a), weights_memory=2 * w,
+        bandwidth_demand=(a / F) if F > 0 else float("inf"))
+
+
+def eval_1f1b_so(M: int, N: int, F: float, B: float, SR: float,
+                 a: float, w: float) -> ScheduleEval:
+    t = (M + N - 1) * (F + B) + (N - 1) * 2 * SR
+    bubble = (N - 1) * (F + B + 2 * SR) / t if t else 0.0
+    return ScheduleEval(
+        name="1F1B-SO", minibatch_time=t, bubble_fraction=bubble,
+        features_memory=_feat(2, N, a), weights_memory=2 * w,
+        bandwidth_demand=(a / F) if F > 0 else float("inf"))
+
+
+SCHEDULES = {
+    "1F1B-AS": eval_1f1b_as,
+    "FBP-AS": eval_fbp_as,
+    "1F1B-SNO": eval_1f1b_sno,
+    "1F1B-SO": eval_1f1b_so,
+}
+
+ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS")
+SYNC_SCHEDULES = ("1F1B-SNO", "1F1B-SO")
+
+
+def schedules_for(async_capable: bool) -> tuple[str, ...]:
+    """Hardware gating (paper §3.2): FPGA-like devices stream asynchronously,
+    GPU-like devices must use the synchronous schedules."""
+    return ASYNC_SCHEDULES if async_capable else SYNC_SCHEDULES

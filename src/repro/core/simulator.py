@@ -1,0 +1,178 @@
+"""Discrete-event simulator for intra-batch pipeline schedules.
+
+Re-derives the paper's Table 1/2 numbers tick-by-tick instead of trusting
+the closed forms: every FP/BP of every micro-batch on every stage is a task;
+stage-boundary transfers are tasks too.  Three communication models:
+
+* ``free``     — transfers are instantaneous (paper's async figures omit SR:
+                 "complete overlap by asynchronous execution").
+* ``latency``  — transfers take SR on a dedicated comm engine, overlapping
+                 compute (1F1B-SO's doubled warm-up makes this hideable).
+* ``blocking`` — a transfer occupies *both* end-point devices for SR
+                 (1F1B-SNO: synchronous execution, no overlap).
+
+The simulator also tracks the peak number of live micro-batch activations
+per stage, which is the paper's "features memory" column.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    peak_live: list[int]          # per stage: peak resident activations
+    idle: list[float]             # per stage: total idle (bubble) time
+
+    def bubble_fraction(self, stage: int = 0) -> float:
+        return self.idle[stage] / self.makespan if self.makespan else 0.0
+
+
+def _order_1f1b(M: int, N: int, n: int, warmup: int) -> list[tuple[str, int]]:
+    """Per-stage op order: ('F'|'B', microbatch)."""
+    warmup = max(1, min(M, warmup))
+    ops: list[tuple[str, int]] = [("F", m) for m in range(warmup)]
+    nf, nb = warmup, 0
+    while nb < M:
+        ops.append(("B", nb)); nb += 1
+        if nf < M:
+            ops.append(("F", nf)); nf += 1
+    return ops
+
+
+def simulate(schedule: str, M: int, N: int,
+             F: float | Sequence[float], B: float | Sequence[float],
+             SR: float = 0.0) -> SimResult:
+    """Simulate one mini-batch of M micro-batches through N stages."""
+    Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
+    Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
+    assert len(Fs) == len(Bs) == N
+
+    if schedule == "1F1B-AS":
+        comm = "free"
+        orders = [_order_1f1b(M, N, n, N - n) for n in range(N)]
+    elif schedule == "FBP-AS":
+        # FPGA spatial dataflow: FP and BP *timeshare* the DSP array, so a
+        # (F, B) pair still costs F+B of device time (paper Table 1 keeps
+        # the makespan equal to 1F1B-AS); what changes is the pipeline
+        # depth of BP behind FP — doubled warm-up — hence 2x live
+        # activations and the gentler 2a/(F+B) bandwidth demand.
+        comm = "free"
+        orders = [_order_1f1b(M, N, n, 2 * (N - n) - 1) for n in range(N)]
+    elif schedule == "1F1B-SNO":
+        comm = "blocking"
+        orders = [_order_1f1b(M, N, n, N - n) for n in range(N)]
+    elif schedule == "1F1B-SO":
+        comm = "latency"
+        orders = [_order_1f1b(M, N, n, 2 * (N - n) - 1) for n in range(N)]
+    else:
+        raise ValueError(schedule)
+
+    # --- task state ------------------------------------------------------
+    f_done = [[-1.0] * N for _ in range(M)]    # completion time of F[m][n]
+    b_done = [[-1.0] * N for _ in range(M)]
+    f_ready = [[-1.0] * N for _ in range(M)]   # input-activation arrival
+    b_ready = [[-1.0] * N for _ in range(M)]   # error arrival
+    for m in range(M):
+        f_ready[m][0] = 0.0                    # stage 0 reads local data
+    dev_free = [0.0] * N
+    busy = [0.0] * N                           # accumulated busy time
+    ptr = [0] * N                              # next op index
+    n_done = 0
+    total_ops = 2 * M * N
+
+    def deliver(kind: str, m: int, n_from: int, t_prod: float):
+        """Schedule the transfer of an activation/error to the neighbour."""
+        if kind == "F":
+            if n_from == N - 1:
+                b_ready[m][N - 1] = t_prod     # loss: error available locally
+                return None
+            tgt = (m, n_from + 1, "F")
+        else:
+            if n_from == 0:
+                return None
+            tgt = (m, n_from - 1, "B")
+        return tgt
+
+    pending_xfer: list[tuple[float, int, str, int, int]] = []  # (ready, m, kind, src, dst)
+
+    def try_transfers(now_unused=None):
+        """Fire every transfer whose constraints are satisfiable; returns
+        earliest next-possible start among the rest."""
+        nonlocal pending_xfer
+        fired = True
+        while fired:
+            fired = False
+            rest = []
+            for (rdy, m, kind, src, dst) in sorted(pending_xfer):
+                if comm == "free":
+                    (f_ready if kind == "F" else b_ready)[m][dst] = rdy
+                    fired = True
+                elif comm == "latency":
+                    (f_ready if kind == "F" else b_ready)[m][dst] = rdy + SR
+                    fired = True
+                else:                           # blocking: both devices busy SR
+                    start = max(rdy, dev_free[src], dev_free[dst])
+                    # only fire if neither device has a *startable* compute
+                    # strictly earlier (keeps devices from starving xfers
+                    # while staying work-conserving)
+                    dev_free[src] = start + SR
+                    dev_free[dst] = start + SR
+                    busy[src] += SR
+                    busy[dst] += SR
+                    (f_ready if kind == "F" else b_ready)[m][dst] = start + SR
+                    fired = True
+            pending_xfer = rest
+
+    # --- main loop: repeatedly start the globally-earliest runnable op ----
+    while n_done < total_ops:
+        try_transfers()
+        best = None                            # (start, n, kind, m)
+        for n in range(N):
+            if ptr[n] >= len(orders[n]):
+                continue
+            kind, m = orders[n][ptr[n]]
+            if kind == "F" and f_ready[m][n] >= 0:
+                s = max(dev_free[n], f_ready[m][n])
+            elif kind == "B" and b_ready[m][n] >= 0 and f_done[m][n] >= 0:
+                s = max(dev_free[n], b_ready[m][n], f_done[m][n])
+            else:
+                continue
+            if best is None or s < best[0]:
+                best = (s, n, kind, m)
+        assert best is not None, "pipeline deadlock (bad op order)"
+        s, n, kind, m = best
+        dur = Fs[n] if kind == "F" else Bs[n]
+        end = s + dur
+        dev_free[n] = end
+        busy[n] += dur
+        if kind == "F":
+            f_done[m][n] = end
+        else:
+            b_done[m][n] = end
+        ptr[n] += 1
+        tgt = deliver(kind, m, n, end)
+        if tgt is not None:
+            tm, tn, tkind = tgt
+            pending_xfer.append((end, tm, tkind, n, tn))
+        n_done += 1
+
+    try_transfers()
+    makespan = max(max(r) for r in b_done)
+
+    # peak live activations per stage: F done (or started) but B not done.
+    peak = []
+    for n in range(N):
+        events = ([(f_done[m][n] - (Fs[n]), +1) for m in range(M)]
+                  + [(b_done[m][n], -1) for m in range(M)])
+        events.sort()
+        live = pk = 0
+        for _, delta in events:
+            live += delta
+            pk = max(pk, live)
+        peak.append(pk)
+    idle = [makespan - busy[n] for n in range(N)]
+    return SimResult(makespan=makespan, peak_live=peak, idle=idle)

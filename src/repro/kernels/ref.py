@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately naive: full [T,S] score materialisation for
+attention, full per-chunk tensors for SSD.  Tests sweep shapes/dtypes and
+assert the kernels (interpret=True on CPU) match these to tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float, causal: bool = True,
+                        kv_len=None) -> jax.Array:
+    """q: [BH, T, D], k/v: [BH, S, D].  f32 accumulation."""
+    T, S = q.shape[1], k.shape[1]
+    logits = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= jnp.arange(S)[None, :] <= jnp.arange(T)[:, None]
+    if kv_len is not None:
+        mask &= jnp.arange(S)[None, :] < kv_len
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, *, init_state=None):
+    """Sequential SSD recurrence, the exact semantics both the chunked jnp
+    path and the Pallas kernel must reproduce.
+
+    x: [B,T,H,P], dt: [B,T,H], A: [H] (negative), Bm/Cm: [B,T,N].
+    Returns (y: [B,T,H,P], final_state: [B,H,P,N])."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    st = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp                 # [B,H,P], [B,H], [B,N]
+        dA = jnp.exp(dtt * A[None, :])        # [B,H]
+        st = st * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt.astype(jnp.float32),
+            Bt.astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), st)
+        return st, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    st, ys = jax.lax.scan(step, st, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), st

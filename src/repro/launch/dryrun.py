@@ -1,0 +1,331 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis and collective-traffic
+bytes for the roofline.
+
+No arrays are ever allocated: parameters, caches and batches are
+ShapeDtypeStructs with NamedShardings; ``jit(...).lower(...).compile()``
+proves the sharding config is coherent and yields the roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun                       # full sweep
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --multi-pod
+Outputs one JSON per combo under benchmarks/results/dryrun/.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, all_arch_ids
+from repro.configs.base import INPUT_SHAPES, LONG_CONTEXT_OK, InputShape
+from repro.launch.mesh import make_pipeline_mesh
+from repro.pipeline import runtime as RT
+from repro.pipeline import stage as ST
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in (post-SPMD, per-device)
+    HLO.  Start-ops only, so async pairs aren't double counted."""
+    out = {k: 0 for k in _COLLECTIVES}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        op = None
+        for c in _COLLECTIVES:
+            if rhs.startswith(c + "(") or rhs.startswith(c + "-start("):
+                op = c
+                break
+            # typed prefix: "f32[...] all-reduce(..." — opcode after types
+            m = re.match(r"^(?:\([^)]*\)|\S+)\s+([\w-]+)", rhs)
+            if m and m.group(1) in (c, c + "-start"):
+                op = c
+                break
+        if op is None:
+            continue
+        nbytes = 0
+        # result types sit between '=' and the opcode in rhs
+        head = rhs.split(op)[0]
+        for m in shape_re.finditer(head):
+            dt, dims = m.group(1), m.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_structs(cfg, plan, mesh, dtype=jnp.bfloat16, stage_axis="stage"):
+    shapes = jax.eval_shape(
+        lambda k: ST.init_stacked_params(cfg, k, plan, dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = ST.param_specs(cfg, shapes, stage_axis=stage_axis,
+                           fsdp_axis="data" if cfg.fsdp else None,
+                           tensor_size=mesh.shape["tensor"])
+    return jax.tree.map(lambda s, sp: sds(s.shape, s.dtype, mesh, sp),
+                        shapes, specs)
+
+
+def input_specs(cfg, shape: InputShape, mesh, pcfg, *, kind: str):
+    """ShapeDtypeStruct stand-ins for every model input."""
+    batch_axes = RT._batch_axes(mesh, pcfg)
+    n_shards = 1
+    for a in batch_axes:
+        n_shards *= mesh.shape[a]
+    B, T = shape.global_batch, shape.seq_len
+    b_sharded = B % n_shards == 0 and B >= n_shards
+    baxes = batch_axes if b_sharded else None
+    d = dict()
+    if kind == "train":
+        d["tokens"] = sds((B, T), jnp.int32, mesh, P(baxes, None))
+        d["labels"] = sds((B, T), jnp.int32, mesh, P(baxes, None))
+        if cfg.family == "vlm":
+            d["embeds"] = sds((B, T, cfg.d_model), jnp.bfloat16, mesh,
+                              P(baxes, None, None))
+            d["pos3"] = sds((3, B, T), jnp.int32, mesh, P(None, baxes, None))
+        if cfg.family == "audio":
+            d["frames"] = sds((B, 1500, cfg.d_model), jnp.bfloat16, mesh,
+                              P(baxes, None, None))
+    else:
+        q = T if kind == "prefill" else 1
+        d["tokens"] = sds((B, q), jnp.int32, mesh, P(baxes, None))
+        if cfg.family == "vlm":
+            d["pos3"] = sds((3, B, q), jnp.int32, mesh, P(None, baxes, None))
+    return d, b_sharded
+
+
+def pick_microbatches(cfg, shape: InputShape, mesh, pcfg, b_sharded) -> int:
+    batch_axes = RT._batch_axes(mesh, pcfg)
+    n_shards = 1
+    for a in batch_axes:
+        n_shards *= mesh.shape[a]
+    B_loc = shape.global_batch // n_shards if b_sharded else shape.global_batch
+    target = 4 if shape.kind == "train" else RT._n_stages(mesh, pcfg)
+    m = min(target, B_loc)
+    while B_loc % m:
+        m -= 1
+    return max(1, m)
+
+
+def _lower_compile(cfg, shape, mesh, plan, pcfg, b_sharded, ins):
+    p_structs = param_structs(cfg, plan, mesh,
+                              stage_axis=RT._stage_axes(mesh, pcfg))
+    if shape.kind == "train":
+        step, _ = RT.make_train_step(cfg, mesh, plan, pcfg,
+                                     param_dtype=jnp.bfloat16)
+        return step.lower(p_structs, ins).compile()
+    q = shape.seq_len if shape.kind == "prefill" else 1
+    enc_len = 1500 if cfg.family == "audio" else 0
+    step, _, cspecs, cshapes = RT.make_serve_step(
+        cfg, mesh, plan, pcfg, batch_sharded=b_sharded,
+        param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+        max_len=shape.seq_len, global_batch=shape.global_batch,
+        q_len=q, enc_len=enc_len)
+    c_structs = jax.tree.map(
+        lambda s_, sp: sds(s_.shape, s_.dtype, mesh, sp), cshapes, cspecs)
+    return step.lower(p_structs, c_structs, ins).compile()
+
+
+def _metrics(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            collective_bytes(compiled.as_text()))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str = RESULTS_DIR, remat: str = "stage",
+            overrides: dict | None = None, unroll=False) -> dict:
+    """``unroll``: False (plain compile proof), True (fully unrolled scans —
+    exact loop-aware cost analysis), or "diff" (two-point tick-scan
+    differencing for programs too big to fully unroll: cost_analysis counts
+    ``u + ticks%u`` copies of a scan body at unroll=u, so two lowerings
+    solve for base + per-tick cost exactly)."""
+    if unroll:
+        from repro.models import layers as _lyr
+        _lyr.UNROLL_SCANS = True
+        out_dir = out_dir.replace("dryrun", "dryrun_unroll") \
+            if out_dir == RESULTS_DIR else out_dir
+    cfg = get_config(arch)
+    force_M = force_remat = None
+    gate = pod_stage = False
+    if overrides:
+        overrides = dict(overrides)
+        force_M = overrides.pop("M", None)
+        force_remat = overrides.pop("remat", None)
+        gate = bool(overrides.pop("gate", False))
+        pod_stage = bool(overrides.pop("pod_stage", False))
+        moe_over = {k[4:]: v for k, v in overrides.items() if k.startswith("moe.")}
+        plain = {k: v for k, v in overrides.items() if not k.startswith("moe.")}
+        if moe_over and cfg.moe is not None:
+            plain["moe"] = dataclasses.replace(cfg.moe, **moe_over)
+        cfg = dataclasses.replace(cfg, **plain)
+        overrides = dict(overrides, **({"M": force_M} if force_M else {}),
+                         **({"remat": force_remat} if force_remat else {}))
+    if force_remat:
+        remat = force_remat
+    shape = INPUT_SHAPES[shape_name]
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               stages=cfg.stages, tensor=cfg.tensor, remat=remat,
+               status="ok")
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK \
+            and not (overrides or {}).get("window"):
+        rec["status"] = "skip"
+        rec["reason"] = ("pure full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md §5)")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_pipeline_mesh(multi_pod=multi_pod, stages=cfg.stages,
+                                  tensor=cfg.tensor)
+        depth = cfg.stages * (2 if (pod_stage and multi_pod) else 1)
+        plan = ST.plan_stages(cfg, n_stages=depth)
+        pcfg0 = RT.PipelineConfig(pod_role="stage" if pod_stage else "data")
+        ins, b_sharded = input_specs(cfg, shape, mesh, pcfg0,
+                                     kind=shape.kind)
+        M_ = force_M or pick_microbatches(cfg, shape, mesh, pcfg0, b_sharded)
+        rec["n_microbatches"] = M_
+        S_total = RT._n_stages(mesh, RT.PipelineConfig())
+        ticks = M_ + S_total - 1
+        rec["gated"] = gate
+        pod_role = "stage" if pod_stage else "data"
+        if unroll == "diff":
+            # two-point differencing on the tick scan; inner scans unrolled
+            f, b, c = [], [], []
+            for u in (1, 2):
+                pcfg = RT.PipelineConfig(n_microbatches=M_, remat=remat,
+                                         tick_unroll=u, gate_ticks=gate,
+                                         pod_role=pod_role)
+                compiled = _lower_compile(cfg, shape, mesh, plan, pcfg,
+                                          b_sharded, ins)
+                fi, bi, ci = _metrics(compiled)
+                f.append(fi); b.append(bi); c.append(ci)
+            bodies = [1, 2 + (ticks % 2 if ticks > 2 else 0)]
+            if ticks <= 2:
+                bodies[1] = ticks
+            span = max(1, bodies[1] - bodies[0])
+
+            def reconstruct(v1, v2):
+                body = (v2 - v1) / span
+                return max(v1, v1 - body + ticks * body)
+            rec["cost"] = dict(
+                flops=reconstruct(f[0], f[1]),
+                **{"bytes accessed": reconstruct(b[0], b[1])})
+            rec["collectives"] = {
+                k: reconstruct(c[0][k], c[1][k]) for k in c[0]}
+            rec["unroll_method"] = "tick-diff"
+            mem = compiled.memory_analysis()
+        else:
+            pcfg = RT.PipelineConfig(n_microbatches=M_, remat=remat,
+                                     unroll=bool(unroll), gate_ticks=gate,
+                                     pod_role=pod_role)
+            compiled = _lower_compile(cfg, shape, mesh, plan, pcfg,
+                                      b_sharded, ins)
+            fi, bi, ci = _metrics(compiled)
+            rec["cost"] = dict(flops=fi, **{"bytes accessed": bi})
+            rec["collectives"] = ci
+            if unroll:
+                rec["unroll_method"] = "full"
+            mem = compiled.memory_analysis()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            peak_bytes=getattr(mem, "peak_memory_in_bytes", None),
+        )
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        rec["compile_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{rec['mesh'].replace('x', '-')}"
+    if overrides:
+        extra = dict(overrides)
+        if force_M: extra["M"] = force_M
+        if force_remat: extra["remat"] = force_remat
+        if gate: extra["gate"] = 1
+        if pod_stage: extra["pod_stage"] = 1
+        tag += "_" + "_".join(f"{k}={v}" for k, v in sorted(extra.items()))
+        rec["overrides"] = {k: str(v) for k, v in extra.items()}
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="stage")
+    ap.add_argument("--unroll", default="", choices=["", "full", "diff"],
+                    help="loop-aware cost accounting: 'full' unrolls every "
+                         "scan; 'diff' uses two-point tick differencing")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else all_arch_ids()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_ok = n_fail = n_skip = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                u = {"": False, "full": True, "diff": "diff"}[args.unroll]
+                rec = run_one(arch, shape, multi_pod, remat=args.remat,
+                              unroll=u)
+                n_ok += rec["status"] == "ok"
+                n_fail += rec["status"] == "fail"
+                n_skip += rec["status"] == "skip"
+                msg = rec["status"]
+                if rec["status"] == "ok":
+                    fl = rec["cost"].get("flops", 0)
+                    msg += (f" {rec['compile_s']}s flops/dev={fl:.3g} "
+                            f"coll={rec['collectives']['total']:.3g}B "
+                            f"M={rec['n_microbatches']}")
+                elif rec["status"] == "fail":
+                    msg += " " + rec["error"][:160]
+                print(f"[{rec['mesh']}] {arch:22s} {shape:12s} {msg}",
+                      flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skip={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

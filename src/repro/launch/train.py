@@ -1,0 +1,122 @@
+"""End-to-end pipeline-parallel training driver.
+
+CPU quickstart (8 virtual devices, reduced model):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.launch.train \\
+        --arch llama3.2-1b --reduced --data 2 --stages 2 --tensor 2 \\
+        --steps 200 --batch 8 --seq 128
+
+On real hardware drop ``--reduced`` and size the mesh to the pod
+(``--data 16 --stages 8 --tensor 2`` etc.).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.data.synthetic import shard_batch
+from repro.optim import AdamW, warmup_cosine
+from repro.pipeline import runtime as RT
+from repro.pipeline import stage as ST
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--stages", type=int, default=0)
+    ap.add_argument("--tensor", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--remat", default="stage")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="let the BaPipe explorer pick stages/tensor/M")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=args.layers or 4,
+                          d_model=args.d_model or 256, seq=args.seq)
+    if args.stages:
+        cfg = dataclasses.replace(cfg, stages=args.stages)
+    if args.tensor:
+        cfg = dataclasses.replace(cfg, tensor=args.tensor)
+    if args.auto_plan:
+        from repro.core.autoplan import auto_plan
+        plan_ = auto_plan(cfg, global_batch=args.batch, seq_len=args.seq,
+                          model_axis=cfg.stages * cfg.tensor,
+                          data_axis=args.data)
+        cfg = plan_.apply(cfg)
+        args.microbatches = plan_.n_microbatches
+        print(f"auto-plan: stages={plan_.stages} tensor={plan_.tensor} "
+              f"M={plan_.n_microbatches} sched={plan_.schedule} "
+              f"(predicted {plan_.predicted_step_time*1e3:.2f} ms/step)")
+    need = args.data * cfg.stages * cfg.tensor
+    assert need <= jax.device_count(), \
+        f"mesh needs {need} devices, have {jax.device_count()} " \
+        "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+    mesh = jax.make_mesh((args.data, cfg.stages, cfg.tensor),
+                         ("data", "stage", "tensor"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    plan = ST.plan_stages(cfg)
+    print(f"arch={cfg.arch_id} layers={cfg.n_layers} d={cfg.d_model} "
+          f"mesh=data{args.data} x stage{cfg.stages} x tensor{cfg.tensor}")
+
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(args.seed), plan)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M")
+    opt = AdamW(lr=warmup_cosine(args.lr, 20, args.steps), weight_decay=0.01)
+    opt_state = opt.init(params)
+    pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
+                             remat=args.remat)
+    step_fn, specs = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
+
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch, seed=args.seed)
+    bspec = dict(tokens=NamedSharding(mesh, P(("data",), None)),
+                 labels=NamedSharding(mesh, P(("data",), None)))
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        batch = shard_batch(data.batch(step), bspec)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros((args.batch, 64, cfg.d_model))
+        if cfg.family == "vlm":
+            batch["pos3"] = jnp.broadcast_to(
+                jnp.arange(args.seq)[None, None],
+                (3, args.batch, args.seq)).astype(jnp.int32)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            tput = (step + 1) * args.batch * args.seq / dt
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"({tput:.0f} tok/s)", flush=True)
+    print(f"first-10 mean loss {sum(losses[:10])/10:.4f} -> "
+          f"last-10 mean loss {sum(losses[-10:])/10:.4f}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, dict(params=params), step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}.npz")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

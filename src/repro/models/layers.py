@@ -1,0 +1,640 @@
+"""Functional building blocks for every assigned architecture.
+
+Everything is a pure function over explicit parameter pytrees so the same
+code runs (a) single-device in smoke tests, (b) stacked-and-scanned inside
+the shard_map pipeline, and (c) under jax.grad.  When executed inside
+``shard_map`` with a tensor-parallel axis, pass ``tp_axis``: head/FFN/expert
+dimensions are then interpreted as *local shards* and the functions insert
+the matching ``psum``s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+
+Params = dict
+PRNGKey = jax.Array
+
+
+def _maybe_psum(x: jax.Array, axis: Optional[str]) -> jax.Array:
+    return lax.psum(x, axis) if axis else x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)          # stored as (scale - 1), gemma-style
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, D]; pos: [B, T] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [D/2]
+    ang = pos.astype(jnp.float32)[..., None] * freqs    # [B, T, D/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  pos3: [3, B, T] (temporal, height, width);
+    ``sections`` partitions the half-dim frequency bands among t/h/w."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [D/2]
+    ang_thw = pos3.astype(jnp.float32)[..., None] * freqs  # [3, B, T, D/2]
+    sec = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                           for i, s in enumerate(sections)])
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_thw, 0, -1), sec[None, None, :, None], axis=-1)[..., 0]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (shared by GQA / MLA / cross-attention)
+# ---------------------------------------------------------------------------
+
+ATTN_CHUNK_Q = 512     # flash-style query-chunk size for the XLA path
+
+# When True, inner scans (attention q-chunks, SSD chunks) are unrolled so
+# XLA cost_analysis counts every iteration (cost analysis counts a while
+# body ONCE).  Set by the dry-run's roofline mode; never for real runs.
+UNROLL_SCANS = False
+
+
+def _block_attend(qg, k, v, qpos, kpos, kv_len, window, causal, scale):
+    """One query block.  qg: [B,c,Hkv,G,D]; k/v: [B,S,Hkv,D*].
+    qpos: [c], kpos: [S]; kv_len: valid prefix of k/v (traced or None)."""
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    if window is not None:
+        w = jnp.asarray(window)
+        m &= (kpos[None, :] > qpos[:, None] - w) | (w == 0)
+    logits = jnp.where(m[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v.astype(jnp.float32))
+    B, c = qg.shape[0], qg.shape[1]
+    return out.reshape(B, c, -1, v.shape[-1]).astype(qg.dtype)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           scale: float, causal: bool = True, q_start=0,
+           kv_len=None, window=None,
+           chunk: int = ATTN_CHUNK_Q) -> jax.Array:
+    """Memory-bounded attention: scans over query chunks so no [T,S] logits
+    tensor is ever materialised (the XLA analogue of the Pallas flash
+    kernel in repro.kernels; backward rematerialises each chunk).
+
+    q: [B,T,Hq,D], k/v: [B,S,Hkv,D*] (GQA by head-group broadcast).
+    ``q_start``: absolute position of q[0] (cache offset, may be traced);
+    ``kv_len``: valid prefix of k/v (traced) or None for all;
+    ``window``: sliding window size (0/None = global; may be traced).
+    """
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, G, D)
+    kpos = jnp.arange(S)
+    if T % chunk != 0:
+        # pick the largest divisor of T <= chunk (falls back to one block
+        # for small awkward lengths like whisper's 1500 frames)
+        c = min(T, chunk)
+        while T % c:
+            c -= 1
+        chunk = c if c >= chunk // 4 else T
+    if T <= chunk:
+        qpos = q_start + jnp.arange(T)
+        out = _block_attend(qg, k, v, qpos, kpos, kv_len, window, causal, scale)
+        return out.reshape(B, T, Hq, v.shape[-1])
+    assert T % chunk == 0, (T, chunk)
+    nq = T // chunk
+    qg_c = qg.reshape(B, nq, chunk, Hkv, G, D)
+
+    @jax.checkpoint
+    def body(_, inp):
+        qc, idx = inp
+        qpos = q_start + idx * chunk + jnp.arange(chunk)
+        return None, _block_attend(qc, k, v, qpos, kpos, kv_len, window,
+                                   causal, scale)
+
+    _, out = lax.scan(body, None, (jnp.moveaxis(qg_c, 1, 0), jnp.arange(nq)),
+                      unroll=UNROLL_SCANS)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, T, Hq, v.shape[-1])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (llama / qwen / gemma / hymba / whisper flavours)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key: PRNGKey, cfg: ArchConfig, tp: int, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads // tp, max(1, cfg.n_kv_heads // tp)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = dict(
+        wq=jax.random.normal(k1, (d, nh * hd), dtype) * s,
+        wk=jax.random.normal(k2, (d, nkv * hd), dtype) * s,
+        wv=jax.random.normal(k3, (d, nkv * hd), dtype) * s,
+        wo=jax.random.normal(k4, (nh * hd, d), dtype) * s / math.sqrt(2 * cfg.n_layers),
+    )
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dtype)
+        p["k_norm"] = init_rms_norm(hd, dtype)
+    return p
+
+
+def _slice_kv_heads(w: jax.Array, cfg: ArchConfig, nh_l: int, hd: int,
+                    tp_index) -> jax.Array:
+    """When KV projections are replicated (n_kv_heads ∤ tensor), slice out
+    the kv head(s) this device's query shard actually attends."""
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    nkv_have = w.shape[-1] // hd
+    if nkv_have != nkv or nh_l == nh or tp_index is None:
+        return w                         # properly sharded already
+    g = nh // nkv                        # q heads per kv head
+    need = max(1, nh_l // g)
+    start = jnp.asarray(tp_index) * nh_l // g
+    w3 = lax.dynamic_slice(w.reshape(w.shape[0], nkv, hd),
+                           (jnp.zeros((), start.dtype), start,
+                            jnp.zeros((), start.dtype)),
+                           (w.shape[0], need, hd))
+    return w3.reshape(w.shape[0], need * hd)
+
+
+def gqa_attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                  pos: jax.Array, is_global, window_mask_extra=None,
+                  rope_theta, cache: Optional[dict] = None,
+                  cur_len=None, tp_axis: Optional[str] = None,
+                  tp_index=None,
+                  pos3: Optional[jax.Array] = None) -> tuple[jax.Array, Optional[dict]]:
+    """One GQA self-attention. ``is_global`` (traced bool) selects global vs
+    sliding-window masking; ``rope_theta`` may be traced (per-layer)."""
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    nh_l = p["wq"].shape[1] // hd
+    wk = _slice_kv_heads(p["wk"], cfg, nh_l, hd, tp_index)
+    wv = _slice_kv_heads(p["wv"], cfg, nh_l, hd, tp_index)
+    nkv_l = wk.shape[1] // hd
+    q = (x @ p["wq"]).reshape(B, T, nh_l, hd)
+    k = (x @ wk).reshape(B, T, nkv_l, hd)
+    v = (x @ wv).reshape(B, T, nkv_l, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections is not None and pos3 is not None:
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_theta:      # static off-switch (whisper: learned abs pos)
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    new_cache = None
+    win = (jnp.where(is_global, 0, cfg.window) if cfg.window else None)
+    if cache is not None:
+        idx = cache["len"]
+        ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, idx, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, idx, 0, 0))
+        new_cache = dict(k=ck, v=cv, len=idx + T)
+        out = attend(q, ck, cv, scale=1.0 / math.sqrt(hd), causal=True,
+                     q_start=idx, kv_len=idx + T, window=win)
+    else:
+        out = attend(q, k, v, scale=1.0 / math.sqrt(hd), causal=True,
+                     window=win)
+    out = out.reshape(B, T, nh_l * hd) @ p["wo"]
+    return _maybe_psum(out, tp_axis), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross(key: PRNGKey, cfg: ArchConfig, tp: int, dtype) -> Params:
+    return init_gqa(key, cfg, tp, dtype)
+
+
+def cross_attention(p: Params, x: jax.Array, enc: jax.Array, cfg: ArchConfig,
+                    tp_axis: Optional[str] = None) -> jax.Array:
+    B, T, _ = x.shape
+    S = enc.shape[1]
+    hd = cfg.resolved_head_dim
+    nh_l = p["wq"].shape[1] // hd
+    nkv_l = p["wk"].shape[1] // hd
+    q = (x @ p["wq"]).reshape(B, T, nh_l, hd)
+    k = (enc @ p["wk"]).reshape(B, S, nkv_l, hd)
+    v = (enc @ p["wv"]).reshape(B, S, nkv_l, hd)
+    out = attend(q, k, v, scale=1.0 / math.sqrt(hd), causal=False)
+    out = out.reshape(B, T, nh_l * hd) @ p["wo"]
+    return _maybe_psum(out, tp_axis)
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek V2/V3, MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key: PRNGKey, cfg: ArchConfig, tp: int, dtype) -> Params:
+    m = cfg.mla
+    d, nh = cfg.d_model, cfg.n_heads // tp
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    p = dict(
+        wkv_a=jax.random.normal(ks[0], (d, m.kv_lora_rank + m.qk_rope_dim), dtype) * s,
+        kv_norm=init_rms_norm(m.kv_lora_rank, dtype),
+        wkv_b=jax.random.normal(ks[1], (m.kv_lora_rank,
+                                        nh * (m.qk_nope_dim + m.v_head_dim)), dtype)
+        * (1.0 / math.sqrt(m.kv_lora_rank)),
+        wo=jax.random.normal(ks[2], (nh * m.v_head_dim, d), dtype)
+        * s / math.sqrt(2 * cfg.n_layers),
+    )
+    if m.q_lora_rank:
+        p["wq_a"] = jax.random.normal(ks[3], (d, m.q_lora_rank), dtype) * s
+        p["q_norm"] = init_rms_norm(m.q_lora_rank, dtype)
+        p["wq_b"] = jax.random.normal(
+            ks[4], (m.q_lora_rank, nh * (m.qk_nope_dim + m.qk_rope_dim)), dtype) \
+            * (1.0 / math.sqrt(m.q_lora_rank))
+    else:
+        p["wq"] = jax.random.normal(
+            ks[4], (d, nh * (m.qk_nope_dim + m.qk_rope_dim)), dtype) * s
+    return p
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                  pos: jax.Array, cache: Optional[dict] = None,
+                  tp_axis: Optional[str] = None) -> tuple[jax.Array, Optional[dict]]:
+    """MLA with the compressed-KV cache.  Prefill/train uses the expanded
+    path; decode uses the *absorbed* path (scores and values computed
+    directly against the latent cache — the technique that makes the MLA
+    cache O(kv_lora) instead of O(heads*dim))."""
+    m = cfg.mla
+    B, T, _ = x.shape
+    nh_l = p["wo"].shape[0] // m.v_head_dim
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    scale = 1.0 / math.sqrt(qk_dim)
+    # --- queries -----------------------------------------------------------
+    if m.q_lora_rank:
+        q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, T, nh_l, qk_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    # --- latent kv ----------------------------------------------------------
+    kv = x @ p["wkv_a"]                                   # [B,T,r+rope]
+    c_kv = rms_norm(kv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], pos, cfg.rope_theta)[:, :, 0]
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, nh_l, m.qk_nope_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_dim]                     # [r, H, nope]
+    w_uv = wkv_b[..., m.qk_nope_dim:]                     # [r, H, v]
+    new_cache = None
+    if cache is not None:
+        idx = cache["len"]
+        cc = lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                                      (0, idx, 0))
+        cr = lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                                      (0, idx, 0))
+        new_cache = dict(c_kv=cc, k_rope=cr, len=idx + T)
+    if T == 1 and cache is not None:
+        # absorbed decode: score and read out directly against the latent
+        # cache; never materialises per-head K/V of the full context.
+        S = cc.shape[1]
+        q_lat = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        logits = (jnp.einsum("bthr,bsr->bhts", q_lat, cc.astype(jnp.float32))
+                  + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                               cr.astype(jnp.float32))) * scale
+        mask = (jnp.arange(S)[None, None, None, :] < idx + T)
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhts,bsr->bthr", probs, cc.astype(jnp.float32))
+        out = jnp.einsum("bthr,rhd->bthd", ctx,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+    else:
+        # expanded path (train / prefill): per-head K/V from the latent.
+        src_c, src_r = (c_kv, k_rope) if cache is None else (cc, cr)
+        kv_len = None if cache is None else idx + T
+        q_start = 0 if cache is None else idx
+        Skv = src_c.shape[1]
+        k_nope = jnp.einsum("bsr,rhd->bshd", src_c, w_uk)
+        v = jnp.einsum("bsr,rhd->bshd", src_c, w_uv)
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(src_r[:, :, None],
+                                              (B, Skv, nh_l, m.qk_rope_dim))], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        out = attend(qf, k, v, scale=scale, causal=True, q_start=q_start,
+                     kv_len=kv_len)
+    out = out.reshape(B, T, nh_l * m.v_head_dim) @ p["wo"]
+    return _maybe_psum(out, tp_axis), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: PRNGKey, d: int, ff: int, tp: int, n_layers: int, dtype) -> Params:
+    ffl = ff // tp
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return dict(
+        w1=jax.random.normal(k1, (d, ffl), dtype) * s,
+        w3=jax.random.normal(k2, (d, ffl), dtype) * s,
+        w2=jax.random.normal(k3, (ffl, d), dtype)
+        * (1.0 / math.sqrt(ff)) / math.sqrt(2 * n_layers),
+    )
+
+
+def _act(x, kind):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def mlp(p: Params, x: jax.Array, act: str = "silu",
+        tp_axis: Optional[str] = None) -> jax.Array:
+    h = _act(x @ p["w1"], act) * (x @ p["w3"])
+    return _maybe_psum(h @ p["w2"], tp_axis)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (DeepSeek-style: shared + routed top-k)
+# ---------------------------------------------------------------------------
+
+def init_moe(key: PRNGKey, cfg: ArchConfig, tp: int, dtype) -> Params:
+    mo = cfg.moe
+    d, ffe = cfg.d_model, mo.d_ff_expert
+    e_l = max(1, mo.n_routed // tp)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    so = (1.0 / math.sqrt(ffe)) / math.sqrt(2 * cfg.n_layers)
+    p = dict(
+        router=jax.random.normal(ks[0], (d, mo.n_routed), jnp.float32) * s,
+        we1=jax.random.normal(ks[1], (e_l, d, ffe), dtype) * s,
+        we3=jax.random.normal(ks[2], (e_l, d, ffe), dtype) * s,
+        we2=jax.random.normal(ks[3], (e_l, ffe, d), dtype) * so,
+    )
+    if mo.n_shared:
+        p["shared"] = init_mlp(ks[4], d, mo.n_shared * ffe, tp, cfg.n_layers, dtype)
+    return p
+
+
+def moe_block(p: Params, x: jax.Array, cfg: ArchConfig, act: str = "silu",
+              tp_axis: Optional[str] = None,
+              tp_index: Optional[jax.Array] = None,
+              dp_axis: Optional[str] = None,
+              dp_index: Optional[jax.Array] = None,
+              n_dp: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with gather/scatter dispatch (no dense
+    one-hot matmuls — compiled FLOPs stay ~top_k/E of the dense cost).
+
+    Expert sharding (DeepSeek/GShard-style, TPU-idiomatic):
+    * over ``tp_axis``  — tokens are replicated across the tensor axis, each
+      device computes its expert slice, outputs are psum-combined;
+    * over ``dp_axis``  — tokens are batch-sharded, so capacity-bucketed
+      token buffers travel by ``all_to_all`` to the data shard owning the
+      expert (cfg.moe.ep_data), are computed, and travel back.
+    Both can be active: experts split data-major, then tensor.
+
+    Capacity: C = ceil(k·N/E · capacity_factor) slots per expert per source
+    shard; overflowing assignments are dropped (standard token-choice).
+
+    Returns (output, aux_load_balance_loss)."""
+    import math as _math
+    mo = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    E = mo.n_routed
+    k = mo.top_k
+    e_loc = p["we1"].shape[0]              # experts owned by this device
+    e_dp = E // n_dp                       # experts per data shard
+    xt = x.reshape(N, d)
+    # ---- routing (replicated math: router weights are not sharded) -------
+    logits = (xt.astype(jnp.float32) @ p["router"])          # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = lax.top_k(probs, k)                         # [N, k]
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    # ---- capacity bucketing ----------------------------------------------
+    C = max(1, _math.ceil(k * N / E * mo.capacity_factor))
+    e_flat = topi.reshape(-1)                                # [A], A = N*k
+    w_flat = topv.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(N), k)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)      # [A, E]
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(e_flat.shape[0]),
+                                                e_flat]      # rank in expert
+    valid = pos < C
+    shard = e_flat // e_dp                                   # dest data shard
+    e_in = e_flat % e_dp
+    slot = jnp.where(valid, (shard * e_dp + e_in) * C + pos,
+                     n_dp * e_dp * C)                        # OOB -> dropped
+    x_send = jnp.zeros((n_dp * e_dp * C, d), xt.dtype).at[slot].set(
+        xt[tok_flat], mode="drop")
+    x_send = x_send.reshape(n_dp, e_dp, C, d)
+    # ---- all_to_all over the batch-sharded expert axis --------------------
+    if dp_axis is not None and n_dp > 1:
+        x_recv = lax.all_to_all(x_send, dp_axis, split_axis=0, concat_axis=0)
+    else:
+        x_recv = x_send                                      # [src=1, E, C, d]
+    n_src = x_recv.shape[0]
+    # ---- tensor slice of this data shard's experts ------------------------
+    if tp_index is not None and e_loc < e_dp:
+        start = tp_index * e_loc
+        xe = lax.dynamic_slice_in_dim(
+            jnp.moveaxis(x_recv, 1, 0), start, e_loc, 0)     # [e_loc,src,C,d]
+    else:
+        xe = jnp.moveaxis(x_recv, 1, 0)                      # [e_loc,src,C,d]
+    xe = xe.reshape(e_loc, n_src * C, d)
+    # ---- expert FFN --------------------------------------------------------
+    h = _act(jnp.einsum("ecd,edf->ecf", xe, p["we1"]), act) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["we3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we2"])             # [e_loc,srcC,d]
+    ye = ye.reshape(e_loc, n_src, C, d)
+    # ---- route back --------------------------------------------------------
+    if tp_index is not None and e_loc < e_dp:
+        y_full = jnp.zeros((e_dp, n_src, C, d), ye.dtype)
+        y_full = lax.dynamic_update_slice_in_dim(y_full, ye, tp_index * e_loc, 0)
+    else:
+        y_full = ye
+    y_back = jnp.moveaxis(y_full, 0, 1)                      # [src, e_dp, C, d]
+    if dp_axis is not None and n_dp > 1:
+        y_back = lax.all_to_all(y_back, dp_axis, split_axis=0, concat_axis=0)
+    y_slots = y_back.reshape(n_dp * e_dp * C, d)
+    y_a = jnp.take(y_slots, jnp.clip(slot, 0, n_dp * e_dp * C - 1), axis=0)
+    contrib = jnp.where(valid[:, None], y_a.astype(jnp.float32)
+                        * w_flat[:, None], 0.0)
+    y = jnp.zeros((N, d), jnp.float32).at[tok_flat].add(contrib)
+    y = _maybe_psum(y, tp_axis)
+    # name the routed-expert output so collective-aware remat policies can
+    # save it: recomputing it in backward re-executes the all_to_alls
+    from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+    y = _ckpt_name(y, "moe_y")
+    if "shared" in p:
+        y = y + mlp(p["shared"], xt, act, tp_axis).astype(jnp.float32)
+    # ---- load-balance aux loss (Switch-style): E * sum_e f_e * p_e --------
+    frac = jnp.mean(jnp.sum(jax.nn.one_hot(topi, E), axis=1), axis=0)   # [E]
+    pmean = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * pmean) * mo.router_aux_weight
+    return y.reshape(B, T, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD — state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+def init_ssm(key: PRNGKey, cfg: ArchConfig, tp: int, dtype) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d // tp
+    nh = max(1, s.n_heads(d) // tp)
+    conv_ch = d_inner + 2 * s.d_state
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    return dict(
+        in_proj=jax.random.normal(ks[0], (d, 2 * d_inner + 2 * s.d_state + nh),
+                                  dtype) * sc,
+        conv_w=jax.random.normal(ks[1], (s.d_conv, conv_ch), dtype) * 0.1,
+        conv_b=jnp.zeros((conv_ch,), dtype),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        d_skip=jnp.ones((nh,), jnp.float32),
+        dt_bias=jnp.zeros((nh,), jnp.float32),
+        gate_norm=init_rms_norm(d_inner, dtype),
+        out_proj=jax.random.normal(ks[2], (d_inner, d), dtype)
+        * (1.0 / math.sqrt(s.expand * d)) / math.sqrt(2 * cfg.n_layers),
+    )
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan (Mamba-2, arXiv:2405.21060 §6), one chunk at a time.
+
+    A single ``lax.scan`` over chunks carries the [B,H,P,N] state; each
+    chunk does the quadratic intra-chunk block plus the carried-state
+    readout, so peak memory is O(chunk²·H) rather than O(T·chunk·H).
+
+    xh: [B,T,H,P], dt: [B,T,H], A: [H] (negative), Bm/Cm: [B,T,N].
+    Returns (y: [B,T,H,P], final_state: [B,H,P,N]).
+    """
+    Bsz, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    x_ = jnp.moveaxis(xh.reshape(Bsz, nc, chunk, H, P), 1, 0)
+    dt_ = jnp.moveaxis(dt.reshape(Bsz, nc, chunk, H), 1, 0)
+    B_ = jnp.moveaxis(Bm.reshape(Bsz, nc, chunk, N), 1, 0)
+    C_ = jnp.moveaxis(Cm.reshape(Bsz, nc, chunk, N), 1, 0)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def step(state, inp):
+        xc, dtc, Bc, Cc = inp                       # [B,c,H,P] [B,c,H] [B,c,N]
+        dA = dtc.astype(jnp.float32) * A[None, None, :]         # [B,c,H] (<0)
+        dA_cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk (mask BEFORE exp so masked entries don't produce
+        # inf*0 NaNs in the backward pass)
+        seg = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]     # [B,c,c,H]
+        Lmat = jnp.exp(jnp.where(causal[None, :, :, None], seg, -1e30))
+        scores = jnp.einsum("bcn,bsn->bcs", Cc.astype(jnp.float32),
+                            Bc.astype(jnp.float32))
+        y_diag = jnp.einsum("bcs,bcsh,bsh,bshp->bchp", scores, Lmat,
+                            dtc.astype(jnp.float32), xc.astype(jnp.float32))
+        # carried-state readout
+        state_decay = jnp.exp(dA_cum)                           # [B,c,H]
+        y_off = jnp.einsum("bcn,bch,bhpn->bchp",
+                           Cc.astype(jnp.float32), state_decay, state)
+        # state update
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)      # [B,c,H]
+        chunk_state = jnp.einsum("bsn,bsh,bsh,bshp->bhpn",
+                                 Bc.astype(jnp.float32), decay_to_end,
+                                 dtc.astype(jnp.float32), xc.astype(jnp.float32))
+        chunk_decay = jnp.exp(dA_cum[:, -1, :])                 # [B,H]
+        new_state = state * chunk_decay[:, :, None, None] + chunk_state
+        return new_state, (y_diag + y_off).astype(xh.dtype)
+
+    final, y = lax.scan(step, s0, (x_, dt_, B_, C_), unroll=UNROLL_SCANS)
+    y = jnp.moveaxis(y, 0, 1).reshape(Bsz, T, H, P)
+    return y, final
+
+
+def ssm_block(p: Params, x: jax.Array, cfg: ArchConfig,
+              cache: Optional[dict] = None,
+              tp_axis: Optional[str] = None) -> tuple[jax.Array, Optional[dict]]:
+    """Mamba-2 block: in_proj -> causal depthwise conv -> SSD -> gated norm
+    -> out_proj.  Decode path is the O(1) recurrent update."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    d_inner = p["out_proj"].shape[0]
+    nh = p["a_log"].shape[0]
+    P = s.head_dim
+    N = s.d_state
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], -1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], -1)             # [B,T,conv_ch]
+    new_cache = None
+    if cache is None:
+        pad = jnp.pad(conv_in, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + T] * p["conv_w"][i] for i in range(s.d_conv))
+        conv = jax.nn.silu(conv + p["conv_b"])
+    else:
+        window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B,dc-1+T,ch]
+        conv = sum(window[:, i:i + T] * p["conv_w"][i] for i in range(s.d_conv))
+        conv = jax.nn.silu(conv + p["conv_b"])
+        new_conv = window[:, -(s.d_conv - 1):]
+    xc, Bc, Cc = jnp.split(conv, [d_inner, d_inner + N], -1)
+    xh = xc.reshape(B, T, nh, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,T,H]
+    A = -jnp.exp(p["a_log"])                                  # [H] negative
+    if cache is None:
+        y, _ = _ssd_chunked(xh, dt, A, Bc, Cc, min(s.chunk, T))
+        y = y.astype(jnp.float32)
+    elif T > 1:
+        # prefill with state cache: chunked SSD seeded by the cached state
+        y, final = _ssd_chunked(xh, dt, A, Bc, Cc, min(s.chunk, T),
+                                init_state=cache["state"])
+        y = y.astype(jnp.float32)
+        new_cache = dict(conv=window[:, -(s.d_conv - 1):],
+                         state=final.astype(cache["state"].dtype))
+    else:
+        st = cache["state"].astype(jnp.float32)               # [B,H,P,N]
+        dA = jnp.exp(dt[:, 0] * A[None])                      # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xh[:, 0].astype(jnp.float32), Bc[:, 0].astype(jnp.float32))
+        st = st * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), st)
+        y = y[:, None]                                        # [B,1,H,P]
+        new_cache = dict(conv=new_conv, state=st.astype(cache["state"].dtype))
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return _maybe_psum(out, tp_axis), new_cache

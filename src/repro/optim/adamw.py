@@ -1,0 +1,112 @@
+"""Optimizers (from scratch — no optax): AdamW and SGD-momentum, plus LR
+schedules and global-norm clipping.  Pure element-wise pytree transforms, so
+optimizer state inherits parameter sharding under jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), n
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jax.tree.map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+        return dict(m=zeros(params), v=zeros(params),
+                    step=jnp.zeros((), jnp.int32))
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        if self.clip_norm:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / (1 - b1 ** step.astype(jnp.float32))
+            vh = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay \
+                * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, dict(m=new_m, v=new_v, step=step)
+
+    def make_update(self, specs, mesh):
+        return self.update
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: Optional[float] = None
+
+    def init(self, params):
+        return dict(mu=jax.tree.map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
+            step=jnp.zeros((), jnp.int32))
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        if self.clip_norm:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def upd(p, g, mu):
+            mu = self.momentum * mu + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * mu).astype(p.dtype), mu
+
+        flat_p, treedef = jax.tree.flatten(params)
+        out = [upd(p, g, mu) for p, g, mu in
+               zip(flat_p, jax.tree.leaves(grads), jax.tree.leaves(state["mu"]))]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                dict(mu=jax.tree.unflatten(treedef, [o[1] for o in out]),
+                     step=step))
+
+    def make_update(self, specs, mesh):
+        return self.update

@@ -1,0 +1,532 @@
+"""BaPipe distributed runtime: intra-batch pipeline parallelism as
+``shard_map`` + ``lax.scan`` + ``lax.ppermute`` on a
+("pod",) ("data", "stage", "tensor") mesh.
+
+Execution model (per device, SPMD):
+
+* layer parameters arrive stacked ``[1, Lps, ...]`` (stage-sharded);
+* one scan over ``M + S - 1`` ticks; each tick the device applies its stage
+  block to its current micro-batch and ``ppermute``s the boundary
+  activation to the next stage (a 1-D daisy chain — exactly the paper's
+  cluster topology);
+* stage 0 injects micro-batches, stage S-1 accumulates outputs;
+* the loss is computed on the last stage, masked, and ``psum``-broadcast;
+* per-device ``jax.grad`` of that global scalar is SPMD-correct because
+  every collective (ppermute/psum/all_gather) transposes to a collective;
+* gradients are then ``psum``'d over exactly the axes each leaf is
+  replicated on (data/pod for everything; +stage for embed/head/norm) —
+  the paper's "orthogonal to data parallelism", literally.
+
+Schedule mapping (paper §3.2 -> TPU): the scan's steady state is 1F1B
+(one in-flight micro-batch per stage); ``remat='stage'`` recomputes stage
+internals in backward so only the O(S) boundary carries persist — the
+paper's 1F1B features-memory row.  ``remat='none'`` stores everything
+(GPipe-like).  The sync/async distinction dissolves: XLA issues the
+ppermute asynchronously and overlaps it with compute (1F1B-SO behaviour)
+without needing the doubled warm-up, which the analytic explorer still
+models for GPU/FPGA targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as LYR
+from repro.models import model as M
+from repro.pipeline import stage as ST
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_microbatches: int = 4
+    remat: str = "stage"            # none | stage | full
+    pod_role: str = "data"          # data | stage  (stage = pipeline over DCN)
+    unroll: bool = False            # fully unroll ALL scans (roofline mode)
+    gate_ticks: bool = False        # serve: lax.cond-skip invalid ticks so
+                                    # devices neither compute nor stream
+                                    # weights during fill/drain (real TPUs
+                                    # take one conditional branch)
+    tick_unroll: int = 0            # >0: unroll factor for the tick scan
+                                    # only (two-point roofline differencing);
+                                    # inner scans are then fully unrolled
+
+    @property
+    def inner_unroll(self) -> bool:
+        return self.unroll or self.tick_unroll > 0
+
+    @property
+    def tick_scan_unroll(self):
+        if self.unroll:
+            return True
+        return self.tick_unroll if self.tick_unroll > 0 else 1
+
+
+def _batch_axes(mesh: Mesh, pcfg: PipelineConfig) -> tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if pcfg.pod_role == "stage":
+        axes = tuple(a for a in axes if a != "pod")
+    return axes
+
+
+def _stage_axes(mesh: Mesh, pcfg: PipelineConfig):
+    if pcfg.pod_role == "stage" and "pod" in mesh.axis_names:
+        return ("pod", "stage")
+    return "stage"
+
+
+def _n_stages(mesh: Mesh, pcfg: PipelineConfig) -> int:
+    s = mesh.shape["stage"]
+    if pcfg.pod_role == "stage" and "pod" in mesh.axis_names:
+        s *= mesh.shape["pod"]
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Per-stage block apply (scan over the stage's layers).
+# ---------------------------------------------------------------------------
+
+def _gather_fsdp(lp: dict, fsdp_dims: dict, axis: str) -> dict:
+    def g(path, leaf):
+        name = getattr(path[-1], "key", None)
+        dim = fsdp_dims.get(name)
+        if dim is None:
+            return leaf
+        return lax.all_gather(leaf, axis, axis=dim, tiled=True)
+    return jax.tree_util.tree_map_with_path(g, lp)
+
+
+def apply_stage(cfg: ArchConfig, stage_params, stage_meta, x, *,
+                pos, pos3=None, cache=None, tp_axis=None, tp_index=None,
+                dp_axis=None, dp_index=None, n_dp=1,
+                fsdp_axis=None, fsdp_dims=None, remat="stage",
+                unroll=False):
+    """Scan this stage's Lps layers over activation pytree ``x``.
+
+    ``x`` is the raw hidden state [mb,T,d], or for audio a dict
+    {h_enc, h_dec}.  Padded (inactive) layer slots pass through unchanged.
+    Returns (x', aux, new_cache)."""
+
+    def layer_body(carry, inp):
+        xc, aux = carry
+        lp, ml, cl = inp
+        if fsdp_axis is not None and fsdp_dims:
+            lp = _gather_fsdp(lp, fsdp_dims, fsdp_axis)
+        blk_x = dict(h_enc=xc["h_enc"], h_dec=xc["h_dec"]) \
+            if isinstance(xc, dict) else xc
+        y, new_cl, a = M.block_apply(cfg, lp, blk_x, ml, pos=pos, pos3=pos3,
+                                     cache_l=cl, tp_axis=tp_axis,
+                                     tp_index=tp_index, dp_axis=dp_axis,
+                                     dp_index=dp_index, n_dp=n_dp)
+        act = ml["active"]
+        y = jax.tree.map(lambda new, old: jnp.where(act, new, old), y, blk_x)
+        if new_cl is not None:
+            new_cl = jax.tree.map(lambda new, old: jnp.where(act, new, old),
+                                  new_cl, cl)
+        return (y, aux + jnp.where(act, a, 0.0)), new_cl
+
+    body = jax.checkpoint(layer_body) if remat == "full" else layer_body
+    (x, aux), new_cache = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stage_params, stage_meta, cache),
+        unroll=unroll)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Micro-batch preparation (embedding etc., data-parallel, outside the pipe).
+# ---------------------------------------------------------------------------
+
+def _prepare_microbatches(cfg: ArchConfig, params, batch, M_: int, tp_index):
+    """Returns (inj [M, ...] pytree of per-microbatch injected carries,
+    pos [mb,T], pos3 [M,3,mb,T] or None)."""
+    if cfg.family == "vlm" and "embeds" in batch:
+        x_all = batch["embeds"]
+    else:
+        x_all = M.embed_tokens(cfg, params["embed"], batch["tokens"],
+                               "tensor", tp_index)
+    B_loc, T = x_all.shape[0], x_all.shape[1]
+    assert B_loc % M_ == 0, f"local batch {B_loc} not divisible by M={M_}"
+    mb = B_loc // M_
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (mb, T))
+    if cfg.family == "audio":
+        x_all = x_all + M.sinusoid_pos(
+            jnp.broadcast_to(jnp.arange(T)[None], (B_loc, T)), cfg.d_model,
+            x_all.dtype)
+        frames = batch["frames"].astype(x_all.dtype)
+        Sf = frames.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(Sf)[None], (B_loc, Sf))
+        h_enc = frames + M.sinusoid_pos(enc_pos, cfg.d_model, x_all.dtype)
+        inj = dict(h_dec=x_all.reshape(M_, mb, T, -1),
+                   h_enc=h_enc.reshape(M_, mb, Sf, -1))
+    else:
+        inj = x_all.reshape(M_, mb, T, -1)
+    pos3 = None
+    if batch.get("pos3") is not None:
+        pos3 = jnp.moveaxis(batch["pos3"].reshape(3, M_, mb, T), 1, 0)
+    return inj, pos, pos3, mb, T
+
+
+def _hidden_of(y):
+    return y["h_dec"] if isinstance(y, dict) else y
+
+
+# ---------------------------------------------------------------------------
+# Training step factory.
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
+                    pcfg: PipelineConfig, *, optimizer=None,
+                    param_dtype=jnp.float32):
+    """Build the jitted pipeline train step.
+
+    Returns (step_fn, specs): without an optimizer ``step_fn(params, batch)
+    -> (loss, grads)``; with one ``step_fn(params, opt_state, batch) ->
+    (params, opt_state, metrics)``."""
+    shape_params = jax.eval_shape(
+        lambda k: ST.init_stacked_params(cfg, k, plan, param_dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    mesh_axes = tuple(mesh.axis_names)
+    batch_axes = _batch_axes(mesh, pcfg)
+    stage_ax = _stage_axes(mesh, pcfg)
+    S = _n_stages(mesh, pcfg)
+    assert plan.n_stages == S, \
+        f"stage plan ({plan.n_stages}) != mesh pipeline depth ({S}); " \
+        f"with pod_role='stage' build the plan with n_stages=pod*stages"
+    specs = ST.param_specs(cfg, shape_params, stage_axis=stage_ax,
+                           fsdp_axis="data" if cfg.fsdp else None,
+                           tensor_size=mesh.shape["tensor"])
+    M_ = pcfg.n_microbatches
+    fsdp_dims = ST.fsdp_scan_dims(specs) if cfg.fsdp else {}
+    ep_dp_axis = "data" if (cfg.moe and cfg.moe.ep_data) else None
+    ep_n_dp = mesh.shape["data"] if ep_dp_axis else 1
+    n_batch_shards = math.prod(mesh.shape[a] for a in batch_axes) or 1
+
+    def batch_spec_for(keys):
+        spec = {}
+        for k in keys:
+            if k in ("tokens", "labels"):
+                spec[k] = P(batch_axes, None)
+            elif k in ("embeds", "frames"):
+                spec[k] = P(batch_axes, None, None)
+            elif k == "pos3":
+                spec[k] = P(None, batch_axes, None)
+        return spec
+
+    def global_loss(params, batch):
+        stage_idx = lax.axis_index(stage_ax)
+        tp_index = lax.axis_index("tensor")
+        smeta = ST.stacked_meta(cfg, plan)
+        smeta_local = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, stage_idx, 0, keepdims=False),
+            smeta)
+        lp_local = jax.tree.map(lambda a: a[0], params["layers"])
+        inj, pos, pos3, mb, T = _prepare_microbatches(
+            cfg, params, batch, M_, tp_index)
+
+        def tick(carry, t):
+            x_cur, outbuf, aux = carry
+            tcl = jnp.clip(t, 0, M_ - 1)
+            x_in = jax.tree.map(
+                lambda q, c: jnp.where(stage_idx == 0, q[tcl], c), inj, x_cur)
+            p3 = None if pos3 is None else pos3[tcl]
+
+            def stage_fn(x_in):
+                y, a, _ = apply_stage(
+                    cfg, lp_local, smeta_local, x_in, pos=pos, pos3=p3,
+                    cache=None, tp_axis="tensor", tp_index=tp_index,
+                    dp_axis=ep_dp_axis, n_dp=ep_n_dp,
+                    fsdp_axis="data" if cfg.fsdp else None,
+                    fsdp_dims=fsdp_dims, remat=pcfg.remat,
+                    unroll=pcfg.inner_unroll)
+                return y, a
+
+            if pcfg.remat == "stage_save_moe":
+                # collective-aware remat: keep expert outputs (so backward
+                # never re-runs the MoE all_to_alls), recompute the rest
+                stage_fn = jax.checkpoint(
+                    stage_fn,
+                    policy=jax.checkpoint_policies.save_only_these_names(
+                        "moe_y"))
+            elif pcfg.remat in ("stage", "full"):
+                stage_fn = jax.checkpoint(stage_fn)
+            y, a = stage_fn(x_in)
+            # ticks outside this stage's window process garbage: gate aux
+            m_idx = t - stage_idx
+            a = jnp.where((m_idx >= 0) & (m_idx < M_), a, 0.0)
+            # last stage collects its finished micro-batch
+            out_t = t - (S - 1)
+            oc = jnp.clip(out_t, 0, M_ - 1)
+            cur = lax.dynamic_index_in_dim(outbuf, oc, 0, keepdims=False)
+            wr = jnp.where((out_t >= 0) & (stage_idx == S - 1),
+                           _hidden_of(y), cur)
+            outbuf = lax.dynamic_update_index_in_dim(outbuf, wr, oc, 0)
+            # daisy-chain shift
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm), y)
+            return (x_next, outbuf, aux + a), None
+
+        x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), inj)
+        outbuf0 = jnp.zeros((M_, mb, T, cfg.d_model),
+                            _hidden_of(x0).dtype)
+        (_, outbuf, aux), _ = lax.scan(
+            tick, (x0, outbuf0, jnp.zeros((), jnp.float32)),
+            jnp.arange(M_ + S - 1), unroll=pcfg.tick_scan_unroll)
+
+        h = LYR.rms_norm(outbuf.reshape(M_ * mb, T, -1), params["final_norm"],
+                         cfg.norm_eps)
+        ce = M.logits_and_xent(cfg, params, h, batch["labels"], "tensor",
+                               tp_index)
+        on_last = (stage_idx == S - 1).astype(jnp.float32)
+        # Per-device LOCAL term of the global loss: global = psum(local).
+        # (Under check_rep=False shard_map, psum transposes to psum, so
+        # the scalar we differentiate must be the local contribution, with
+        # tensor-replication divided out.)
+        tp_size = mesh.shape["tensor"]
+        return (ce * on_last + aux / M_) / (n_batch_shards * tp_size)
+
+    def sharded_step(params, batch):
+        local, grads = jax.value_and_grad(global_loss)(params, batch)
+        loss = lax.psum(local, mesh_axes)
+        grads = jax.tree.map(
+            lambda g, s: lax.psum(g, axes)
+            if (axes := ST.grad_sync_axes(s, mesh_axes)) else g,
+            grads, specs)
+        return loss, grads
+
+    _built: dict = {}
+
+    def fn(params, batch):
+        keys = tuple(sorted(batch))
+        if keys not in _built:
+            _built[keys] = shard_map(
+                sharded_step, mesh=mesh,
+                in_specs=(specs, batch_spec_for(keys)),
+                out_specs=(P(), specs), check_rep=False)
+        return _built[keys](params, batch)
+
+    if optimizer is None:
+        return jax.jit(fn), specs
+
+    opt_update = optimizer.make_update(specs, mesh)
+
+    def full_step(params, opt_state, batch):
+        loss, grads = fn(params, batch)
+        params, opt_state = opt_update(params, grads, opt_state)
+        return params, opt_state, dict(loss=loss)
+
+    return jax.jit(full_step, donate_argnums=(0, 1)), specs
+
+
+# ---------------------------------------------------------------------------
+# Serving: pipelined decode (and prefill).
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ArchConfig, cache_shapes, batch_axes, *,
+                b_sharded: bool, stage_axis="stage"):
+    """Stage-sharded cache specs: every leaf is [S, Lps, B, ...].
+    Attention K/V caches additionally shard their head dim over tensor."""
+    def leaf(path, l):
+        name = getattr(path[-1], "key", None)
+        if name == "len":
+            return P(stage_axis, None)
+        spec = [stage_axis, None] + [None] * (l.ndim - 2)
+        if b_sharded and l.ndim >= 3:
+            spec[2] = batch_axes
+        if name in ("k", "v", "xk", "xv") and l.ndim >= 6:
+            spec[4] = "tensor"       # [S, Lps, B, len, heads, hd]
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def init_pipeline_cache(cfg: ArchConfig, plan: ST.StagePlan, batch: int,
+                        max_len: int, *, dtype=jnp.float32, enc_len: int = 0):
+    """Global cache [S, Lps, B, ...] (call under jit with sharding, or use
+    eval_shape for the dry run).
+
+    When n_kv_heads doesn't divide the tensor axis, the cache carries
+    ``tensor`` head slots (one per device) — the inherent duplication of
+    serving few-KV-head models under tensor parallelism."""
+    tp = plan.tensor
+    nkv = cfg.n_kv_heads
+    if cfg.attn_kind == "gqa" and nkv % tp != 0:
+        nh_l = max(1, cfg.n_heads // tp)
+        g = cfg.n_heads // nkv
+        nkv = tp * max(1, nh_l // g)
+    pad_cfg = dataclasses.replace(cfg, n_layers=plan.n_layers_padded,
+                                  n_kv_heads=nkv)
+    c = M.init_cache(pad_cfg, batch, max_len, tp=1, dtype=dtype,
+                     enc_len=enc_len)
+    return jax.tree.map(
+        lambda a: a.reshape((plan.n_stages, plan.layers_per_stage) + a.shape[1:]),
+        c)
+
+
+def _restore_len(c_new, c_old):
+    """Copy 'len' counters back from c_old into c_new."""
+    def pick(path, new, old):
+        return old if getattr(path[-1], "key", None) == "len" else new
+    return jax.tree_util.tree_map_with_path(pick, c_new, c_old)
+
+
+def _advance_len(cache, q_len: int):
+    def bump(path, leaf):
+        return leaf + q_len if getattr(path[-1], "key", None) == "len" else leaf
+    return jax.tree_util.tree_map_with_path(bump, cache)
+
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
+                    pcfg: PipelineConfig, *, batch_sharded: bool = True,
+                    param_dtype=jnp.float32, cache_dtype=jnp.float32,
+                    max_len: int = 0, global_batch: int = 0, q_len: int = 1,
+                    enc_len: int = 0):
+    """Build the jitted pipelined decode/prefill step:
+    ``serve_step(params, cache, batch) -> (last_logits, cache)``.
+
+    ``q_len=1`` is one-token decode; ``q_len=seq`` is prefill (KV/SSM cache
+    populated, logits returned for the last position).  Micro-batches split
+    the batch dimension; the per-stage cache is [Lps, B_loc, ...] and each
+    tick dynamic-slices its micro-batch rows.  Cache ``len`` counters are
+    frozen during the tick scan (every micro-batch writes at the same
+    offset) and advanced once at the end.
+    """
+    shape_params = jax.eval_shape(
+        lambda k: ST.init_stacked_params(cfg, k, plan, param_dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    mesh_axes = tuple(mesh.axis_names)
+    batch_axes = _batch_axes(mesh, pcfg)
+    stage_ax = _stage_axes(mesh, pcfg)
+    S = _n_stages(mesh, pcfg)
+    assert plan.n_stages == S, \
+        f"stage plan ({plan.n_stages}) != mesh pipeline depth ({S})"
+    specs = ST.param_specs(cfg, shape_params, stage_axis=stage_ax,
+                           fsdp_axis="data" if cfg.fsdp else None,
+                           tensor_size=mesh.shape["tensor"])
+    M_ = pcfg.n_microbatches
+    fsdp_dims = ST.fsdp_scan_dims(specs) if cfg.fsdp else {}
+    ep_dp_axis = "data" if (cfg.moe and cfg.moe.ep_data) else None
+    ep_n_dp = mesh.shape["data"] if ep_dp_axis else 1
+
+    cache_shapes = jax.eval_shape(
+        functools.partial(init_pipeline_cache, cfg, plan, global_batch,
+                          max_len, dtype=cache_dtype, enc_len=enc_len))
+    cspecs = cache_specs(cfg, cache_shapes, batch_axes,
+                         b_sharded=batch_sharded, stage_axis=stage_ax)
+    batch_spec = dict(tokens=P(batch_axes if batch_sharded else None, None))
+    if cfg.family == "vlm":
+        batch_spec["pos3"] = P(None, batch_axes if batch_sharded else None, None)
+
+    def sharded_decode(params, cache, batch):
+        stage_idx = lax.axis_index(stage_ax)
+        tp_index = lax.axis_index("tensor")
+        smeta = ST.stacked_meta(cfg, plan)
+        smeta_local = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, stage_idx, 0, keepdims=False),
+            smeta)
+        lp_local = jax.tree.map(lambda a: a[0], params["layers"])
+        cache_local = jax.tree.map(lambda a: a[0], cache)
+
+        x_all = M.embed_tokens(cfg, params["embed"], batch["tokens"],
+                               "tensor", tp_index)           # [B_loc,q,d]
+        B_loc = x_all.shape[0]
+        assert B_loc % M_ == 0
+        mb = B_loc // M_
+        cur_len = jnp.asarray(M._cache_len(cache_local), jnp.int32)
+        pos1 = cur_len + jnp.arange(q_len, dtype=jnp.int32)
+        if cfg.family == "audio":
+            x_all = x_all + M.sinusoid_pos(
+                jnp.broadcast_to(pos1[None], (B_loc, q_len)),
+                cfg.d_model, x_all.dtype)
+        inj = x_all.reshape(M_, mb, q_len, -1)
+        if cfg.family == "audio":
+            # decode consumes the cross K/V cache; h_enc is vestigial
+            inj = dict(h_dec=inj,
+                       h_enc=jnp.zeros((M_, mb, 1, cfg.d_model), x_all.dtype))
+        pos = jnp.broadcast_to(pos1[None], (mb, q_len))
+        pos3 = None
+        if batch.get("pos3") is not None:
+            pos3 = jnp.moveaxis(batch["pos3"].reshape(3, M_, mb, q_len), 1, 0)
+
+        def tick(carry, t):
+            x_cur, cache_l, outbuf = carry
+            # micro-batch this stage works on at tick t
+            m_idx = t - stage_idx
+            valid = (m_idx >= 0) & (m_idx < M_)
+            mc = jnp.clip(m_idx, 0, M_ - 1)
+            x_in = jax.tree.map(
+                lambda q, c: jnp.where(stage_idx == 0,
+                                       q[jnp.clip(t, 0, M_ - 1)], c),
+                inj, x_cur)
+            # slice this micro-batch's cache rows
+            c_mb = jax.tree.map(
+                lambda a: lax.dynamic_slice_in_dim(a, mc * mb, mb, 1)
+                if a.ndim >= 2 else a, cache_l)
+            p3 = None if pos3 is None else pos3[mc]
+
+            def _run(args):
+                x_in, c_mb = args
+                y, _, c_new = apply_stage(
+                    cfg, lp_local, smeta_local, x_in, pos=pos, pos3=p3,
+                    cache=c_mb, tp_axis="tensor", tp_index=tp_index,
+                    dp_axis=ep_dp_axis, n_dp=ep_n_dp,
+                    fsdp_axis="data" if cfg.fsdp else None,
+                    fsdp_dims=fsdp_dims, remat="none",
+                    unroll=pcfg.inner_unroll)
+                return y, c_new
+
+            if pcfg.gate_ticks:
+                # validity is uniform across (data, tensor) for a fixed
+                # (stage, tick), so collectives inside the branch are safe
+                y, c_new = lax.cond(valid, _run, lambda a: a, (x_in, c_mb))
+            else:
+                y, c_new = _run((x_in, c_mb))
+            # write back only when this tick was valid for this stage;
+            # freeze 'len' counters (all micro-batches share the offset)
+            c_new = jax.tree.map(
+                lambda new, old: jnp.where(valid, new, old), c_new, c_mb)
+            c_new = _restore_len(c_new, c_mb)
+            cache_l = jax.tree.map(
+                lambda full, blk: lax.dynamic_update_slice_in_dim(
+                    full, blk.astype(full.dtype), mc * mb, 1)
+                if full.ndim >= 2 else blk, cache_l, c_new)
+            out_t = t - (S - 1)
+            oc = jnp.clip(out_t, 0, M_ - 1)
+            curo = lax.dynamic_index_in_dim(outbuf, oc, 0, keepdims=False)
+            wr = jnp.where((out_t >= 0) & (stage_idx == S - 1),
+                           _hidden_of(y)[:, -1:], curo)
+            outbuf = lax.dynamic_update_index_in_dim(outbuf, wr, oc, 0)
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm), y)
+            return (x_next, cache_l, outbuf), None
+
+        x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), inj)
+        outbuf0 = jnp.zeros((M_, mb, 1, cfg.d_model), x_all.dtype)
+        (_, cache_local, outbuf), _ = lax.scan(
+            tick, (x0, cache_local, outbuf0), jnp.arange(M_ + S - 1),
+            unroll=pcfg.tick_scan_unroll)
+        cache_local = _advance_len(cache_local, q_len)
+
+        h = LYR.rms_norm(outbuf.reshape(B_loc, 1, -1), params["final_norm"],
+                         cfg.norm_eps)
+        table = params.get("head", params["embed"])
+        logits = (h @ table.T).astype(jnp.float32)
+        # broadcast real logits from the last stage to every stage
+        on_last = (stage_idx == S - 1).astype(logits.dtype)
+        logits = lax.psum(logits * on_last, stage_ax)
+        new_cache = jax.tree.map(lambda a: a[None], cache_local)
+        return logits, new_cache
+
+    fn = shard_map(
+        sharded_decode, mesh=mesh,
+        in_specs=(specs, cspecs, batch_spec),
+        out_specs=(P(batch_axes if batch_sharded else None, None, "tensor"),
+                   cspecs),
+        check_rep=False)
+    return jax.jit(fn, donate_argnums=(1,)), specs, cspecs, cache_shapes

@@ -1,0 +1,168 @@
+"""Stage partitioning: ArchConfig -> stacked per-stage parameters + specs.
+
+The BaPipe partitioner decides *which contiguous layers* each stage owns;
+the SPMD runtime requires homogeneous stages, so layers are stacked to
+``[S, Lps, ...]`` (Lps = ceil(L/S)) with an ``active`` mask for the padded
+slots (inactive slots pass activations through unchanged and contribute
+zero gradient).  Padding waste is ≤ one layer per stage and is reported by
+the roofline tooling (MODEL_FLOPS / HLO_FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+# parameter-name classes for sharding rules -------------------------------
+_TP_LAST = {"wq", "wk", "wv", "wq_b", "wkv_b", "w1", "w3"}   # output-dim sharded
+_TP_PENULT = {"wo", "w2"}                                    # input-dim sharded
+_TP_EXPERT = {"we1", "we2", "we3"}                           # expert-dim sharded
+_FSDP_OK = _TP_LAST | _TP_PENULT | _TP_EXPERT | {"wq_a", "wkv_a", "in_proj",
+                                                 "router"}
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    n_stages: int
+    tensor: int
+    layers_per_stage: int
+    n_layers_padded: int
+
+    @property
+    def pad(self) -> int:
+        return self.n_layers_padded - 0
+
+
+def plan_stages(cfg: ArchConfig, n_stages: Optional[int] = None,
+                tensor: Optional[int] = None) -> StagePlan:
+    S = n_stages or cfg.stages
+    tp = tensor or cfg.tensor
+    lps = math.ceil(cfg.n_layers / S)
+    return StagePlan(n_stages=S, tensor=tp, layers_per_stage=lps,
+                     n_layers_padded=S * lps)
+
+
+def init_stacked_params(cfg: ArchConfig, key: jax.Array, plan: StagePlan,
+                        dtype=jnp.float32) -> dict:
+    """Global (unsharded-shape) parameters with layers stacked [S, Lps, ...].
+
+    Vocab is padded so the embedding shards evenly over the tensor axis.
+    """
+    pad_cfg = dataclasses.replace(cfg, vocab=cfg.padded_vocab(plan.tensor))
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    Lp = plan.n_layers_padded
+    layer_keys = jax.random.split(k_layers, Lp)
+    stacked = jax.vmap(lambda k: M.init_block(cfg, k, 1, dtype))(layer_keys)
+    stacked = jax.tree.map(
+        lambda a: a.reshape((plan.n_stages, plan.layers_per_stage) + a.shape[1:]),
+        stacked)
+    p = dict(
+        embed=jax.random.normal(k_emb, (pad_cfg.vocab, cfg.d_model), dtype)
+        / math.sqrt(cfg.d_model),
+        layers=stacked,
+        final_norm=jnp.zeros((cfg.d_model,), dtype),
+    )
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(k_out, (pad_cfg.vocab, cfg.d_model),
+                                      dtype) / math.sqrt(cfg.d_model)
+    return p
+
+
+def stacked_meta(cfg: ArchConfig, plan: StagePlan) -> dict:
+    """Per-layer metadata arrays reshaped to [S, Lps] (+ active mask)."""
+    meta = M.layer_meta(cfg)
+    Lp = plan.n_layers_padded
+    pad = Lp - cfg.n_layers
+
+    def expand(a):
+        if pad:
+            a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, 0)], 0)
+        return a.reshape(plan.n_stages, plan.layers_per_stage)
+
+    out = {k: expand(v) for k, v in meta.items()}
+    active = jnp.arange(Lp) < cfg.n_layers
+    out["active"] = active.reshape(plan.n_stages, plan.layers_per_stage)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpecs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ArchConfig, params: dict, *, stage_axis="stage",
+                tensor_axis="tensor", fsdp_axis=None,
+                tensor_size: Optional[int] = None) -> dict:
+    """PartitionSpec pytree matching ``init_stacked_params`` output.
+
+    If ``n_kv_heads`` doesn't divide the tensor axis, K/V projections are
+    replicated (each device slices the kv head it needs at apply time)."""
+    tp = tensor_size or cfg.tensor
+    kv_replicated = (cfg.attn_kind == "gqa" and cfg.n_kv_heads % tp != 0)
+
+    def leaf_spec(path, leaf):
+        keys = [getattr(pp, "key", getattr(pp, "name", None)) for pp in path]
+        name = keys[-1]
+        if keys[0] in ("embed", "head"):
+            return P(tensor_axis, None)
+        if keys[0] == "final_norm":
+            return P()
+        # layers: leading [S, Lps]; stage_axis may be a tuple (pod, stage)
+        nd = leaf.ndim
+        spec = [stage_axis, None] + [None] * (nd - 2)
+        if name in ("wk", "wv") and kv_replicated:
+            return P(*spec)
+        if name in _TP_EXPERT:
+            if cfg.moe is not None and cfg.moe.ep_data:
+                spec[2] = ("data", tensor_axis)   # expert parallel, data-major
+            else:
+                spec[2] = tensor_axis
+                if fsdp_axis and cfg.fsdp:
+                    spec[nd - 1] = fsdp_axis
+        elif name in _TP_LAST:
+            spec[nd - 1] = tensor_axis
+            if fsdp_axis and cfg.fsdp:
+                spec[nd - 2] = fsdp_axis
+        elif name in _TP_PENULT:
+            spec[nd - 2] = tensor_axis
+            if fsdp_axis and cfg.fsdp:
+                spec[nd - 1] = fsdp_axis
+        elif fsdp_axis and cfg.fsdp and name in _FSDP_OK and nd >= 3:
+            spec[nd - 1] = fsdp_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def fsdp_scan_dims(specs: dict) -> dict:
+    """Map layer-leaf name -> all_gather dim *after* the leading [S, Lps]
+    dims are stripped by shard_map + the layer scan."""
+    out: dict = {}
+
+    def visit(path, spec):
+        keys = [getattr(pp, "key", None) for pp in path]
+        name = keys[-1]
+        for i, s in enumerate(spec):
+            if s == "data":
+                out[name] = i - 2
+    jax.tree_util.tree_map_with_path(visit, specs["layers"])
+    return out
+
+
+def grad_sync_axes(spec: P, mesh_axes: tuple[str, ...]) -> tuple[str, ...]:
+    """Axes a leaf is replicated over (its gradient must be psum'd there)."""
+    used: set[str] = set()
+    for s in spec:
+        if s is None:
+            continue
+        if isinstance(s, tuple):
+            used.update(s)
+        else:
+            used.add(s)
+    return tuple(a for a in mesh_axes if a not in used)

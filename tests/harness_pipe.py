@@ -1,0 +1,227 @@
+"""Multi-device pipeline checks, run as a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (tests must not set the
+flag in-process: the main pytest process keeps 1 device).
+
+Usage: python tests/harness_pipe.py <mode> [arch]
+Prints 'OK <metric>' on success, raises otherwise.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.pipeline import runtime as RT
+from repro.pipeline import stage as ST
+
+TOL = 5e-5
+
+
+def _mesh(data, stages, tensor, pod=0):
+    shape = ((pod,) if pod else ()) + (data, stages, tensor)
+    axes = (("pod",) if pod else ()) + ("data", "stage", "tensor")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def _setup(arch, stages, tensor, fsdp=False, aux0=True):
+    cfg = get_config(arch).reduced(n_layers=4, d_model=128)
+    changes = dict(stages=stages, tensor=tensor, fsdp=fsdp)
+    if cfg.moe is not None and aux0:
+        changes["moe"] = dataclasses.replace(cfg.moe, router_aux_weight=0.0,
+                                             capacity_factor=8.0)
+    if cfg.family == "audio":
+        changes["n_enc_layers"] = 2
+    cfg = dataclasses.replace(cfg, **changes)
+    plan = ST.plan_stages(cfg)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    return cfg, plan, params
+
+
+def _batch(cfg, B, T):
+    kt, kl, kf = jax.random.split(jax.random.PRNGKey(3), 3)
+    b = dict(tokens=jax.random.randint(kt, (B, T), 0, cfg.vocab),
+             labels=jax.random.randint(kl, (B, T), 0, cfg.vocab))
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(kf, (B, 16, cfg.d_model))
+    if cfg.family == "vlm":
+        b["pos3"] = jnp.broadcast_to(jnp.arange(T)[None, None],
+                                     (3, B, T)).astype(jnp.int32)
+    return b
+
+
+def _ref_params(cfg, params):
+    rp = dict(embed=params["embed"],
+              layers=jax.tree.map(
+                  lambda a: a.reshape((-1,) + a.shape[2:])[:cfg.n_layers],
+                  params["layers"]),
+              final_norm=params["final_norm"])
+    if "head" in params:
+        rp["head"] = params["head"]
+    return rp
+
+
+def train_equivalence(arch, stages=2, tensor=2, fsdp=False, pod=0,
+                      pod_role="data"):
+    data = 8 // (stages * tensor * max(1, pod)) or 1
+    cfg, plan, params = _setup(arch, stages, tensor, fsdp)
+    mesh = _mesh(data, stages, tensor, pod)
+    pcfg = RT.PipelineConfig(n_microbatches=2, pod_role=pod_role)
+    step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+    batch = _batch(cfg, 8, 32)
+    loss, grads = step(params, batch)
+    rp = _ref_params(cfg, params)
+    ref_loss = M.loss_fn(cfg, rp, batch)
+    ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+    assert abs(float(loss) - float(ref_loss)) < 1e-4, \
+        (float(loss), float(ref_loss))
+    gp = jax.tree.map(
+        lambda a: np.asarray(a).reshape((-1,) + a.shape[2:])[:cfg.n_layers],
+        grads["layers"])
+    gr = jax.tree.map(np.asarray, ref_grads["layers"])
+    errs = jax.tree.map(
+        lambda a, b: float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)),
+        gp, gr)
+    worst = max(jax.tree.leaves(errs))
+    assert worst < 1e-4, worst
+    emb = float(np.max(np.abs(np.asarray(grads["embed"])
+                              - np.asarray(ref_grads["embed"]))))
+    assert emb < 1e-4 * (np.abs(np.asarray(ref_grads["embed"])).max() + 1), emb
+    print(f"OK gerr={worst:.2e}")
+
+
+def serve_equivalence(arch, stages=2, tensor=2):
+    data = 8 // (stages * tensor)
+    cfg, plan, params = _setup(arch, stages, tensor)
+    mesh = _mesh(data, stages, tensor)
+    B, steps, maxlen = 8, 4, 16
+    pcfg = RT.PipelineConfig(n_microbatches=2)
+    serve, _, cspecs, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
+                                             max_len=maxlen, global_batch=B)
+    cache = jax.jit(lambda: RT.init_pipeline_cache(cfg, plan, B, maxlen),
+                    out_shardings=jax.tree.map(
+                        lambda s: NamedSharding(mesh, s), cspecs))()
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, steps), 0, cfg.vocab)
+    got = []
+    for t in range(steps):
+        b = dict(tokens=toks[:, t:t + 1])
+        if cfg.family == "vlm":
+            b["pos3"] = jnp.full((3, B, 1), t, jnp.int32)
+        lg, cache = serve(params, cache, b)
+        got.append(np.asarray(lg[:, 0]))
+    rp = _ref_params(cfg, params)
+    rcache = M.init_cache(cfg, B, max_len=maxlen)
+    errs = []
+    for t in range(steps):
+        b = dict(tokens=toks[:, t:t + 1])
+        if cfg.family == "vlm":
+            b["pos3"] = jnp.full((3, B, 1), t, jnp.int32)
+        lg, rcache = M.decode_step(cfg, rp, b, rcache)
+        errs.append(float(np.max(np.abs(got[t] - np.asarray(lg[:, 0])))))
+    assert max(errs) < TOL, errs
+    print(f"OK maxerr={max(errs):.2e}")
+
+
+def train_loss_decreases(arch):
+    from repro.launch.train import main as train_main
+    losses = train_main(["--arch", arch, "--reduced", "--layers", "2",
+                         "--d-model", "128", "--data", "2", "--stages", "2",
+                         "--tensor", "2", "--steps", "60", "--batch", "8",
+                         "--seq", "64", "--lr", "6e-3", "--log-every", "30"])
+    first, last = sum(losses[:10]) / 10, sum(losses[-10:]) / 10
+    assert last < first - 0.3, (first, last)
+    print(f"OK loss {first:.3f}->{last:.3f}")
+
+
+def serve_driver(arch):
+    from repro.launch.serve import main as serve_main
+    toks = serve_main(["--arch", arch, "--reduced", "--data", "2",
+                       "--stages", "2", "--tensor", "2", "--batch", "8",
+                       "--prompt-len", "16", "--gen", "8"])
+    assert toks.shape == (8, 8)
+    print("OK")
+
+
+def moe_ep_data(arch="deepseek-v3-671b"):
+    train_equivalence(arch, stages=2, tensor=2)
+
+
+
+
+def pod_stage_equivalence():
+    import dataclasses as _dc
+    cfg = get_config("llama3.2-1b").reduced(n_layers=4, d_model=128)
+    cfg = _dc.replace(cfg, stages=2, tensor=2)
+    mesh = jax.make_mesh((2, 1, 2, 2), ("pod", "data", "stage", "tensor"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 4)
+    plan = ST.plan_stages(cfg, n_stages=4)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    pcfg = RT.PipelineConfig(n_microbatches=2, pod_role="stage")
+    step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+    batch = _batch(cfg, 8, 32)
+    loss, grads = step(params, batch)
+    rp = _ref_params(cfg, params)
+    ref_loss = M.loss_fn(cfg, rp, batch)
+    assert abs(float(loss) - float(ref_loss)) < 1e-4
+    ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+    gp = jax.tree.map(
+        lambda a: np.asarray(a).reshape((-1,) + a.shape[2:])[:cfg.n_layers],
+        grads["layers"])
+    gr = jax.tree.map(np.asarray, ref_grads["layers"])
+    errs = jax.tree.map(
+        lambda a, b: float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)),
+        gp, gr)
+    worst = max(jax.tree.leaves(errs))
+    assert worst < 1e-4, worst
+    print(f"OK gerr={worst:.2e}")
+
+
+def gated_serve(arch):
+    import dataclasses as _dc
+    tp = 1 if arch in ("mamba2-2.7b", "hymba-1.5b") else 2
+    cfg, plan, params = _setup(arch, 2, tp)
+    mesh = _mesh(8 // (2 * tp), 2, tp)
+    B, steps, maxlen = 8, 4, 16
+    pcfg = RT.PipelineConfig(n_microbatches=2, gate_ticks=True)
+    serve, _, cspecs, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
+                                             max_len=maxlen, global_batch=B)
+    cache = jax.jit(lambda: RT.init_pipeline_cache(cfg, plan, B, maxlen),
+                    out_shardings=jax.tree.map(
+                        lambda s: NamedSharding(mesh, s), cspecs))()
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, steps), 0, cfg.vocab)
+    got = []
+    for t in range(steps):
+        lg, cache = serve(params, cache, dict(tokens=toks[:, t:t + 1]))
+        got.append(np.asarray(lg[:, 0]))
+    rp = _ref_params(cfg, params)
+    rcache = M.init_cache(cfg, B, max_len=maxlen)
+    errs = []
+    for t in range(steps):
+        lg, rcache = M.decode_step(cfg, rp, dict(tokens=toks[:, t:t + 1]),
+                                   rcache)
+        errs.append(float(np.max(np.abs(got[t] - np.asarray(lg[:, 0])))))
+    assert max(errs) < TOL, errs
+    print(f"OK maxerr={max(errs):.2e}")
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1]
+    args = [int(a) if a.lstrip("-").isdigit() else a for a in sys.argv[2:]]
+    {"train_equivalence": train_equivalence,
+     "serve_equivalence": serve_equivalence,
+     "train_loss_decreases": train_loss_decreases,
+     "serve_driver": serve_driver,
+     "moe_ep_data": moe_ep_data,
+     "pod_stage_equivalence": pod_stage_equivalence,
+     "gated_serve": gated_serve,
+     }[mode](*args)

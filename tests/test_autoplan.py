@@ -1,0 +1,38 @@
+"""Auto-planner: the explorer's choices respect architecture constraints
+and scale intuition."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.autoplan import auto_plan
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-2.7b",
+                                  "deepseek-v2-lite-16b", "whisper-base",
+                                  "gemma3-1b", "qwen3-1.7b"])
+def test_autoplan_valid_factorisation(arch):
+    cfg = get_config(arch)
+    p = auto_plan(cfg, global_batch=256, seq_len=4096)
+    assert p.stages * p.tensor == 16
+    assert p.stages <= cfg.n_layers
+    if cfg.ssm is not None:
+        assert p.tensor == 1          # SSM blocks are never tensor-sharded
+    else:
+        assert cfg.n_heads % p.tensor == 0 or p.tensor == 1
+    assert p.n_microbatches >= 1
+    assert p.predicted_step_time > 0
+
+
+def test_autoplan_ssm_forces_deep_pipeline():
+    p = auto_plan(get_config("mamba2-2.7b"), global_batch=256, seq_len=4096)
+    assert p.tensor == 1 and p.stages == 16
+
+
+def test_autoplan_shallow_model_avoids_deep_pipeline():
+    p = auto_plan(get_config("whisper-base"), global_batch=256, seq_len=4096)
+    assert p.stages <= 4              # only 6 layers
+
+
+def test_autoplan_m_divides_local_batch():
+    p = auto_plan(get_config("llama3.2-1b"), global_batch=256, seq_len=4096,
+                  data_axis=16)
+    assert (256 // 16) % p.n_microbatches == 0

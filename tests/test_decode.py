@@ -1,0 +1,83 @@
+"""Serving invariant: cached decode token-by-token == teacher-forced full
+forward, for every architecture family (GQA / MLA-absorbed / SSM recurrent
+/ hybrid / enc-dec cross-cache).
+
+MoE note: token-choice capacity C scales with the number of tokens in the
+pass, so a capacity-dropping full pass is NOT bitwise-reproducible by
+1-token decode.  The equivalence tests raise capacity_factor so nothing
+drops; capacity-drop behaviour itself is covered in test_substrates.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_arch_ids, get_config
+from repro.models import model as M
+
+
+def _nodrop(cfg):
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=16.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_decode_matches_full_forward(arch):
+    cfg = _nodrop(get_config(arch).reduced())
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, T, S = 2, 16, 32
+    kt, kf = jax.random.split(jax.random.PRNGKey(2))
+    toks = jax.random.randint(kt, (B, T), 0, cfg.vocab)
+    batch = dict(tokens=toks)
+    enc_len = 0
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(kf, (B, S, cfg.d_model))
+        enc_len = S
+    if cfg.family == "vlm":
+        batch["pos3"] = jnp.broadcast_to(
+            jnp.arange(T)[None, None], (3, B, T)).astype(jnp.int32)
+    x, _, _ = M.forward(cfg, params, batch)
+    table = params.get("head", params["embed"])
+    full_logits = x @ table.T
+
+    cache = M.init_cache(cfg, B, max_len=T, enc_len=enc_len)
+    if cfg.family == "audio":
+        cache = M.prefill_audio_cache(cfg, params, batch["frames"], cache)
+    outs = []
+    for t in range(T):
+        b = dict(tokens=toks[:, t:t + 1])
+        if cfg.family == "vlm":
+            b["pos3"] = jnp.full((3, B, 1), t, jnp.int32)
+        lg, cache = M.decode_step(cfg, params, b, cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    err = float(jnp.max(jnp.abs(dec - full_logits)))
+    assert err < 5e-5, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-2.7b",
+                                  "deepseek-v2-lite-16b"])
+def test_prefill_then_decode_matches(arch):
+    """Chunked prefill into the cache, then decode continues correctly."""
+    cfg = _nodrop(get_config(arch).reduced())
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, T), 0, cfg.vocab)
+    x, _, _ = M.forward(cfg, params, dict(tokens=toks))
+    table = params.get("head", params["embed"])
+    full_logits = x @ table.T
+
+    cache = M.init_cache(cfg, B, max_len=T)
+    # prefill first half in one shot
+    half = T // 2
+    lg, cache = M.decode_step(cfg, params, dict(tokens=toks[:, :half]), cache)
+    assert float(jnp.max(jnp.abs(lg[:, -1] - full_logits[:, half - 1]))) < 5e-5
+    # then token-by-token
+    for t in range(half, T):
+        lg, cache = M.decode_step(cfg, params, dict(tokens=toks[:, t:t + 1]),
+                                  cache)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, t])))
+        assert err < 5e-5, (arch, t, err)

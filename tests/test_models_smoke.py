@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned
+architecture runs one forward + one train step on CPU; output shapes and
+finiteness asserted.  (Full configs are exercised by the dry-run only.)"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_arch_ids, get_config
+from repro.configs.base import INPUT_SHAPES, LONG_CONTEXT_OK
+from repro.models import model as M
+from repro.optim import AdamW
+
+ARCHS = all_arch_ids()
+
+
+def make_batch(cfg, B=2, T=64, seed=1):
+    kt, kl, kf = jax.random.split(jax.random.PRNGKey(seed), 3)
+    batch = dict(tokens=jax.random.randint(kt, (B, T), 0, cfg.vocab),
+                 labels=jax.random.randint(kl, (B, T), 0, cfg.vocab))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(kf, (B, 32, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(kf, (B, T, cfg.d_model))
+        batch["pos3"] = jnp.broadcast_to(
+            jnp.arange(T)[None, None], (3, B, T)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_routed <= 4
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    h, aux, _ = M.forward(cfg, params, batch)
+    assert h.shape == (2, 64, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) ** 0.5
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    opt = AdamW(lr=1e-3)
+    state = opt.init(params)
+    new_params, state = opt.update(params, grads, state)
+    # params actually moved
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(new_params),
+                                jax.tree.leaves(params)))
+    assert delta > 0
+    loss2 = M.loss_fn(cfg, new_params, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v), arch
+        assert cfg.stages * cfg.tensor == 16, arch
+
+
+def test_family_features_present():
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+    assert get_config("hymba-1.5b").ssm.d_state == 16
+    assert get_config("deepseek-v3-671b").moe.n_routed == 256
+    assert get_config("deepseek-v3-671b").moe.top_k == 8
+    assert get_config("deepseek-v2-lite-16b").moe.top_k == 6
+    assert get_config("deepseek-v2-lite-16b").mla.kv_lora_rank == 512
+    assert get_config("gemma3-1b").global_every == 6
+    assert get_config("gemma3-1b").window == 512
+    assert get_config("qwen3-1.7b").qk_norm
+    assert get_config("qwen2-vl-7b").mrope_sections == (16, 24, 24)
+    assert get_config("whisper-base").n_enc_layers == 3
+    assert get_config("llama3.2-1b").rope_theta == 500_000.0
+
+
+def test_long_context_policy():
+    assert LONG_CONTEXT_OK == {"mamba2-2.7b", "hymba-1.5b", "gemma3-1b"}
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "llama3.2-1b",
+                                  "deepseek-v2-lite-16b"])
+def test_param_counts_roughly_match_model_size(arch):
+    """Analytic parameter counts land near the advertised model size."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {"minicpm3-4b": 4.0e9, "llama3.2-1b": 1.24e9,
+                "deepseek-v2-lite-16b": 15.7e9}[arch]
+    assert 0.6 * expected < n < 1.5 * expected, (arch, n)

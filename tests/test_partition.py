@@ -1,0 +1,142 @@
+"""Balanced-partition exploration: DP optimality, Eq.(1), comm coarse
+graining, memory fine-tuning, heterogeneous clusters."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as PT
+from repro.core.hardware import (DeviceSpec, V100, VCU118, VCU129,
+                                 heterogeneous_cluster, homogeneous_cluster)
+from repro.core.profiler import LayerProfile, NetworkProfile, fwd_time, bwd_time
+
+
+def toy_profile(costs, acts=None, weights=None):
+    acts = acts or [1e6] * len(costs)
+    weights = weights or [1e6] * len(costs)
+    layers = tuple(LayerProfile(name=f"l{i}", flops_fwd=c * 1e9,
+                                bytes_weights=w, bytes_act_out=a)
+                   for i, (c, a, w) in enumerate(zip(costs, acts, weights)))
+    return NetworkProfile("toy", layers, unit="sample")
+
+
+FAST = DeviceSpec("fast", 100e12, 1e12, 16e9, 100e9, efficiency=1.0)
+SLOW = DeviceSpec("slow", 25e12, 1e12, 16e9, 100e9, efficiency=1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(costs=st.lists(st.floats(0.1, 10.0), min_size=4, max_size=9),
+       n=st.integers(2, 3))
+def test_dp_partition_is_optimal(costs, n):
+    """The O(L^2 N) DP equals brute force over all contiguous partitions."""
+    prof = toy_profile(costs)
+    cl = homogeneous_cluster(FAST, n)
+    plan = PT.dp_partition(prof, cl, mb=1, overlap=True,
+                           include_embed_head=False)
+    L = len(costs)
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, L), n - 1):
+        bounds = list(zip((0,) + cuts, cuts + (L,)))
+        bott = max(
+            PT._range_cost(prof, cl, i, s, e, 1, False).total(True)
+            for i, (s, e) in enumerate(bounds))
+        best = min(best, bott)
+    assert plan.bottleneck == pytest.approx(best, rel=1e-9)
+
+
+def test_partition_covers_all_layers_contiguously():
+    prof = toy_profile([1.0] * 12)
+    plan = PT.dp_partition(prof, homogeneous_cluster(FAST, 4), mb=4)
+    assert plan.bounds[0][0] == 0 and plan.bounds[-1][1] == 12
+    for (s0, e0), (s1, e1) in zip(plan.bounds, plan.bounds[1:]):
+        assert e0 == s1 and e0 > s0
+
+
+def test_heterogeneous_faster_device_gets_more_layers():
+    prof = toy_profile([1.0] * 10)
+    cl = heterogeneous_cluster([FAST, SLOW])
+    plan = PT.dp_partition(prof, cl, mb=1, include_embed_head=False)
+    n_fast, n_slow = plan.layers_per_stage()
+    assert n_fast > n_slow
+
+
+def test_eq1_targets_harmonic_mean():
+    prof = toy_profile([1.0] * 8)
+    cl = heterogeneous_cluster([FAST, SLOW])
+    t = PT.eq1_targets(prof, cl, mb=1)
+    t_fast = sum(fwd_time(l, FAST, 1) + bwd_time(l, FAST, 1)
+                 for l in prof.layers)
+    t_slow = sum(fwd_time(l, SLOW, 1) + bwd_time(l, SLOW, 1)
+                 for l in prof.layers)
+    expect = 1.0 / (1.0 / t_fast + 1.0 / t_slow)
+    assert t[0] == pytest.approx(expect)
+
+
+def test_eq1_partition_close_to_dp():
+    prof = toy_profile([1.0] * 16)
+    cl = homogeneous_cluster(FAST, 4)
+    eq1 = PT.eq1_partition(prof, cl, mb=1)
+    dp = PT.dp_partition(prof, cl, mb=1)
+    assert eq1.bottleneck <= dp.bottleneck * 1.5 + 1e-12
+
+
+def test_coarse_cuts_threshold():
+    acts = [1e12 if i % 2 == 0 else 1e3 for i in range(8)]
+    prof = toy_profile([1.0] * 8, acts=acts)
+    cuts = PT.coarse_cuts(prof, a_th=1e4)
+    assert cuts == {2, 4, 6}       # cut k allowed iff act of layer k-1 small
+
+
+def test_dp_respects_allowed_cuts():
+    prof = toy_profile([1.0] * 8)
+    cl = homogeneous_cluster(FAST, 3)
+    plan = PT.dp_partition(prof, cl, mb=1, allowed_cuts={3, 5},
+                           include_embed_head=False)
+    assert plan.bounds == ((0, 3), (3, 5), (5, 8))
+
+
+def test_coarse_partition_avoids_comm_bound_boundaries():
+    """Only the boundary after layer 5 is cheap; the balanced cut (4) would
+    be comm-bound.  The explorer's comm-aware flow (DP with comm in the
+    cost, coarse-graining as the search restriction) must choose the cheap
+    boundary and end comm-free."""
+    costs = [1.0] * 8
+    acts = [1e12] * 8
+    acts[5] = 1e3                   # cut 6 is the only cheap boundary
+    prof = toy_profile(costs, acts=acts)
+    dev = DeviceSpec("slowlink", 100e12, 1e12, 16e9, 1e9, efficiency=1.0)
+    cl = homogeneous_cluster(dev, 2)
+    coarse = PT.coarse_partition(prof, cl, mb=1, overlap=True)
+    assert not PT.comm_bound(coarse)
+    assert coarse.bounds == ((0, 6), (6, 8))
+    # and a plan forced through an expensive boundary IS comm-bound
+    forced = PT.dp_partition(prof, cl, mb=1, allowed_cuts={4},
+                             include_embed_head=False)
+    assert PT.comm_bound(forced)
+
+
+def test_memory_fine_tune_respects_capacity():
+    costs = [1.0] * 8
+    weights = [7e9, 2e9] + [0.5e9] * 6     # stage 0 (l0,l1) would blow 16GB
+    prof = toy_profile(costs, weights=weights)
+    cl = homogeneous_cluster(FAST, 4)
+    plan = PT.dp_partition(prof, cl, mb=1, include_embed_head=False)
+    tuned, ok = PT.memory_fine_tune(prof, cl, plan, mb=1, feat_mult=1, M=8)
+    assert ok
+    mem = PT.stage_memory(tuned, 1, 8)
+    for m, d in zip(mem, cl.devices):
+        assert m <= d.memory_capacity
+
+
+def test_intra_layer_refine_never_hurts():
+    prof = toy_profile([5.0, 1.0, 1.0, 1.0, 1.0, 5.0])
+    cl = homogeneous_cluster(FAST, 3)
+    plan = PT.dp_partition(prof, cl, mb=1, include_embed_head=False)
+    refined = PT.intra_layer_refine(prof, cl, plan, mb=1)
+    assert refined.bottleneck <= plan.bottleneck + 1e-12
+
+
+def test_fpga_specs_from_paper_table5():
+    assert VCU129.peak_flops > VCU118.peak_flops        # 12288 vs 6840 DSP
+    assert VCU129.memory_capacity > VCU118.memory_capacity
+    assert VCU118.async_capable and not V100.async_capable

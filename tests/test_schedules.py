@@ -1,0 +1,93 @@
+"""Paper Tables 1 & 2 closed forms vs the discrete-event simulator."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules as S
+from repro.core.simulator import simulate
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=st.integers(1, 24), N=st.integers(1, 6),
+       F=st.floats(0.1, 5.0), B=st.floats(0.1, 5.0))
+def test_async_schedules_match_closed_form(M, N, F, B):
+    """Table 1: both async schedules give (M+N-1)(F+B) with free comm."""
+    for name in ("1F1B-AS", "FBP-AS"):
+        sim = simulate(name, M, N, F, B, 0.0)
+        ev = S.SCHEDULES[name](M, N, F, B, 0.0, 1.0, 1.0)
+        assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=st.integers(1, 24), N=st.integers(1, 6),
+       FB=st.floats(0.2, 5.0), SR=st.floats(0.0, 0.15))
+def test_1f1b_so_matches_closed_form(M, N, FB, SR):
+    """Table 2, 1F1B-SO: doubled warm-up fully hides comm latency."""
+    SR = min(SR, FB / 2)     # paper premise: comm hideable under compute
+    sim = simulate("1F1B-SO", M, N, FB, FB, SR)
+    ev = S.eval_1f1b_so(M, N, FB, FB, SR, 1.0, 1.0)
+    assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(N=st.integers(1, 6), FB=st.floats(0.2, 5.0), SR=st.floats(0.0, 0.2))
+def test_1f1b_sno_exact_at_single_microbatch(N, FB, SR):
+    sim = simulate("1F1B-SNO", 1, N, FB, FB, SR)
+    ev = S.eval_1f1b_sno(1, N, FB, FB, SR, 1.0, 1.0)
+    assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(M=st.integers(1, 16), N=st.integers(1, 5),
+       FB=st.floats(0.2, 5.0), SR=st.floats(0.0, 0.1))
+def test_sno_bracket(M, N, FB, SR):
+    """The closed-form SNO time sits between SO (full overlap) and the
+    simulator's conservative eager-blocking model."""
+    so = S.eval_1f1b_so(M, N, FB, FB, SR, 1.0, 1.0).minibatch_time
+    sno = S.eval_1f1b_sno(M, N, FB, FB, SR, 1.0, 1.0).minibatch_time
+    sim = simulate("1F1B-SNO", M, N, FB, FB, SR).makespan
+    assert so <= sno + 1e-9
+    assert sno <= sim + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(M=st.integers(2, 24), N=st.integers(2, 6))
+def test_features_memory_counts(M, N):
+    """Features-memory rows: peak live activations ~ (N-i+1) for 1F1B and
+    ~ 2(N-i+1) for FBP/SO (within one micro-batch, capped by M)."""
+    one = simulate("1F1B-AS", M, N, 1.0, 1.0, 0.0)
+    two = simulate("FBP-AS", M, N, 1.0, 1.0, 0.0)
+    for i in range(N):
+        want1 = min(M, N - i)
+        want2 = min(M, 2 * (N - i) - 1)
+        assert abs(one.peak_live[i] - want1) <= 1
+        assert abs(two.peak_live[i] - want2) <= 1
+        assert two.peak_live[i] >= one.peak_live[i]
+
+
+def test_bubble_fraction_shrinks_with_M():
+    prev = 1.0
+    for M in (2, 4, 8, 16, 32):
+        ev = S.eval_1f1b_as(M, 4, 1.0, 1.0, 0.0, 1.0, 1.0)
+        assert ev.bubble_fraction < prev
+        prev = ev.bubble_fraction
+    assert prev == pytest.approx(3 / 35)
+
+
+def test_bandwidth_demand_ordering():
+    """Table 1: FBP-AS demands less bandwidth than 1F1B-AS (2a/(F+B) < a/F)."""
+    as_ = S.eval_1f1b_as(8, 4, 1.0, 1.5, 0.0, 10.0, 1.0)
+    fbp = S.eval_fbp_as(8, 4, 1.0, 1.5, 0.0, 10.0, 1.0)
+    assert fbp.bandwidth_demand < as_.bandwidth_demand
+
+
+def test_hardware_gating():
+    assert S.schedules_for(True) == ("1F1B-AS", "FBP-AS")
+    assert S.schedules_for(False) == ("1F1B-SNO", "1F1B-SO")
+
+
+def test_heterogeneous_stage_times_supported():
+    r = simulate("1F1B-AS", 6, 3, [1.0, 2.0, 1.0], [2.0, 3.0, 2.0], 0.0)
+    # bottleneck stage (F+B = 5) dominates: makespan >= M * 5
+    assert r.makespan >= 6 * 5.0
