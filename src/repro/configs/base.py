@@ -90,6 +90,7 @@ class ArchConfig:
     # BaPipe pipeline defaults (stage * tensor == mesh "model" axis size) ------
     stages: int = 16
     tensor: int = 1
+    virtual: int = 1                 # 1F1B-I virtual stages (chunks) per device
     fsdp: bool = False               # shard stage weights over "data" axis too
 
     # ----------------------------------------------------------------------
@@ -134,7 +135,8 @@ class ArchConfig:
         changes: dict = dict(
             n_layers=n_layers, d_model=d_model, n_heads=n_heads,
             n_kv_heads=n_kv, head_dim=hd, d_ff=2 * d_model,
-            vocab=min(self.vocab, 1024), stages=1, tensor=1, fsdp=False,
+            vocab=min(self.vocab, 1024), stages=1, tensor=1, virtual=1,
+            fsdp=False,
         )
         if self.mla is not None:
             changes["mla"] = MLAConfig(

@@ -31,10 +31,12 @@ class AutoPlan:
     schedule: str
     predicted_step_time: float
     predicted_speedup_over_dp: float
+    virtual: int = 1                 # 1F1B-I interleave depth (V)
 
     def apply(self, cfg: ArchConfig) -> ArchConfig:
         return dataclasses.replace(cfg, stages=self.stages,
-                                   tensor=self.tensor)
+                                   tensor=self.tensor,
+                                   virtual=self.virtual)
 
 
 def _stage_device(base: DeviceSpec, tensor: int) -> DeviceSpec:
@@ -84,7 +86,8 @@ def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
         cand = AutoPlan(stages=s, tensor=t, n_microbatches=max(1, r.M),
                         schedule=r.schedule or "1F1B-AS",
                         predicted_step_time=r.minibatch_time,
-                        predicted_speedup_over_dp=r.speedup_over_dp)
+                        predicted_speedup_over_dp=r.speedup_over_dp,
+                        virtual=r.V)
         if best is None or cand.predicted_step_time < best.predicted_step_time:
             best = cand
     if best is None:

@@ -12,12 +12,15 @@ from typing import Optional, Sequence
 
 from repro.core.hardware import ClusterSpec
 from repro.core.partition import (PartitionPlan, comm_bound, coarse_partition,
-                                  dp_partition, intra_layer_refine,
-                                  memory_fine_tune, stage_memory)
+                                  dp_partition, interleaved_partition,
+                                  intra_layer_refine, memory_fine_tune,
+                                  stage_memory)
 from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
-from repro.core.schedules import SCHEDULES, ScheduleEval, schedules_for
+from repro.core.schedules import (SCHEDULES, ScheduleEval,
+                                  eval_1f1b_interleaved, schedules_for)
 
-FEAT_MULT = {"1F1B-AS": 1, "FBP-AS": 2, "1F1B-SNO": 1, "1F1B-SO": 2}
+FEAT_MULT = {"1F1B-AS": 1, "FBP-AS": 2, "1F1B-SNO": 1, "1F1B-SO": 2,
+             "1F1B-I": 1}
 
 
 @dataclasses.dataclass
@@ -33,6 +36,7 @@ class ExplorationResult:
     sched_eval: Optional[ScheduleEval] = None
     dp_time: float = float("inf")
     dp_feasible: bool = False
+    V: int = 1                      # virtual-stage interleave depth (1F1B-I)
 
     @property
     def speedup_over_dp(self) -> float:
@@ -89,8 +93,14 @@ def _candidate_Ms(minibatch: int, n_stages: int) -> list[int]:
 
 def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
             candidate_Ms: Optional[Sequence[int]] = None,
-            consider_dp: bool = True) -> ExplorationResult:
-    """Run the full BaPipe exploration and return the chosen plan."""
+            consider_dp: bool = True,
+            candidate_Vs: Sequence[int] = (2, 4)) -> ExplorationResult:
+    """Run the full BaPipe exploration and return the chosen plan.
+
+    ``candidate_Vs`` are the interleave depths tried for ``1F1B-I`` (async
+    clusters only); V=1 of 1F1B-I is identical to 1F1B-AS, which is always
+    searched, so only V > 1 is explored here.
+    """
     N = cluster.n
     dp_t, dp_mem, dp_ok = dp_time_and_memory(prof, cluster, minibatch)
     async_ok = all(d.async_capable for d in cluster.devices)
@@ -102,51 +112,67 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
         # async schedules fully overlap comm; sync-overlap hides comm too,
         # sync-no-overlap pays it on the critical path.
         overlap = sched != "1F1B-SNO"
-        for M in Ms:
-            if M < 1 or minibatch // M < 1:
-                continue
-            mb = minibatch // M
-            plan = dp_partition(prof, cluster, mb, overlap=overlap)
-            if comm_bound(plan):
-                plan = coarse_partition(prof, cluster, mb, overlap)
-            plan, mem_ok = memory_fine_tune(prof, cluster, plan, mb,
-                                            feat_mult, M)
-            if not comm_bound(plan):
-                # intra-layer (fractional) balancing LAST — memory
-                # fine-tuning re-finalises integer bounds and would
-                # discard the fractional shifts
-                plan = intra_layer_refine(prof, cluster, plan, mb)
-            F, B = plan.bottleneck_FB()
-            SR = max((max(c.comm_in, c.comm_out) for c in plan.stage_costs),
-                     default=0.0)
-            a = plan.max_boundary_act()
-            w = max(c.weight_bytes for c in plan.stage_costs)
-            ev = SCHEDULES[sched](M, N, F, B, SR, a, w)
-            mem = stage_memory(plan, feat_mult, M)
-            t = ev.minibatch_time
-            if not mem_ok:
-                # paper §4.3: weights kept on-chip "as much as possible";
-                # the remainder streams from the spill tier every micro-batch
-                spill_bw = min(d.spill_bandwidth for d in cluster.devices)
-                if spill_bw <= 0:
+        if sched == "1F1B-I":
+            # a device must own V chunks of >= 1 layer each
+            Vs = tuple(v for v in candidate_Vs
+                       if v > 1 and N * v <= prof.n_layers)
+        else:
+            Vs = (1,)
+        for V in Vs:
+            for M in Ms:
+                if M < 1 or minibatch // M < 1:
                     continue
-                spill = max(m - d.memory_capacity
-                            for m, d in zip(mem, cluster.devices))
-                t += M * spill / spill_bw
-            cand = ExplorationResult(
-                mode="pipeline", schedule=sched, M=M, microbatch=mb,
-                plan=plan, minibatch_time=t,
-                per_stage_memory=mem, feasible=True, sched_eval=ev,
-                dp_time=dp_t, dp_feasible=dp_ok)
-            if best is None or cand.minibatch_time < best.minibatch_time \
-                    * 0.999:
-                best = cand
-            elif (cand.minibatch_time < best.minibatch_time * 1.001
-                  and best.sched_eval is not None
-                  and ev.bandwidth_demand < best.sched_eval.bandwidth_demand):
-                # tie-break on demanded link bandwidth (paper §3.2.1: FPGAs
-                # pick FBP-AS when times tie — gentler 2a/(F+B) demand)
-                best = cand
+                if V > 1 and M < N:
+                    continue       # 1F1B-I streaming constraint (M >= N)
+                mb = minibatch // M
+                plan = interleaved_partition(prof, cluster, mb, V,
+                                             overlap=overlap)
+                if comm_bound(plan):
+                    plan = coarse_partition(prof, cluster, mb, overlap, V=V)
+                plan, mem_ok = memory_fine_tune(prof, cluster, plan, mb,
+                                                feat_mult, M)
+                if not comm_bound(plan) and V == 1:
+                    # intra-layer (fractional) balancing LAST — memory
+                    # fine-tuning re-finalises integer bounds and would
+                    # discard the fractional shifts
+                    plan = intra_layer_refine(prof, cluster, plan, mb)
+                F, B = plan.bottleneck_FB()
+                SR = max((max(c.comm_in, c.comm_out)
+                          for c in plan.stage_costs), default=0.0)
+                a = plan.max_boundary_act()
+                w = max(c.weight_bytes for c in plan.device_costs())
+                if V > 1:
+                    ev = eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=V)
+                else:
+                    ev = SCHEDULES[sched](M, N, F, B, SR, a, w)
+                mem = stage_memory(plan, feat_mult, M)
+                t = ev.minibatch_time
+                if not mem_ok:
+                    # paper §4.3: weights kept on-chip "as much as
+                    # possible"; the remainder streams from the spill tier
+                    # every micro-batch
+                    spill_bw = min(d.spill_bandwidth for d in cluster.devices)
+                    if spill_bw <= 0:
+                        continue
+                    spill = max(m - d.memory_capacity
+                                for m, d in zip(mem, cluster.devices))
+                    t += M * spill / spill_bw
+                cand = ExplorationResult(
+                    mode="pipeline", schedule=sched, M=M, microbatch=mb,
+                    plan=plan, minibatch_time=t,
+                    per_stage_memory=mem, feasible=True, sched_eval=ev,
+                    dp_time=dp_t, dp_feasible=dp_ok, V=V)
+                if best is None or cand.minibatch_time < best.minibatch_time \
+                        * 0.999:
+                    best = cand
+                elif (cand.minibatch_time < best.minibatch_time * 1.001
+                      and best.sched_eval is not None
+                      and ev.bandwidth_demand
+                      < best.sched_eval.bandwidth_demand):
+                    # tie-break on demanded link bandwidth (paper §3.2.1:
+                    # FPGAs pick FBP-AS when times tie — gentler 2a/(F+B)
+                    # demand)
+                    best = cand
     if best is None:
         best = ExplorationResult(
             mode="pipeline", schedule=scheds[0], M=1, microbatch=minibatch,

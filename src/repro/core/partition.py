@@ -47,29 +47,56 @@ class StageCost:
 
 @dataclasses.dataclass
 class PartitionPlan:
-    bounds: tuple[tuple[int, int], ...]     # per-stage [start, end) layer range
+    """``bounds``/``stage_costs`` have one entry per *chunk*: N entries for
+    the contiguous schedules (V == 1), N*V entries for interleaved plans
+    where chunk (virtual stage) ``v*N + n`` runs on physical device n."""
+
+    bounds: tuple[tuple[int, int], ...]     # per-chunk [start, end) layer range
     stage_costs: tuple[StageCost, ...]
     bottleneck: float                        # max per-stage total time
     overlap: bool
     frac_shift: tuple[float, ...] = ()       # intra-layer fractional refinement
+    V: int = 1                               # virtual-stage interleave depth
 
     @property
     def n_stages(self) -> int:
-        return len(self.bounds)
+        """Number of physical devices (pipeline stages)."""
+        return len(self.bounds) // self.V
 
     def layers_per_stage(self) -> list[int]:
         return [e - s for s, e in self.bounds]
 
+    def device_chunks(self, n: int) -> list[int]:
+        """Chunk indices owned by device n (Megatron-style assignment)."""
+        return [v * self.n_stages + n for v in range(self.V)]
+
+    def device_costs(self) -> tuple[StageCost, ...]:
+        """Per-physical-device costs: a device's V chunks aggregated
+        (compute and weights sum; boundary terms take the worst chunk)."""
+        if self.V == 1:
+            return self.stage_costs
+        out = []
+        for n in range(self.n_stages):
+            cs = [self.stage_costs[j] for j in self.device_chunks(n)]
+            out.append(StageCost(
+                fwd=sum(c.fwd for c in cs),
+                bwd=sum(c.bwd for c in cs),
+                comm_in=max(c.comm_in for c in cs),
+                comm_out=max(c.comm_out for c in cs),
+                weight_bytes=sum(c.weight_bytes for c in cs),
+                act_out_bytes=max(c.act_out_bytes for c in cs)))
+        return tuple(out)
+
     def balanced_F(self) -> float:
-        return max(c.fwd for c in self.stage_costs)
+        return max(c.fwd for c in self.device_costs())
 
     def balanced_B(self) -> float:
-        return max(c.bwd for c in self.stage_costs)
+        return max(c.bwd for c in self.device_costs())
 
     def bottleneck_FB(self) -> tuple[float, float]:
-        """(fwd, bwd) of the bottleneck-compute stage (the pair the
+        """(fwd, bwd) of the bottleneck-compute device (the pair the
         schedule formulas should see — independent maxima overcount)."""
-        c = max(self.stage_costs, key=lambda c: c.compute())
+        c = max(self.device_costs(), key=lambda c: c.compute())
         return c.fwd, c.bwd
 
     def max_boundary_act(self) -> float:
@@ -231,6 +258,41 @@ def _finalize(prof: NetworkProfile, cluster: ClusterSpec,
 
 
 # ---------------------------------------------------------------------------
+# Interleaved (virtual-stage) partition: a device owns V non-contiguous
+# layer chunks; chunk v*N + n runs on device n.
+# ---------------------------------------------------------------------------
+
+def virtual_cluster(cluster: ClusterSpec, V: int) -> ClusterSpec:
+    """Expand an N-device chain into the N*V virtual-stage chain; virtual
+    stage i runs on device ``i % N``, so boundary link bandwidths between
+    consecutive virtual stages land on the right physical links (including
+    the device N-1 -> device 0 wrap links between chunk passes)."""
+    if V == 1:
+        return cluster
+    return ClusterSpec(devices=tuple(
+        cluster.devices[i % cluster.n] for i in range(cluster.n * V)))
+
+
+def interleaved_partition(prof: NetworkProfile, cluster: ClusterSpec,
+                          mb: int, V: int, overlap: bool = True,
+                          allowed_cuts: Optional[set[int]] = None
+                          ) -> PartitionPlan:
+    """Balanced partition of L layers into N*V virtual-stage chunks for the
+    interleaved ``1F1B-I`` schedule.  Runs the same bottleneck DP over the
+    expanded virtual-device chain, then tags the plan with V so device-level
+    accessors (``device_costs``/``bottleneck_FB``/``stage_memory``) aggregate
+    each device's V chunks."""
+    if V == 1:
+        return dp_partition(prof, cluster, mb, overlap, allowed_cuts)
+    if cluster.n * V > prof.n_layers:
+        raise ValueError(f"{cluster.n}x{V} virtual stages exceed "
+                         f"{prof.n_layers} layers")
+    vcl = virtual_cluster(cluster, V)
+    plan = dp_partition(prof, vcl, mb, overlap, allowed_cuts)
+    return dataclasses.replace(plan, V=V)
+
+
+# ---------------------------------------------------------------------------
 # Coarse-grained partition based on communication (paper §3.3.3).
 # ---------------------------------------------------------------------------
 
@@ -247,17 +309,19 @@ def coarse_cuts(prof: NetworkProfile, a_th: float) -> set[int]:
 
 
 def coarse_partition(prof: NetworkProfile, cluster: ClusterSpec, mb: int,
-                     overlap: bool) -> PartitionPlan:
+                     overlap: bool, V: int = 1) -> PartitionPlan:
     """Lower a_th from the max activation until comm is no longer the
-    bottleneck (or no finer threshold is feasible)."""
+    bottleneck (or no finer threshold is feasible).  With ``V > 1`` the
+    coarse cuts restrict the interleaved virtual-stage partition instead."""
     sizes = sorted({l.bytes_act_out for l in prof.layers}, reverse=True)
-    plan = dp_partition(prof, cluster, mb, overlap)
+    plan = interleaved_partition(prof, cluster, mb, V, overlap)
     for a_th in sizes:
         cuts = coarse_cuts(prof, a_th)
-        if len(cuts) + 1 < cluster.n:
-            break                              # too coarse to form N stages
+        if len(cuts) + 1 < cluster.n * V:
+            break                              # too coarse to form N*V chunks
         try:
-            cand = dp_partition(prof, cluster, mb, overlap, allowed_cuts=cuts)
+            cand = interleaved_partition(prof, cluster, mb, V, overlap,
+                                         allowed_cuts=cuts)
         except ValueError:
             break
         plan = cand
@@ -331,12 +395,17 @@ def intra_layer_refine(prof: NetworkProfile, cluster: ClusterSpec,
 # ---------------------------------------------------------------------------
 
 def stage_memory(plan: PartitionPlan, feat_mult: int, M: int) -> list[float]:
-    """Schedule-dependent per-stage memory: 2w (weights+grads) plus
-    feat_mult*(N-i+1) live micro-batch boundary activations."""
+    """Schedule-dependent per-device memory: 2w (weights+grads) plus the
+    live micro-batch boundary activations — feat_mult*(N-i+1) for the
+    contiguous schedules, min(M*V, (V-1)*M + N - i + 1) chunk activations
+    for an interleaved (V > 1) plan (the 1F1B-I features-memory row)."""
     N = plan.n_stages
     out = []
-    for i, c in enumerate(plan.stage_costs, start=1):
-        live = min(M, feat_mult * (N - i + 1))
+    for i, c in enumerate(plan.device_costs(), start=1):
+        if plan.V == 1:
+            live = min(M, feat_mult * (N - i + 1))
+        else:
+            live = min(M * plan.V, (plan.V - 1) * M + (N - i + 1))
         out.append(2.0 * c.weight_bytes + live * c.act_out_bytes)
     return out
 
@@ -344,13 +413,23 @@ def stage_memory(plan: PartitionPlan, feat_mult: int, M: int) -> list[float]:
 def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
                      plan: PartitionPlan, mb: int, feat_mult: int,
                      M: int, max_iters: int = 64) -> tuple[PartitionPlan, bool]:
-    """Shift boundary layers off over-capacity stages.  Returns
-    (plan, feasible)."""
+    """Shift boundary layers off over-capacity devices.  Returns
+    (plan, feasible).  For an interleaved plan (V > 1) memory is judged per
+    device but layers move across *chunk* boundaries, so the donor chunk's
+    neighbour belongs to a different device."""
+    V = plan.V
+    vcl = virtual_cluster(cluster, V)
     bounds = [list(b) for b in plan.bounds]
     N = plan.n_stages
-    for _ in range(max_iters):
-        cur = _finalize(prof, cluster, tuple(tuple(b) for b in bounds), mb,
+    NC = len(bounds)                           # chunks = N*V
+
+    def finalize() -> PartitionPlan:
+        cur = _finalize(prof, vcl, tuple(tuple(b) for b in bounds), mb,
                         plan.overlap)
+        return dataclasses.replace(cur, V=V) if V > 1 else cur
+
+    for _ in range(max_iters):
+        cur = finalize()
         mem = stage_memory(cur, feat_mult, M)
         caps = [d.memory_capacity for d in cluster.devices]
         over = [i for i in range(N) if mem[i] > caps[i]]
@@ -358,24 +437,37 @@ def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
             return cur, True
         moved = False
         for i in over:
-            s, e = bounds[i]
-            if e - s <= 1:
+            # candidate donations: last layer of a chunk to the next chunk,
+            # or first layer to the previous chunk; judged by the headroom
+            # of the *device* that owns the receiving chunk.
+            best = None                        # (headroom, chunk, dir)
+            for j in cur.device_chunks(i):
+                s, e = bounds[j]
+                if e - s <= 1:
+                    continue
+                if j < NC - 1:
+                    tgt = (j + 1) % N
+                    head = caps[tgt] - mem[tgt]
+                    if best is None or head >= best[0]:
+                        best = (head, j, +1)
+                if j > 0:
+                    tgt = (j - 1) % N
+                    head = caps[tgt] - mem[tgt]
+                    if best is None or head > best[0]:
+                        best = (head, j, -1)
+            if best is None:
                 continue
-            # shift one layer to the neighbour with more headroom
-            left_head = (caps[i - 1] - mem[i - 1]) if i > 0 else -1.0
-            right_head = (caps[i + 1] - mem[i + 1]) if i < N - 1 else -1.0
-            if right_head >= left_head and i < N - 1:
-                bounds[i][1] -= 1
-                bounds[i + 1][0] -= 1
-                moved = True
-            elif i > 0:
-                bounds[i][0] += 1
-                bounds[i - 1][1] += 1
-                moved = True
+            _, j, d = best
+            if d > 0:
+                bounds[j][1] -= 1
+                bounds[j + 1][0] -= 1
+            else:
+                bounds[j][0] += 1
+                bounds[j - 1][1] += 1
+            moved = True
         if not moved:
             return cur, False
-    cur = _finalize(prof, cluster, tuple(tuple(b) for b in bounds), mb,
-                    plan.overlap)
+    cur = finalize()
     mem = stage_memory(cur, feat_mult, M)
     ok = all(m <= d.memory_capacity for m, d in zip(mem, cluster.devices))
     return cur, ok

@@ -1,6 +1,7 @@
-"""Closed-form pipeline-schedule cost models — paper Tables 1 and 2.
+"""Closed-form pipeline-schedule cost models — paper Tables 1 and 2,
+extended with an interleaved virtual-stage schedule.
 
-Four schedules:
+Five schedules:
 
 * ``1F1B-AS`` — async (FPGA-style) one-forward-one-backward.
 * ``FBP-AS``  — async, FP and BP computed in parallel on each accelerator
@@ -8,12 +9,32 @@ Four schedules:
 * ``1F1B-SNO`` — synchronous, communication NOT overlapped with compute.
 * ``1F1B-SO``  — synchronous, overlapped via doubled warm-up micro-batches
   (the paper's contribution). Double activation memory vs SNO.
+* ``1F1B-I``  — async interleaved 1F1B over V *virtual stages* per device
+  (beyond-paper; the Megatron/DAPPLE interleaving direction in PAPERS.md).
 
 Symbols (paper):  M = micro-batches per mini-batch, N = pipeline stages,
 F/B = per-micro-batch FP/BP compute time of one (balanced) stage,
 SR = send/receive time of one stage boundary, a = activation bytes of one
 stage boundary (per micro-batch), w = weight bytes of one stage,
 i = stage index 1..N.
+
+1F1B-I symbols and formulas (V = virtual-stage interleave depth):
+
+* Each device owns V non-contiguous layer chunks; chunk v of device n is
+  *virtual stage* v*N + n, so one micro-batch loops the device daisy chain
+  V times.  A chunk costs F/V (FP) and B/V (BP).
+* Makespan      t = (M*V + N - 1) * (F + B) / V
+                  = M*(F+B) + (N-1)*(F+B)/V  — the flush bubble shrinks
+  by the interleave depth V (requires M >= N so every chunk pass streams
+  without stalling; the explorer gates candidates on this).
+* Bubble        (N - 1) / (M*V + N - 1)   — strictly below 1F1B-AS's
+                (N - 1) / (M + N - 1) for V > 1.
+* Features      min(M*V, (V-1)*M + N - i + 1) live chunk activations on
+  device i: the first V-1 passes of every micro-batch stay resident until
+  their backward returns, plus the usual 1F1B (N - i + 1) in-flight window.
+  V = 1 reduces exactly to the 1F1B-AS row.
+* Bandwidth     V*a/F — the boundary is crossed once per chunk, i.e. V
+  times more traffic per micro-batch in the same compute time.
 """
 from __future__ import annotations
 
@@ -29,6 +50,7 @@ class ScheduleEval:
     features_memory: tuple[float, ...]   # per stage i=1..N
     weights_memory: float                # per stage (2w: weights + grads)
     bandwidth_demand: float              # bytes/s needed to fully overlap
+    V: int = 1                           # virtual-stage interleave depth
 
 
 def _feat(mult: int, N: int, a: float) -> tuple[float, ...]:
@@ -77,18 +99,46 @@ def eval_1f1b_so(M: int, N: int, F: float, B: float, SR: float,
         bandwidth_demand=(a / F) if F > 0 else float("inf"))
 
 
+def eval_1f1b_interleaved(M: int, N: int, F: float, B: float, SR: float,
+                          a: float, w: float, V: int = 2) -> ScheduleEval:
+    """Interleaved 1F1B (see module docstring).  ``F``/``B``/``a``/``w`` are
+    whole-device quantities (summed over the device's V chunks); the bubble
+    shrinks by V while boundary traffic grows by V."""
+    if V < 1:
+        raise ValueError(f"V must be >= 1, got {V}")
+    if M < N:
+        # same precondition the simulator enforces: with fewer micro-batches
+        # than devices the chunk passes cannot stream and this closed form
+        # is an unachievable lower bound
+        raise ValueError(f"1F1B-I needs M >= N to stream chunk passes "
+                         f"(got M={M}, N={N})")
+    t = (M * V + N - 1) * (F + B) / V
+    feats = tuple(
+        float(min(M * V, (V - 1) * M + (N - i + 1))) * a
+        for i in range(1, N + 1))
+    return ScheduleEval(
+        name="1F1B-I", minibatch_time=t,
+        bubble_fraction=(N - 1) / (M * V + N - 1),
+        features_memory=feats, weights_memory=2 * w,
+        bandwidth_demand=(V * a / F) if F > 0 else float("inf"),
+        V=V)
+
+
 SCHEDULES = {
     "1F1B-AS": eval_1f1b_as,
     "FBP-AS": eval_fbp_as,
     "1F1B-SNO": eval_1f1b_sno,
     "1F1B-SO": eval_1f1b_so,
+    "1F1B-I": eval_1f1b_interleaved,
 }
 
-ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS")
+ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS", "1F1B-I")
 SYNC_SCHEDULES = ("1F1B-SNO", "1F1B-SO")
 
 
 def schedules_for(async_capable: bool) -> tuple[str, ...]:
     """Hardware gating (paper §3.2): FPGA-like devices stream asynchronously,
-    GPU-like devices must use the synchronous schedules."""
+    GPU-like devices must use the synchronous schedules.  ``1F1B-I`` relies
+    on overlapping the V-times-denser boundary traffic, so it is offered to
+    async-capable clusters only."""
     return ASYNC_SCHEDULES if async_capable else SYNC_SCHEDULES

@@ -11,8 +11,15 @@ stage-boundary transfers are tasks too.  Three communication models:
 * ``blocking`` — a transfer occupies *both* end-point devices for SR
                  (1F1B-SNO: synchronous execution, no overlap).
 
+Interleaved 1F1B (``1F1B-I``) runs V *virtual stages* per device: virtual
+stage ``v*N + n`` is chunk v of device n, so a micro-batch loops the device
+chain V times.  The op-order generator (`_order_1f1b_interleaved`) streams
+chunk passes — all M micro-batches finish pass v before pass v+1 enters —
+which is exactly the runtime's circular ``ppermute`` schedule and yields the
+closed-form makespan ``(M*V + N - 1)(F + B)/V`` for M >= N.
+
 The simulator also tracks the peak number of live micro-batch activations
-per stage, which is the paper's "features memory" column.
+per device, which is the paper's "features memory" column.
 """
 from __future__ import annotations
 
@@ -24,8 +31,8 @@ from typing import Sequence
 @dataclasses.dataclass
 class SimResult:
     makespan: float
-    peak_live: list[int]          # per stage: peak resident activations
-    idle: list[float]             # per stage: total idle (bubble) time
+    peak_live: list[int]          # per device: peak resident activations
+    idle: list[float]             # per device: total idle (bubble) time
 
     def bubble_fraction(self, stage: int = 0) -> float:
         return self.idle[stage] / self.makespan if self.makespan else 0.0
@@ -43,16 +50,49 @@ def _order_1f1b(M: int, N: int, n: int, warmup: int) -> list[tuple[str, int]]:
     return ops
 
 
+def _order_1f1b_interleaved(M: int, N: int, n: int, V: int
+                            ) -> list[tuple[str, int, int]]:
+    """Per-device op order for interleaved 1F1B: ('F'|'B', m, vstage).
+
+    Device n owns virtual stages ``v*N + n`` (chunk v).  Forward work
+    streams in chunk-pass order (pass v of every micro-batch before pass
+    v+1); backward streams in the mirror order (last chunk first).  The
+    warm-up must cover the full first V-1 passes plus the usual 1F1B
+    ``N - n`` in-flight window: micro-batch 0's backward only exists once
+    it has traversed all N*V virtual stages.
+    """
+    MV = M * V
+    fwd = [(e % M, (e // M) * N + n) for e in range(MV)]
+    bwd = [(e % M, (V - 1 - e // M) * N + n) for e in range(MV)]
+    warmup = max(1, min(MV, (V - 1) * M + (N - n)))
+    ops: list[tuple[str, int, int]] = [("F", m, vs) for m, vs in fwd[:warmup]]
+    nf, nb = warmup, 0
+    while nb < MV:
+        m, vs = bwd[nb]
+        ops.append(("B", m, vs)); nb += 1
+        if nf < MV:
+            m, vs = fwd[nf]
+            ops.append(("F", m, vs)); nf += 1
+    return ops
+
+
 def simulate(schedule: str, M: int, N: int,
              F: float | Sequence[float], B: float | Sequence[float],
-             SR: float = 0.0) -> SimResult:
-    """Simulate one mini-batch of M micro-batches through N stages."""
+             SR: float = 0.0, V: int = 1,
+             comm: str | None = None) -> SimResult:
+    """Simulate one mini-batch of M micro-batches through N devices.
+
+    ``V`` (>1 only for ``1F1B-I``) interleaves V virtual stages per device;
+    per-chunk compute time is the device time divided by V.  ``comm``
+    overrides the schedule's default communication model (used by the
+    differential tests to bracket the closed forms).
+    """
     Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
     Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
     assert len(Fs) == len(Bs) == N
 
     if schedule == "1F1B-AS":
-        comm = "free"
+        default_comm = "free"
         orders = [_order_1f1b(M, N, n, N - n) for n in range(N)]
     elif schedule == "FBP-AS":
         # FPGA spatial dataflow: FP and BP *timeshare* the DSP array, so a
@@ -60,114 +100,128 @@ def simulate(schedule: str, M: int, N: int,
         # the makespan equal to 1F1B-AS); what changes is the pipeline
         # depth of BP behind FP — doubled warm-up — hence 2x live
         # activations and the gentler 2a/(F+B) bandwidth demand.
-        comm = "free"
+        default_comm = "free"
         orders = [_order_1f1b(M, N, n, 2 * (N - n) - 1) for n in range(N)]
     elif schedule == "1F1B-SNO":
-        comm = "blocking"
+        default_comm = "blocking"
         orders = [_order_1f1b(M, N, n, N - n) for n in range(N)]
     elif schedule == "1F1B-SO":
-        comm = "latency"
+        default_comm = "latency"
         orders = [_order_1f1b(M, N, n, 2 * (N - n) - 1) for n in range(N)]
+    elif schedule == "1F1B-I":
+        if M < N:
+            raise ValueError(f"1F1B-I needs M >= N to stream chunk passes "
+                             f"(got M={M}, N={N})")
+        default_comm = "free"
+        orders = [_order_1f1b_interleaved(M, N, n, V) for n in range(N)]
     else:
         raise ValueError(schedule)
+    if schedule != "1F1B-I":
+        if V != 1:
+            raise ValueError(f"V={V} only supported for 1F1B-I")
+        # normalise (kind, m) -> (kind, m, vstage) with vstage == device
+        orders = [[(k, m, n) for k, m in ops] for n, ops in enumerate(orders)]
+    comm = comm or default_comm
+    if comm not in ("free", "latency", "blocking"):
+        raise ValueError(comm)
+
+    NS = N * V                                 # virtual stages
+    dur = {"F": [Fs[vs % N] / V for vs in range(NS)],
+           "B": [Bs[vs % N] / V for vs in range(NS)]}
 
     # --- task state ------------------------------------------------------
-    f_done = [[-1.0] * N for _ in range(M)]    # completion time of F[m][n]
-    b_done = [[-1.0] * N for _ in range(M)]
-    f_ready = [[-1.0] * N for _ in range(M)]   # input-activation arrival
-    b_ready = [[-1.0] * N for _ in range(M)]   # error arrival
+    f_done = [[-1.0] * NS for _ in range(M)]   # completion time of F[m][vs]
+    b_done = [[-1.0] * NS for _ in range(M)]
+    f_ready = [[-1.0] * NS for _ in range(M)]  # input-activation arrival
+    b_ready = [[-1.0] * NS for _ in range(M)]  # error arrival
     for m in range(M):
         f_ready[m][0] = 0.0                    # stage 0 reads local data
     dev_free = [0.0] * N
     busy = [0.0] * N                           # accumulated busy time
     ptr = [0] * N                              # next op index
     n_done = 0
-    total_ops = 2 * M * N
+    total_ops = 2 * M * NS
 
-    def deliver(kind: str, m: int, n_from: int, t_prod: float):
+    def deliver(kind: str, m: int, vs_from: int, t_prod: float):
         """Schedule the transfer of an activation/error to the neighbour."""
         if kind == "F":
-            if n_from == N - 1:
-                b_ready[m][N - 1] = t_prod     # loss: error available locally
+            if vs_from == NS - 1:
+                b_ready[m][NS - 1] = t_prod    # loss: error available locally
                 return None
-            tgt = (m, n_from + 1, "F")
+            tgt = (m, vs_from + 1, "F")
         else:
-            if n_from == 0:
+            if vs_from == 0:
                 return None
-            tgt = (m, n_from - 1, "B")
+            tgt = (m, vs_from - 1, "B")
         return tgt
 
-    pending_xfer: list[tuple[float, int, str, int, int]] = []  # (ready, m, kind, src, dst)
+    pending_xfer: list[tuple[float, int, str, int, int]] = []  # (ready, m, kind, src_vs, dst_vs)
 
     def try_transfers(now_unused=None):
-        """Fire every transfer whose constraints are satisfiable; returns
-        earliest next-possible start among the rest."""
+        """Fire every pending transfer, eagerly, in ready order.  Under
+        ``blocking`` a transfer seizes both end-point devices for SR as
+        soon as it is ready — the conservative no-overlap model: devices
+        never defer a ready transfer in favour of compute."""
         nonlocal pending_xfer
-        fired = True
-        while fired:
-            fired = False
-            rest = []
-            for (rdy, m, kind, src, dst) in sorted(pending_xfer):
-                if comm == "free":
-                    (f_ready if kind == "F" else b_ready)[m][dst] = rdy
-                    fired = True
-                elif comm == "latency":
-                    (f_ready if kind == "F" else b_ready)[m][dst] = rdy + SR
-                    fired = True
-                else:                           # blocking: both devices busy SR
-                    start = max(rdy, dev_free[src], dev_free[dst])
-                    # only fire if neither device has a *startable* compute
-                    # strictly earlier (keeps devices from starving xfers
-                    # while staying work-conserving)
-                    dev_free[src] = start + SR
-                    dev_free[dst] = start + SR
-                    busy[src] += SR
-                    busy[dst] += SR
-                    (f_ready if kind == "F" else b_ready)[m][dst] = start + SR
-                    fired = True
-            pending_xfer = rest
+        for (rdy, m, kind, src, dst) in sorted(pending_xfer):
+            sd, dd = src % N, dst % N
+            if comm == "free" or sd == dd:
+                (f_ready if kind == "F" else b_ready)[m][dst] = rdy
+            elif comm == "latency":
+                (f_ready if kind == "F" else b_ready)[m][dst] = rdy + SR
+            else:                           # blocking: both devices busy SR
+                start = max(rdy, dev_free[sd], dev_free[dd])
+                dev_free[sd] = start + SR
+                dev_free[dd] = start + SR
+                busy[sd] += SR
+                busy[dd] += SR
+                (f_ready if kind == "F" else b_ready)[m][dst] = start + SR
+        pending_xfer = []
 
     # --- main loop: repeatedly start the globally-earliest runnable op ----
     while n_done < total_ops:
         try_transfers()
-        best = None                            # (start, n, kind, m)
+        best = None                            # (start, n, kind, m, vs)
         for n in range(N):
             if ptr[n] >= len(orders[n]):
                 continue
-            kind, m = orders[n][ptr[n]]
-            if kind == "F" and f_ready[m][n] >= 0:
-                s = max(dev_free[n], f_ready[m][n])
-            elif kind == "B" and b_ready[m][n] >= 0 and f_done[m][n] >= 0:
-                s = max(dev_free[n], b_ready[m][n], f_done[m][n])
+            kind, m, vs = orders[n][ptr[n]]
+            if kind == "F" and f_ready[m][vs] >= 0:
+                s = max(dev_free[n], f_ready[m][vs])
+            elif kind == "B" and b_ready[m][vs] >= 0 and f_done[m][vs] >= 0:
+                s = max(dev_free[n], b_ready[m][vs], f_done[m][vs])
             else:
                 continue
             if best is None or s < best[0]:
-                best = (s, n, kind, m)
+                best = (s, n, kind, m, vs)
         assert best is not None, "pipeline deadlock (bad op order)"
-        s, n, kind, m = best
-        dur = Fs[n] if kind == "F" else Bs[n]
-        end = s + dur
+        s, n, kind, m, vs = best
+        d = dur[kind][vs]
+        end = s + d
         dev_free[n] = end
-        busy[n] += dur
+        busy[n] += d
         if kind == "F":
-            f_done[m][n] = end
+            f_done[m][vs] = end
         else:
-            b_done[m][n] = end
+            b_done[m][vs] = end
         ptr[n] += 1
-        tgt = deliver(kind, m, n, end)
+        tgt = deliver(kind, m, vs, end)
         if tgt is not None:
-            tm, tn, tkind = tgt
-            pending_xfer.append((end, tm, tkind, n, tn))
+            tm, tvs, tkind = tgt
+            pending_xfer.append((end, tm, tkind, vs, tvs))
         n_done += 1
 
     try_transfers()
     makespan = max(max(r) for r in b_done)
 
-    # peak live activations per stage: F done (or started) but B not done.
+    # peak live activations per device: F done (or started) but B not done,
+    # summed over the device's V chunks.
     peak = []
     for n in range(N):
-        events = ([(f_done[m][n] - (Fs[n]), +1) for m in range(M)]
-                  + [(b_done[m][n], -1) for m in range(M)])
+        events = []
+        for vs in range(n, NS, N):
+            events += [(f_done[m][vs] - dur["F"][vs], +1) for m in range(M)]
+            events += [(b_done[m][vs], -1) for m in range(M)]
         events.sort()
         live = pk = 0
         for _, delta in events:

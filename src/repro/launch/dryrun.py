@@ -94,7 +94,8 @@ def param_structs(cfg, plan, mesh, dtype=jnp.bfloat16, stage_axis="stage"):
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     specs = ST.param_specs(cfg, shapes, stage_axis=stage_axis,
                            fsdp_axis="data" if cfg.fsdp else None,
-                           tensor_size=mesh.shape["tensor"])
+                           tensor_size=mesh.shape["tensor"],
+                           virtual=plan.virtual)
     return jax.tree.map(lambda s, sp: sds(s.shape, s.dtype, mesh, sp),
                         shapes, specs)
 

@@ -11,17 +11,23 @@ device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
 
-def _auto(n: int):
-    return (AxisType.Auto,) * n
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: newer jax wants explicit Auto
+    axis types for shard_map meshes, older jax has no ``axis_types``."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    except (ImportError, AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)
 
 
 def make_pipeline_mesh(*, multi_pod: bool = False, stages: int = 16,
@@ -35,4 +41,4 @@ def make_pipeline_mesh(*, multi_pod: bool = False, stages: int = 16,
     else:
         shape = (16, stages, tensor)
         axes = ("data", "stage", "tensor")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)

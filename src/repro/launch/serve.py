@@ -44,9 +44,9 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, stages=args.stages)
     if args.tensor:
         cfg = dataclasses.replace(cfg, tensor=args.tensor)
-    mesh = jax.make_mesh((args.data, cfg.stages, cfg.tensor),
-                         ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((args.data, cfg.stages, cfg.tensor),
+                     ("data", "stage", "tensor"))
     plan = ST.plan_stages(cfg)
     params = ST.init_stacked_params(cfg, jax.random.PRNGKey(args.seed), plan)
     max_len = args.prompt_len + args.gen

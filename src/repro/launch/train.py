@@ -38,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--stages", type=int, default=0)
     ap.add_argument("--tensor", type=int, default=0)
+    ap.add_argument("--virtual", type=int, default=0,
+                    help="1F1B-I virtual stages (chunks) per device; "
+                         "needs --microbatches >= stages")
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -59,6 +62,8 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, stages=args.stages)
     if args.tensor:
         cfg = dataclasses.replace(cfg, tensor=args.tensor)
+    if args.virtual:
+        cfg = dataclasses.replace(cfg, virtual=args.virtual)
     if args.auto_plan:
         from repro.core.autoplan import auto_plan
         plan_ = auto_plan(cfg, global_batch=args.batch, seq_len=args.seq,
@@ -73,12 +78,13 @@ def main(argv=None):
     assert need <= jax.device_count(), \
         f"mesh needs {need} devices, have {jax.device_count()} " \
         "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
-    mesh = jax.make_mesh((args.data, cfg.stages, cfg.tensor),
-                         ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((args.data, cfg.stages, cfg.tensor),
+                     ("data", "stage", "tensor"))
     plan = ST.plan_stages(cfg)
     print(f"arch={cfg.arch_id} layers={cfg.n_layers} d={cfg.d_model} "
-          f"mesh=data{args.data} x stage{cfg.stages} x tensor{cfg.tensor}")
+          f"mesh=data{args.data} x stage{cfg.stages} x tensor{cfg.tensor}"
+          + (f" x virtual{cfg.virtual}" if cfg.virtual > 1 else ""))
 
     params = ST.init_stacked_params(cfg, jax.random.PRNGKey(args.seed), plan)
     n_params = sum(x.size for x in jax.tree.leaves(params))

@@ -25,6 +25,17 @@ paper's 1F1B features-memory row.  ``remat='none'`` stores everything
 ppermute asynchronously and overlaps it with compute (1F1B-SO behaviour)
 without needing the doubled warm-up, which the analytic explorer still
 models for GPU/FPGA targets.
+
+Interleaved 1F1B (``1F1B-I``, plan.virtual = V > 1): parameters arrive
+stacked ``[1, V, Lc, ...]`` — V non-contiguous layer chunks per device,
+chunk v of device n being virtual stage v*S + n — and the tick scan runs
+``M*V + S - 1`` ticks with the ppermute daisy chain looping V times.  Each
+tick the device selects chunk ``(t - stage) // M``; stage 0 injects fresh
+micro-batches on pass 0 and re-injects ring-returned activations (a
+``[M, ...]`` return buffer) on later passes, so the pipeline-flush bubble
+shrinks by V, matching ``eval_1f1b_interleaved`` and the discrete-event
+simulator's ``1F1B-I`` order.  Requires M >= S so chunk passes stream
+without stalling.
 """
 from __future__ import annotations
 
@@ -200,10 +211,15 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     assert plan.n_stages == S, \
         f"stage plan ({plan.n_stages}) != mesh pipeline depth ({S}); " \
         f"with pod_role='stage' build the plan with n_stages=pod*stages"
+    V = plan.virtual
+    assert V == 1 or not cfg.fsdp, "1F1B-I (virtual>1) with fsdp unsupported"
     specs = ST.param_specs(cfg, shape_params, stage_axis=stage_ax,
                            fsdp_axis="data" if cfg.fsdp else None,
-                           tensor_size=mesh.shape["tensor"])
+                           tensor_size=mesh.shape["tensor"], virtual=V)
     M_ = pcfg.n_microbatches
+    assert V == 1 or M_ >= S, \
+        f"1F1B-I needs n_microbatches ({M_}) >= stages ({S}) to stream " \
+        f"chunk passes through the ring"
     fsdp_dims = ST.fsdp_scan_dims(specs) if cfg.fsdp else {}
     ep_dp_axis = "data" if (cfg.moe and cfg.moe.ep_data) else None
     ep_n_dp = mesh.shape["data"] if ep_dp_axis else 1
@@ -232,15 +248,53 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             cfg, params, batch, M_, tp_index)
 
         def tick(carry, t):
-            x_cur, outbuf, aux = carry
+            if V > 1:
+                x_cur, outbuf, retbuf, aux = carry
+                # a pass that looped back from the last stage arrives S
+                # ticks after it entered; park it until its next pass
+                e_arr = t - S
+                ok_arr = (e_arr >= 0) & (e_arr < M_ * (V - 1))
+                slot = jnp.clip(e_arr, 0, M_ * (V - 1) - 1) % M_
+
+                def park(rb, c):
+                    old = lax.dynamic_index_in_dim(rb, slot, 0,
+                                                   keepdims=False)
+                    return lax.dynamic_update_index_in_dim(
+                        rb, jnp.where(ok_arr, c, old), slot, 0)
+
+                retbuf = jax.tree.map(park, retbuf, x_cur)
+            else:
+                x_cur, outbuf, aux = carry
+                retbuf = None
             tcl = jnp.clip(t, 0, M_ - 1)
+            m0 = jnp.clip(t, 0, M_ * V - 1) % M_    # stage-0 micro-batch
+            if V > 1:
+                src = jax.tree.map(
+                    lambda q, rb: jnp.where(
+                        t < M_, q[tcl],
+                        lax.dynamic_index_in_dim(rb, m0, 0, keepdims=False)),
+                    inj, retbuf)
+            else:
+                src = jax.tree.map(lambda q: q[tcl], inj)
             x_in = jax.tree.map(
-                lambda q, c: jnp.where(stage_idx == 0, q[tcl], c), inj, x_cur)
-            p3 = None if pos3 is None else pos3[tcl]
+                lambda s_, c: jnp.where(stage_idx == 0, s_, c), src, x_cur)
+            p3 = None if pos3 is None else pos3[m0]
+            if V > 1:
+                chunk = jnp.clip((t - stage_idx) // M_, 0, V - 1)
+                lp_t = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
+                                                       keepdims=False),
+                    lp_local)
+                sm_t = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
+                                                       keepdims=False),
+                    smeta_local)
+            else:
+                lp_t, sm_t = lp_local, smeta_local
 
             def stage_fn(x_in):
                 y, a, _ = apply_stage(
-                    cfg, lp_local, smeta_local, x_in, pos=pos, pos3=p3,
+                    cfg, lp_t, sm_t, x_in, pos=pos, pos3=p3,
                     cache=None, tp_axis="tensor", tp_index=tp_index,
                     dp_axis=ep_dp_axis, n_dp=ep_n_dp,
                     fsdp_axis="data" if cfg.fsdp else None,
@@ -259,26 +313,33 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                 stage_fn = jax.checkpoint(stage_fn)
             y, a = stage_fn(x_in)
             # ticks outside this stage's window process garbage: gate aux
-            m_idx = t - stage_idx
-            a = jnp.where((m_idx >= 0) & (m_idx < M_), a, 0.0)
-            # last stage collects its finished micro-batch
+            e_idx = t - stage_idx
+            a = jnp.where((e_idx >= 0) & (e_idx < M_ * V), a, 0.0)
+            # last stage collects its finished micro-batch (final pass only)
             out_t = t - (S - 1)
-            oc = jnp.clip(out_t, 0, M_ - 1)
+            oc = jnp.clip(out_t - M_ * (V - 1), 0, M_ - 1)
             cur = lax.dynamic_index_in_dim(outbuf, oc, 0, keepdims=False)
-            wr = jnp.where((out_t >= 0) & (stage_idx == S - 1),
+            wr = jnp.where((out_t >= M_ * (V - 1)) & (stage_idx == S - 1),
                            _hidden_of(y), cur)
             outbuf = lax.dynamic_update_index_in_dim(outbuf, wr, oc, 0)
             # daisy-chain shift
             perm = [(i, (i + 1) % S) for i in range(S)]
             x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm), y)
+            if V > 1:
+                return (x_next, outbuf, retbuf, aux + a), None
             return (x_next, outbuf, aux + a), None
 
         x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), inj)
         outbuf0 = jnp.zeros((M_, mb, T, cfg.d_model),
                             _hidden_of(x0).dtype)
-        (_, outbuf, aux), _ = lax.scan(
-            tick, (x0, outbuf0, jnp.zeros((), jnp.float32)),
-            jnp.arange(M_ + S - 1), unroll=pcfg.tick_scan_unroll)
+        carry0 = (x0, outbuf0, jnp.zeros((), jnp.float32))
+        if V > 1:
+            retbuf0 = jax.tree.map(jnp.zeros_like, inj)
+            carry0 = (x0, outbuf0, retbuf0, jnp.zeros((), jnp.float32))
+        carry_out, _ = lax.scan(
+            tick, carry0,
+            jnp.arange(M_ * V + S - 1), unroll=pcfg.tick_scan_unroll)
+        outbuf, aux = carry_out[1], carry_out[-1]
 
         h = LYR.rms_norm(outbuf.reshape(M_ * mb, T, -1), params["final_norm"],
                          cfg.norm_eps)
@@ -364,9 +425,7 @@ def init_pipeline_cache(cfg: ArchConfig, plan: ST.StagePlan, batch: int,
                                   n_kv_heads=nkv)
     c = M.init_cache(pad_cfg, batch, max_len, tp=1, dtype=dtype,
                      enc_len=enc_len)
-    return jax.tree.map(
-        lambda a: a.reshape((plan.n_stages, plan.layers_per_stage) + a.shape[1:]),
-        c)
+    return jax.tree.map(lambda a: ST._stack_chunks(a, plan), c)
 
 
 def _restore_len(c_new, c_old):
@@ -397,6 +456,11 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     frozen during the tick scan (every micro-batch writes at the same
     offset) and advanced once at the end.
     """
+    if plan.virtual != 1:
+        raise NotImplementedError(
+            "pipelined serving does not support interleaved (virtual>1) "
+            "plans; decode is latency-bound, not flush-bubble-bound — "
+            "use plan_stages(cfg, virtual=1) for serving")
     shape_params = jax.eval_shape(
         lambda k: ST.init_stacked_params(cfg, k, plan, param_dtype),
         jax.ShapeDtypeStruct((2,), jnp.uint32))

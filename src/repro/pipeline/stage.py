@@ -32,8 +32,9 @@ _FSDP_OK = _TP_LAST | _TP_PENULT | _TP_EXPERT | {"wq_a", "wkv_a", "in_proj",
 class StagePlan:
     n_stages: int
     tensor: int
-    layers_per_stage: int
+    layers_per_stage: int        # layers per CHUNK (a device owns `virtual`)
     n_layers_padded: int
+    virtual: int = 1             # 1F1B-I interleave depth V (chunks/device)
 
     @property
     def pad(self) -> int:
@@ -41,17 +42,39 @@ class StagePlan:
 
 
 def plan_stages(cfg: ArchConfig, n_stages: Optional[int] = None,
-                tensor: Optional[int] = None) -> StagePlan:
+                tensor: Optional[int] = None,
+                virtual: Optional[int] = None) -> StagePlan:
     S = n_stages or cfg.stages
     tp = tensor or cfg.tensor
-    lps = math.ceil(cfg.n_layers / S)
+    V = virtual or cfg.virtual
+    lps = math.ceil(cfg.n_layers / (S * V))
     return StagePlan(n_stages=S, tensor=tp, layers_per_stage=lps,
-                     n_layers_padded=S * lps)
+                     n_layers_padded=S * V * lps, virtual=V)
+
+
+def _stack_chunks(a: jax.Array, plan: StagePlan) -> jax.Array:
+    """[Lp, ...] -> [S, Lps, ...] (V == 1) or [S, V, Lc, ...] (V > 1),
+    where element [n, v] is virtual stage v*S + n (Megatron assignment:
+    a micro-batch's pass v visits devices 0..S-1 applying chunks
+    v*S .. v*S + S - 1, so the global layer order is preserved)."""
+    S, V, Lc = plan.n_stages, plan.virtual, plan.layers_per_stage
+    if V == 1:
+        return a.reshape((S, Lc) + a.shape[1:])
+    return a.reshape((V, S, Lc) + a.shape[1:]).swapaxes(0, 1)
+
+
+def unstack_chunks(a, plan: StagePlan):
+    """Inverse of ``_stack_chunks``: recover the global [L, ...] layer order
+    (used by checkpoints/reference comparisons)."""
+    if plan.virtual == 1:
+        return a.reshape((-1,) + a.shape[2:])
+    return a.swapaxes(0, 1).reshape((-1,) + a.shape[3:])
 
 
 def init_stacked_params(cfg: ArchConfig, key: jax.Array, plan: StagePlan,
                         dtype=jnp.float32) -> dict:
-    """Global (unsharded-shape) parameters with layers stacked [S, Lps, ...].
+    """Global (unsharded-shape) parameters with layers stacked [S, Lps, ...]
+    (or [S, V, Lc, ...] for an interleaved plan).
 
     Vocab is padded so the embedding shards evenly over the tensor axis.
     """
@@ -60,9 +83,7 @@ def init_stacked_params(cfg: ArchConfig, key: jax.Array, plan: StagePlan,
     Lp = plan.n_layers_padded
     layer_keys = jax.random.split(k_layers, Lp)
     stacked = jax.vmap(lambda k: M.init_block(cfg, k, 1, dtype))(layer_keys)
-    stacked = jax.tree.map(
-        lambda a: a.reshape((plan.n_stages, plan.layers_per_stage) + a.shape[1:]),
-        stacked)
+    stacked = jax.tree.map(lambda a: _stack_chunks(a, plan), stacked)
     p = dict(
         embed=jax.random.normal(k_emb, (pad_cfg.vocab, cfg.d_model), dtype)
         / math.sqrt(cfg.d_model),
@@ -76,7 +97,8 @@ def init_stacked_params(cfg: ArchConfig, key: jax.Array, plan: StagePlan,
 
 
 def stacked_meta(cfg: ArchConfig, plan: StagePlan) -> dict:
-    """Per-layer metadata arrays reshaped to [S, Lps] (+ active mask)."""
+    """Per-layer metadata arrays reshaped to [S, Lps] — or [S, V, Lc] for an
+    interleaved plan — plus the ``active`` mask for padded slots."""
     meta = M.layer_meta(cfg)
     Lp = plan.n_layers_padded
     pad = Lp - cfg.n_layers
@@ -84,11 +106,11 @@ def stacked_meta(cfg: ArchConfig, plan: StagePlan) -> dict:
     def expand(a):
         if pad:
             a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, 0)], 0)
-        return a.reshape(plan.n_stages, plan.layers_per_stage)
+        return _stack_chunks(a, plan)
 
     out = {k: expand(v) for k, v in meta.items()}
     active = jnp.arange(Lp) < cfg.n_layers
-    out["active"] = active.reshape(plan.n_stages, plan.layers_per_stage)
+    out["active"] = _stack_chunks(active, plan)
     return out
 
 
@@ -98,13 +120,17 @@ def stacked_meta(cfg: ArchConfig, plan: StagePlan) -> dict:
 
 def param_specs(cfg: ArchConfig, params: dict, *, stage_axis="stage",
                 tensor_axis="tensor", fsdp_axis=None,
-                tensor_size: Optional[int] = None) -> dict:
+                tensor_size: Optional[int] = None,
+                virtual: int = 1) -> dict:
     """PartitionSpec pytree matching ``init_stacked_params`` output.
 
     If ``n_kv_heads`` doesn't divide the tensor axis, K/V projections are
-    replicated (each device slices the kv head it needs at apply time)."""
+    replicated (each device slices the kv head it needs at apply time).
+    ``virtual`` > 1 shifts positional (expert) dims right by the extra
+    leading chunk axis [S, V, Lc, ...]."""
     tp = tensor_size or cfg.tensor
     kv_replicated = (cfg.attn_kind == "gqa" and cfg.n_kv_heads % tp != 0)
+    expert_dim = 2 if virtual == 1 else 3
 
     def leaf_spec(path, leaf):
         keys = [getattr(pp, "key", getattr(pp, "name", None)) for pp in path]
@@ -113,16 +139,17 @@ def param_specs(cfg: ArchConfig, params: dict, *, stage_axis="stage",
             return P(tensor_axis, None)
         if keys[0] == "final_norm":
             return P()
-        # layers: leading [S, Lps]; stage_axis may be a tuple (pod, stage)
+        # layers: leading [S, Lps] (or [S, V, Lc]); stage_axis may be a
+        # tuple (pod, stage)
         nd = leaf.ndim
         spec = [stage_axis, None] + [None] * (nd - 2)
         if name in ("wk", "wv") and kv_replicated:
             return P(*spec)
         if name in _TP_EXPERT:
             if cfg.moe is not None and cfg.moe.ep_data:
-                spec[2] = ("data", tensor_axis)   # expert parallel, data-major
+                spec[expert_dim] = ("data", tensor_axis)  # expert parallel
             else:
-                spec[2] = tensor_axis
+                spec[expert_dim] = tensor_axis
                 if fsdp_axis and cfg.fsdp:
                     spec[nd - 1] = fsdp_axis
         elif name in _TP_LAST:

@@ -1,0 +1,102 @@
+"""Dependency-free stand-in for the slice of the ``hypothesis`` API this
+test suite uses (``given``/``settings``/``strategies``), so the tier-1
+suite collects and runs in environments without hypothesis installed.
+
+Semantics: ``@given(x=st.integers(0, 9))`` reruns the test body
+``max_examples`` times with *seeded deterministic* samples (one fixed RNG
+per test, keyed by the test name), so runs are reproducible.  ``settings``
+mirrors hypothesis's decorator-stacking: it may wrap either the raw
+function (below ``@given``) or the runner (above it).
+
+This is intentionally NOT a property-testing engine — no shrinking, no
+example database — just enough structure-aware random sweeping to keep the
+suite's coverage when the real dependency is absent.  Install
+``hypothesis`` (see requirements-dev.txt) to get the real thing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    """Mimics ``hypothesis.strategies`` (imported as ``st``)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def given(**param_strategies):
+    def decorate(fn):
+        inner = fn
+        # @settings below @given already wrapped fn; unwrap for the name
+        name = getattr(fn, "__name__", "test")
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_hypo_max_examples",
+                        getattr(inner, "_hypo_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(zlib.crc32(name.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng)
+                         for k, s in param_strategies.items()}
+                inner(*args, **kwargs, **drawn)
+
+        runner._hypo_given = True
+        # hide the drawn parameters from pytest's fixture resolution (the
+        # real hypothesis exposes a parameterless wrapper the same way)
+        sig = inspect.signature(fn)
+        runner.__signature__ = sig.replace(parameters=[
+            p for nm, p in sig.parameters.items()
+            if nm not in param_strategies])
+        runner.__dict__.pop("__wrapped__", None)
+        return runner
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts (and mostly ignores) hypothesis settings; only
+    ``max_examples`` matters to the shim."""
+    def decorate(fn):
+        fn._hypo_max_examples = max_examples
+        return fn
+    return decorate

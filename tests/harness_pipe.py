@@ -28,10 +28,10 @@ TOL = 5e-5
 
 
 def _mesh(data, stages, tensor, pod=0):
+    from repro.launch.mesh import make_mesh
     shape = ((pod,) if pod else ()) + (data, stages, tensor)
     axes = (("pod",) if pod else ()) + ("data", "stage", "tensor")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def _setup(arch, stages, tensor, fsdp=False, aux0=True):
@@ -60,11 +60,13 @@ def _batch(cfg, B, T):
     return b
 
 
-def _ref_params(cfg, params):
+def _ref_params(cfg, params, plan=None):
+    if plan is not None:
+        unstack = lambda a: ST.unstack_chunks(a, plan)[:cfg.n_layers]
+    else:
+        unstack = lambda a: a.reshape((-1,) + a.shape[2:])[:cfg.n_layers]
     rp = dict(embed=params["embed"],
-              layers=jax.tree.map(
-                  lambda a: a.reshape((-1,) + a.shape[2:])[:cfg.n_layers],
-                  params["layers"]),
+              layers=jax.tree.map(unstack, params["layers"]),
               final_norm=params["final_norm"])
     if "head" in params:
         rp["head"] = params["head"]
@@ -156,14 +158,60 @@ def moe_ep_data(arch="deepseek-v3-671b"):
     train_equivalence(arch, stages=2, tensor=2)
 
 
+def interleaved_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
+                            virtual=2, microbatches=2):
+    """1F1B-I: V>1 chunked pipeline loss/grads must equal both the V=1
+    pipeline and the single-device reference."""
+    import dataclasses as _dc
+    data = 8 // (stages * tensor) or 1
+    cfg = get_config(arch).reduced(n_layers=stages * virtual, d_model=128)
+    cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=virtual)
+    mesh = _mesh(data, stages, tensor)
+    plan = ST.plan_stages(cfg)
+    assert plan.virtual == virtual and plan.layers_per_stage == 1
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    pcfg = RT.PipelineConfig(n_microbatches=microbatches)
+    step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+    batch = _batch(cfg, 8, 32)
+    loss, grads = step(params, batch)
+
+    # single-device reference
+    rp = _ref_params(cfg, params, plan)
+    ref_loss = M.loss_fn(cfg, rp, batch)
+    ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+    assert abs(float(loss) - float(ref_loss)) < 1e-4, \
+        (float(loss), float(ref_loss))
+    gp = jax.tree.map(
+        lambda a: np.asarray(ST.unstack_chunks(a, plan))[:cfg.n_layers],
+        grads["layers"])
+    gr = jax.tree.map(np.asarray, ref_grads["layers"])
+    errs = jax.tree.map(
+        lambda a, b: float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)),
+        gp, gr)
+    worst = max(jax.tree.leaves(errs))
+    assert worst < 1e-4, worst
+
+    # V=1 pipeline on the same weights (re-stacked contiguously)
+    cfg1 = _dc.replace(cfg, virtual=1)
+    plan1 = ST.plan_stages(cfg1)
+    params1 = dict(rp)
+    params1["layers"] = jax.tree.map(
+        lambda a: ST._stack_chunks(a, plan1), rp["layers"])
+    step1, _ = RT.make_train_step(cfg1, mesh, plan1, pcfg)
+    loss1, _ = step1(params1, batch)
+    assert abs(float(loss) - float(loss1)) < 1e-4, \
+        (float(loss), float(loss1))
+    print(f"OK gerr={worst:.2e}")
+
+
 
 
 def pod_stage_equivalence():
     import dataclasses as _dc
     cfg = get_config("llama3.2-1b").reduced(n_layers=4, d_model=128)
     cfg = _dc.replace(cfg, stages=2, tensor=2)
-    mesh = jax.make_mesh((2, 1, 2, 2), ("pod", "data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 4)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 1, 2, 2), ("pod", "data", "stage", "tensor"))
     plan = ST.plan_stages(cfg, n_stages=4)
     params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
     pcfg = RT.PipelineConfig(n_microbatches=2, pod_role="stage")
@@ -224,4 +272,5 @@ if __name__ == "__main__":
      "moe_ep_data": moe_ep_data,
      "pod_stage_equivalence": pod_stage_equivalence,
      "gated_serve": gated_serve,
+     "interleaved_equivalence": interleaved_equivalence,
      }[mode](*args)

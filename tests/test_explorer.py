@@ -1,9 +1,11 @@
 """End-to-end BaPipe exploration: the paper's qualitative results."""
+import dataclasses
+
 import pytest
 
 from repro.core.explorer import explore, gpipe_time, pipedream_time
-from repro.core.hardware import (V100, VCU118, VCU129, heterogeneous_cluster,
-                                 homogeneous_cluster)
+from repro.core.hardware import (TPU_V5E, V100, VCU118, VCU129,
+                                 heterogeneous_cluster, homogeneous_cluster)
 from repro.core.profiler import (profile_gnmt, profile_resnet50,
                                  profile_vgg16, profile_arch)
 from repro.configs import get_config
@@ -52,6 +54,57 @@ def test_pipeline_memory_scales_down_with_stages():
         assert r.plan is not None
         mems.append(max(c.weight_bytes for c in r.plan.stage_costs))
     assert mems[0] > mems[1] > mems[2]
+
+
+def test_interleaved_picked_when_bubble_dominates():
+    """With few micro-batches (bubble dominates) and ample memory, the
+    explorer must interleave: 1F1B-I with V > 1 beats every V=1 schedule."""
+    roomy = dataclasses.replace(TPU_V5E, memory_capacity=1e15,
+                                link_bandwidth=1e13)
+    r = explore(profile_gnmt(16), homogeneous_cluster(roomy, 4), 8,
+                candidate_Ms=[4], consider_dp=False)
+    assert r.schedule == "1F1B-I" and r.V > 1, (r.schedule, r.V)
+    assert r.plan is not None and r.plan.V == r.V
+    # a device owns V non-contiguous chunks covering all layers exactly once
+    assert len(r.plan.bounds) == 4 * r.V
+    covered = sorted(l for s, e in r.plan.bounds for l in range(s, e))
+    assert covered == list(range(profile_gnmt(16).n_layers))
+    # and the analytic bubble is strictly below the non-interleaved floor
+    assert r.sched_eval.bubble_fraction < 3 / (4 + 3)
+
+
+def test_interleaved_rejected_when_memory_exceeded():
+    """The V x activation-memory cost must gate infeasible interleaving:
+    on an activation-heavy profile with capacity between the V=1 and V>1
+    footprints, V>1 candidates are rejected (no spill tier) and the
+    explorer falls back to a V=1 schedule."""
+    from repro.core.profiler import LayerProfile, NetworkProfile
+    from repro.core.hardware import DeviceSpec
+    prof = NetworkProfile("acty", tuple(
+        LayerProfile(name=f"l{i}", flops_fwd=1e9, bytes_weights=1e6,
+                     bytes_act_out=1e9) for i in range(16)), unit="sample")
+    dev = DeviceSpec("async_dev", 100e12, 1e12, 1e15, 1e13,
+                     async_capable=True, efficiency=1.0)
+    cl = homogeneous_cluster(dev, 4)
+    roomy = explore(prof, cl, 8, candidate_Ms=[4], consider_dp=False)
+    assert roomy.schedule == "1F1B-I" and roomy.V > 1      # sanity
+    v1 = explore(prof, cl, 8, candidate_Ms=[4], consider_dp=False,
+                 candidate_Vs=())
+    cap = max(v1.per_stage_memory) * 1.5                   # < V=2 footprint
+    tight_cl = homogeneous_cluster(
+        dataclasses.replace(dev, memory_capacity=cap), 4)
+    r = explore(prof, tight_cl, 8, candidate_Ms=[4], consider_dp=False)
+    assert r.feasible
+    assert r.V == 1, (r.schedule, r.V)
+    assert all(m <= cap for m in r.per_stage_memory)
+
+
+def test_explorer_still_prefers_dp_for_resnet_with_interleaving_enabled():
+    """Adding 1F1B-I to the search space must not flip the paper's
+    ResNet-50 'use DP' answer (activation traffic only grows with V)."""
+    r = explore(profile_resnet50(), homogeneous_cluster(V100, 8), 128,
+                candidate_Vs=(2, 4))
+    assert r.mode == "data_parallel"
 
 
 def test_baseline_models():

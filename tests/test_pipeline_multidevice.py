@@ -60,6 +60,19 @@ def test_serve_driver_end_to_end():
     run_case("serve_driver", "llama3.2-1b")
 
 
+@pytest.mark.parametrize("stages,tensor,virtual,microbatches", [
+    (2, 2, 2, 2),     # minimal interleave, M == S ring boundary case
+    (2, 2, 4, 4),     # deep interleave
+    (4, 1, 2, 4),     # 4-stage ring, 2 passes
+])
+def test_interleaved_1f1b_grad_equivalence(stages, tensor, virtual,
+                                           microbatches):
+    """1F1B-I (virtual-stage interleaving): loss/grads must match both the
+    V=1 pipeline and the single-device reference."""
+    run_case("interleaved_equivalence", "llama3.2-1b", str(stages),
+             str(tensor), str(virtual), str(microbatches))
+
+
 def test_pod_as_stage_pipeline():
     """Beyond-paper: pipeline depth spans the pod axis (pipeline over DCN);
     gradients must still match the reference."""

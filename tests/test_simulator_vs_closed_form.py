@@ -1,0 +1,116 @@
+"""Differential test: the discrete-event simulator must re-derive every
+closed-form ``ScheduleEval`` (paper Tables 1-2 plus the interleaved
+``1F1B-I``) over randomized (M, N, V, F, B, SR) grids.
+
+Tolerances: makespans match to float noise for the schedules whose closed
+forms are exact under their comm model; peak-live matches the features-
+memory row within one activation (the work-conserving greedy scheduler may
+run a single op ahead of the idealized order — the seed suite grants
+1F1B-AS/FBP-AS the same slack).
+"""
+import random
+
+import pytest
+
+from repro.core import schedules as S
+from repro.core.simulator import simulate
+
+RNG = random.Random(20260730)
+
+GRID = []
+for _ in range(60):
+    N = RNG.randint(1, 6)
+    GRID.append((RNG.randint(N, 24), N, RNG.choice([1, 2, 4]),
+                 round(RNG.uniform(0.1, 5.0), 3),
+                 round(RNG.uniform(0.1, 5.0), 3),
+                 round(RNG.uniform(0.0, 0.15), 3)))
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_async_makespans_match_closed_form(M, N, V, F, B, SR):
+    """1F1B-AS / FBP-AS / 1F1B-I(V) all match their closed forms exactly
+    under the free comm model."""
+    for name in ("1F1B-AS", "FBP-AS"):
+        sim = simulate(name, M, N, F, B, 0.0)
+        ev = S.SCHEDULES[name](M, N, F, B, 0.0, 1.0, 1.0)
+        assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-9)
+    sim = simulate("1F1B-I", M, N, F, B, 0.0, V=V)
+    ev = S.eval_1f1b_interleaved(M, N, F, B, 0.0, 1.0, 1.0, V=V)
+    assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-9)
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_peak_live_matches_features_memory_rows(M, N, V, F, B, SR):
+    """Simulator peak resident activations == features-memory row (a=1),
+    within the one-op-ahead slack of the greedy scheduler."""
+    cases = [("1F1B-AS", 1), ("FBP-AS", 1), ("1F1B-I", V)]
+    for name, v in cases:
+        sim = simulate(name, M, N, F, B, 0.0, V=v)
+        ev = (S.eval_1f1b_interleaved(M, N, F, B, 0.0, 1.0, 1.0, V=v)
+              if name == "1F1B-I" else
+              S.SCHEDULES[name](M, N, F, B, 0.0, 1.0, 1.0))
+        for i in range(N):
+            # the paper rows are per-steady-state; a mini-batch can never
+            # have more than M*V live chunk activations
+            want = min(M * v, ev.features_memory[i])
+            assert abs(sim.peak_live[i] - want) <= 1, \
+                (name, v, i, sim.peak_live, ev.features_memory)
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_sync_schedules_still_bracketed(M, N, V, F, B, SR):
+    """Table 2 regression under the latency/blocking comm models."""
+    SR_so = min(SR, F / 2, B / 2)  # paper premise: comm hideable
+    sim = simulate("1F1B-SO", M, N, F, F, SR_so)
+    ev = S.eval_1f1b_so(M, N, F, F, SR_so, 1.0, 1.0)
+    assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-6)
+    so = S.eval_1f1b_so(M, N, F, B, SR, 1.0, 1.0).minibatch_time
+    sno = S.eval_1f1b_sno(M, N, F, B, SR, 1.0, 1.0).minibatch_time
+    blk = simulate("1F1B-SNO", M, N, F, B, SR).makespan
+    assert so <= sno + 1e-9
+    assert sno <= blk + 1e-6
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_interleaved_all_comm_models_no_deadlock(M, N, V, F, B, SR):
+    """1F1B-I completes (no deadlock) under all three comm models and the
+    makespans are ordered free <= latency <= blocking, with latency
+    overhead bounded by the per-boundary transfer count."""
+    free = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="free").makespan
+    lat = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="latency").makespan
+    blk = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="blocking").makespan
+    assert free <= lat + 1e-9 <= blk + 2e-9
+    assert lat <= free + 4.0 * SR * (M * V + N)
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_interleaved_bubble_strictly_below_1f1b_as(M, N, V, F, B, SR):
+    """Acceptance: 1F1B-I bubble < 1F1B-AS bubble for V > 1 (N > 1)."""
+    base = S.eval_1f1b_as(M, N, F, B, 0.0, 1.0, 1.0)
+    ev = S.eval_1f1b_interleaved(M, N, F, B, 0.0, 1.0, 1.0, V=V)
+    if V > 1 and N > 1:
+        assert ev.bubble_fraction < base.bubble_fraction
+        assert ev.minibatch_time < base.minibatch_time
+    elif V == 1:
+        assert ev.minibatch_time == pytest.approx(base.minibatch_time)
+
+
+def test_interleaved_requires_streaming_microbatches():
+    """M < N cannot stream chunk passes through the ring: explicit error,
+    not a deadlock."""
+    with pytest.raises(ValueError, match="M >= N"):
+        simulate("1F1B-I", 2, 4, 1.0, 1.0, 0.0, V=2)
+
+
+def test_interleaved_heterogeneous_devices_supported():
+    r = simulate("1F1B-I", 6, 3, [1.0, 2.0, 1.0], [2.0, 3.0, 2.0], 0.0, V=2)
+    # bottleneck device (F+B = 5) processes 6 micro-batches x 2 chunks of
+    # (F+B)/V each: makespan >= M * (F+B)
+    assert r.makespan >= 6 * 5.0
+
+
+def test_order_validation_rejects_bad_V():
+    with pytest.raises(ValueError):
+        simulate("1F1B-AS", 4, 2, 1.0, 1.0, 0.0, V=2)
+    with pytest.raises(ValueError):
+        simulate("1F1B-I", 4, 2, 1.0, 1.0, 0.0, V=2, comm="bogus")
