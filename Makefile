@@ -1,0 +1,16 @@
+# Convenience targets; CI runs the same commands.
+PY ?= python
+export PYTHONPATH := src:.
+
+.PHONY: test smoke tables
+
+test:
+	$(PY) -m pytest -x -q
+
+# fast analytic check: simulator vs closed forms (no jax device work)
+smoke:
+	$(PY) -m pytest -q tests/test_simulator_vs_closed_form.py
+
+# paper tables, analytic only (no roofline dry-run artifacts required)
+tables:
+	$(PY) -m benchmarks.run --dry-run

@@ -52,6 +52,14 @@ def table_interleaved():
                      f"vs_1F1B-AS={base.bubble_fraction:.4f} "
                      f"feat_mem_stage1={ev.features_memory[0]} "
                      f"bandwidth={ev.bandwidth_demand}"))
+        # memory-lean variant: identical makespan, (V-1)N features term
+        ml = S.eval_1f1b_interleaved_memlean(M, N, F, B, 0.0, a, w, V=V)
+        sim_ml = simulate("1F1B-I-ML", M, N, F, B, 0.0, V=V)
+        rows.append((f"tableI.1F1B-I-ML.V{V}.feat_mem_stage1",
+                     ml.features_memory[0],
+                     f"vs_streaming={ev.features_memory[0]} "
+                     f"sim_peak_live_stage1={sim_ml.peak_live[0]} "
+                     f"time={ml.minibatch_time}"))
     return rows
 
 

@@ -1,20 +1,28 @@
 """Benchmark harness: one function per paper table plus the roofline
 summary from the dry-run artifacts.  Prints ``name,value,derived`` CSV.
+
+``--dry-run`` emits the analytic tables only (no roofline artifacts
+needed) — the ``make tables`` smoke target.
 """
 from __future__ import annotations
 
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks.paper_tables import ALL_TABLES
-    from benchmarks import roofline
+
+    argv = sys.argv[1:] if argv is None else argv
+    dry = "--dry-run" in argv
 
     print("name,value,derived")
     for fn in ALL_TABLES:
         for name, value, derived in fn():
             print(f"{name},{value:.4g},{derived}" if isinstance(value, float)
                   else f"{name},{value},{derived}")
+    if dry:
+        return
+    from benchmarks import roofline
     rows = roofline.load_all()
     if rows:
         for name, val, extra in roofline.rows_csv(rows):

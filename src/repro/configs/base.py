@@ -91,6 +91,9 @@ class ArchConfig:
     stages: int = 16
     tensor: int = 1
     virtual: int = 1                 # 1F1B-I virtual stages (chunks) per device
+    schedule: str = "auto"           # runtime op order (schedplan name):
+                                     # auto | 1f1b | 1f1b-interleaved |
+                                     # 1f1b-interleaved-memlean | gpipe
     fsdp: bool = False               # shard stage weights over "data" axis too
 
     # ----------------------------------------------------------------------
@@ -136,7 +139,7 @@ class ArchConfig:
             n_layers=n_layers, d_model=d_model, n_heads=n_heads,
             n_kv_heads=n_kv, head_dim=hd, d_ff=2 * d_model,
             vocab=min(self.vocab, 1024), stages=1, tensor=1, virtual=1,
-            fsdp=False,
+            schedule="auto", fsdp=False,
         )
         if self.mla is not None:
             changes["mla"] = MLAConfig(

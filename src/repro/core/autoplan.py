@@ -34,9 +34,17 @@ class AutoPlan:
     virtual: int = 1                 # 1F1B-I interleave depth (V)
 
     def apply(self, cfg: ArchConfig) -> ArchConfig:
+        from repro.core.schedplan import canonical_name
+        try:
+            sched = canonical_name(self.schedule)
+        except ValueError:
+            # schedule may be None/unknown (e.g. a data-parallel
+            # ExplorationResult carries no pipeline schedule)
+            sched = "auto"
         return dataclasses.replace(cfg, stages=self.stages,
                                    tensor=self.tensor,
-                                   virtual=self.virtual)
+                                   virtual=self.virtual,
+                                   schedule=sched)
 
 
 def _stage_device(base: DeviceSpec, tensor: int) -> DeviceSpec:

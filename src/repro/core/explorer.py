@@ -17,10 +17,14 @@ from repro.core.partition import (PartitionPlan, comm_bound, coarse_partition,
                                   stage_memory)
 from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
 from repro.core.schedules import (SCHEDULES, ScheduleEval,
-                                  eval_1f1b_interleaved, schedules_for)
+                                  eval_1f1b_interleaved,
+                                  eval_1f1b_interleaved_memlean,
+                                  schedules_for)
 
 FEAT_MULT = {"1F1B-AS": 1, "FBP-AS": 2, "1F1B-SNO": 1, "1F1B-SO": 2,
-             "1F1B-I": 1}
+             "1F1B-I": 1, "1F1B-I-ML": 1}
+
+INTERLEAVED_SCHEDULES = ("1F1B-I", "1F1B-I-ML")
 
 
 @dataclasses.dataclass
@@ -97,9 +101,13 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
             candidate_Vs: Sequence[int] = (2, 4)) -> ExplorationResult:
     """Run the full BaPipe exploration and return the chosen plan.
 
-    ``candidate_Vs`` are the interleave depths tried for ``1F1B-I`` (async
+    ``candidate_Vs`` are the interleave depths tried for the interleaved
+    schedules (``1F1B-I`` and its memory-lean order ``1F1B-I-ML``; async
     clusters only); V=1 of 1F1B-I is identical to 1F1B-AS, which is always
-    searched, so only V > 1 is explored here.
+    searched, so only V > 1 is explored here.  ``1F1B-I-ML`` matches
+    1F1B-I's makespan with a smaller resident-features term, so it wins
+    exactly when memory gates the streaming order (ties prefer the
+    schedule found first).
     """
     N = cluster.n
     dp_t, dp_mem, dp_ok = dp_time_and_memory(prof, cluster, minibatch)
@@ -112,7 +120,7 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
         # async schedules fully overlap comm; sync-overlap hides comm too,
         # sync-no-overlap pays it on the critical path.
         overlap = sched != "1F1B-SNO"
-        if sched == "1F1B-I":
+        if sched in INTERLEAVED_SCHEDULES:
             # a device must own V chunks of >= 1 layer each
             Vs = tuple(v for v in candidate_Vs
                        if v > 1 and N * v <= prof.n_layers)
@@ -123,14 +131,16 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                 if M < 1 or minibatch // M < 1:
                     continue
                 if V > 1 and M < N:
-                    continue       # 1F1B-I streaming constraint (M >= N)
+                    continue       # interleave streaming constraint (M >= N)
+                if sched == "1F1B-I-ML" and M % N != 0:
+                    continue       # Megatron group constraint (M % N == 0)
                 mb = minibatch // M
                 plan = interleaved_partition(prof, cluster, mb, V,
                                              overlap=overlap)
                 if comm_bound(plan):
                     plan = coarse_partition(prof, cluster, mb, overlap, V=V)
                 plan, mem_ok = memory_fine_tune(prof, cluster, plan, mb,
-                                                feat_mult, M)
+                                                feat_mult, M, schedule=sched)
                 if not comm_bound(plan) and V == 1:
                     # intra-layer (fractional) balancing LAST — memory
                     # fine-tuning re-finalises integer bounds and would
@@ -141,11 +151,14 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                           for c in plan.stage_costs), default=0.0)
                 a = plan.max_boundary_act()
                 w = max(c.weight_bytes for c in plan.device_costs())
-                if V > 1:
+                if V > 1 and sched == "1F1B-I-ML":
+                    ev = eval_1f1b_interleaved_memlean(M, N, F, B, SR, a, w,
+                                                       V=V)
+                elif V > 1:
                     ev = eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=V)
                 else:
                     ev = SCHEDULES[sched](M, N, F, B, SR, a, w)
-                mem = stage_memory(plan, feat_mult, M)
+                mem = stage_memory(plan, feat_mult, M, schedule=sched)
                 t = ev.minibatch_time
                 if not mem_ok:
                     # paper §4.3: weights kept on-chip "as much as

@@ -394,29 +394,36 @@ def intra_layer_refine(prof: NetworkProfile, cluster: ClusterSpec,
 # Memory fine-tuning (paper §3.3, final step).
 # ---------------------------------------------------------------------------
 
-def stage_memory(plan: PartitionPlan, feat_mult: int, M: int) -> list[float]:
+def stage_memory(plan: PartitionPlan, feat_mult: int, M: int,
+                 schedule: Optional[str] = None) -> list[float]:
     """Schedule-dependent per-device memory: 2w (weights+grads) plus the
-    live micro-batch boundary activations — feat_mult*(N-i+1) for the
-    contiguous schedules, min(M*V, (V-1)*M + N - i + 1) chunk activations
-    for an interleaved (V > 1) plan (the 1F1B-I features-memory row)."""
+    live micro-batch boundary activations.  The live counts come from the
+    schedule-plan IR (:func:`repro.core.schedplan.live_activation_counts`,
+    the algebraic form of the op-table replay): feat_mult*(N-i+1) for the
+    contiguous schedules, ``(V-1)*M + N - i + 1`` chunk activations for a
+    streaming interleaved plan, ``2(N-i) + (V-1)N + 1`` for the memory-lean
+    interleaved order.  ``schedule`` defaults to the plan's natural
+    schedule (1F1B for V == 1, streaming 1F1B-I for V > 1)."""
+    from repro.core.schedplan import live_activation_counts
     N = plan.n_stages
-    out = []
-    for i, c in enumerate(plan.device_costs(), start=1):
-        if plan.V == 1:
-            live = min(M, feat_mult * (N - i + 1))
-        else:
-            live = min(M * plan.V, (plan.V - 1) * M + (N - i + 1))
-        out.append(2.0 * c.weight_bytes + live * c.act_out_bytes)
-    return out
+    if schedule is None:
+        schedule = "1f1b" if plan.V == 1 else "1f1b-interleaved"
+    live = live_activation_counts(schedule, M, N, plan.V, feat_mult)
+    return [2.0 * c.weight_bytes + lv * c.act_out_bytes
+            for lv, c in zip(live, plan.device_costs())]
 
 
 def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
                      plan: PartitionPlan, mb: int, feat_mult: int,
-                     M: int, max_iters: int = 64) -> tuple[PartitionPlan, bool]:
+                     M: int, max_iters: int = 64,
+                     schedule: Optional[str] = None
+                     ) -> tuple[PartitionPlan, bool]:
     """Shift boundary layers off over-capacity devices.  Returns
-    (plan, feasible).  For an interleaved plan (V > 1) memory is judged per
-    device but layers move across *chunk* boundaries, so the donor chunk's
-    neighbour belongs to a different device."""
+    (plan, feasible).  ``schedule`` picks the live-activation row used to
+    judge capacity (defaults to the plan's natural schedule).  For an
+    interleaved plan (V > 1) memory is judged per device but layers move
+    across *chunk* boundaries, so the donor chunk's neighbour belongs to a
+    different device."""
     V = plan.V
     vcl = virtual_cluster(cluster, V)
     bounds = [list(b) for b in plan.bounds]
@@ -430,7 +437,7 @@ def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
 
     for _ in range(max_iters):
         cur = finalize()
-        mem = stage_memory(cur, feat_mult, M)
+        mem = stage_memory(cur, feat_mult, M, schedule)
         caps = [d.memory_capacity for d in cluster.devices]
         over = [i for i in range(N) if mem[i] > caps[i]]
         if not over:
@@ -468,6 +475,6 @@ def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
         if not moved:
             return cur, False
     cur = finalize()
-    mem = stage_memory(cur, feat_mult, M)
+    mem = stage_memory(cur, feat_mult, M, schedule)
     ok = all(m <= d.memory_capacity for m, d in zip(mem, cluster.devices))
     return cur, ok

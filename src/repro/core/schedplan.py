@@ -1,0 +1,415 @@
+"""Schedule-plan IR: one compiled per-device op table that drives the
+closed forms (:mod:`repro.core.schedules`), the discrete-event simulator
+(:mod:`repro.core.simulator`) and the SPMD tick-scan runtime
+(:mod:`repro.pipeline.runtime`).
+
+Before this module each schedule's op order was encoded three times —
+closed-form arithmetic, the simulator's private ``_order_*`` generators,
+and the runtime's tick-index arithmetic — and every new ordering (the
+ROADMAP's memory-lean 1F1B-I, interleaved prefill serving) had to be
+implemented thrice.  Here the order is *data*: a :class:`SchedPlan` holds,
+per physical device, the exact sequence of ``F``/``B`` ops tagged with
+micro-batch ``m`` and virtual chunk ``v``; consumers replay it.
+
+Four builders (canonical lowercase names):
+
+* ``gpipe``            — all forwards, then all backwards.
+* ``1f1b``             — one-forward-one-backward; warm-up ``N - n`` per
+  device (``double_warmup=True`` gives the ``2(N-n)-1`` warm-up shared by
+  FBP-AS and 1F1B-SO).
+* ``1f1b-interleaved`` — V virtual chunks per device, *streaming* chunk
+  passes: all M micro-batches finish pass v before pass v+1 enters (the
+  circular-``ppermute`` order PR 1's runtime executes).  Warm-up
+  ``(V-1)M + N - n`` so peak resident features carry the ``(V-1)M`` term.
+* ``1f1b-interleaved-memlean`` — Megatron/PipeDream-2BW ordering
+  (PAPERS.md "Memory-Efficient Pipeline-Parallel DNN Training"):
+  micro-batches advance in groups of N, cycling chunks inside each group,
+  with warm-up ``2(N - n - 1) + (V-1)N``.  Same makespan as the streaming
+  order, but the resident-features term drops from ``(V-1)M`` to
+  ``(V-1)N`` — the schedule that makes memory-gated interleaved plans
+  feasible.  Requires ``M % N == 0`` (Megatron's constraint) so every
+  ring return is consumed exactly N ticks after it was produced.
+
+Legacy schedule-table names ("1F1B-AS", "FBP-AS", "1F1B-SNO", "1F1B-SO",
+"1F1B-I", "1F1B-I-ML") alias onto these builders via
+:func:`build_schedule` / :func:`canonical_name`.
+
+Two derived views:
+
+* :meth:`SchedPlan.peak_live` — symbolic replay of each device's op list
+  (F = +1 live chunk activation, B = -1) giving the per-device peak
+  resident-features count.  :func:`live_activation_counts` is the O(1)
+  algebraic form of the same quantity, differentially tested against the
+  replay.
+* :func:`lower_to_ring` — compiles the plan's forward order into the
+  per-element lookup arrays the synchronous tick-scan runtime consumes
+  (micro-batch, chunk, fresh-injection and output-collection flags), and
+  validates ring feasibility: element e's previous chunk pass must have
+  re-entered stage 0 by the tick e is issued.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One unit of pipeline work: the F or B of micro-batch ``m`` on chunk
+    ``v`` of a device.  ``vstage`` is the global virtual-stage index; the
+    send/recv edges are the stage-boundary transfers the op participates
+    in (``None`` at the chain ends)."""
+    kind: str                       # "F" | "B"
+    m: int                          # micro-batch index
+    v: int                          # chunk index on this device (0..V-1)
+    device: int                     # physical device n (0..N-1)
+    n_stages: int                   # N (to derive virtual-stage indices)
+    n_chunks: int                   # V
+
+    @property
+    def vstage(self) -> int:
+        return self.v * self.n_stages + self.device
+
+    @property
+    def send_to(self) -> Optional[int]:
+        """Virtual stage this op's output is sent to (forward: activation
+        to vstage+1; backward: error to vstage-1)."""
+        last = self.n_stages * self.n_chunks - 1
+        if self.kind == "F":
+            return self.vstage + 1 if self.vstage < last else None
+        return self.vstage - 1 if self.vstage > 0 else None
+
+    @property
+    def recv_from(self) -> Optional[int]:
+        """Virtual stage this op's input arrives from."""
+        last = self.n_stages * self.n_chunks - 1
+        if self.kind == "F":
+            return self.vstage - 1 if self.vstage > 0 else None
+        return self.vstage + 1 if self.vstage < last else None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedPlan:
+    """Compiled per-device op table for one mini-batch of M micro-batches
+    through N devices with V virtual chunks per device."""
+    name: str
+    M: int
+    N: int
+    V: int
+    device_ops: tuple[tuple[Op, ...], ...]   # [N] tuples, issue order
+
+    def validate(self) -> "SchedPlan":
+        """Every (m, chunk) F and B appears exactly once per device, and
+        backwards never precede their forward in the device order."""
+        for n, ops in enumerate(self.device_ops):
+            seen: dict[tuple[str, int, int], int] = {}
+            for i, op in enumerate(ops):
+                key = (op.kind, op.m, op.v)
+                if key in seen:
+                    raise ValueError(f"{self.name}: duplicate {key} on "
+                                     f"device {n}")
+                seen[key] = i
+            if len(ops) != 2 * self.M * self.V:
+                raise ValueError(
+                    f"{self.name}: device {n} has {len(ops)} ops, expected "
+                    f"{2 * self.M * self.V}")
+            for (kind, m, v), i in seen.items():
+                if kind == "B" and seen[("F", m, v)] > i:
+                    raise ValueError(f"{self.name}: B({m},{v}) before its F "
+                                     f"on device {n}")
+        return self
+
+    def forward_sequence(self, device: int = 0) -> list[tuple[int, int]]:
+        """(m, v) of the device's forwards in issue order."""
+        return [(op.m, op.v) for op in self.device_ops[device]
+                if op.kind == "F"]
+
+    def peak_live(self) -> list[int]:
+        """Symbolic replay: per-device peak count of resident chunk
+        activations (F issued, B not yet done) — the features-memory row
+        the closed forms tabulate, derived directly from the table."""
+        peaks = []
+        for ops in self.device_ops:
+            live = peak = 0
+            for op in ops:
+                live += 1 if op.kind == "F" else -1
+                peak = max(peak, live)
+            peaks.append(peak)
+        return peaks
+
+
+# ---------------------------------------------------------------------------
+# Builders.
+# ---------------------------------------------------------------------------
+
+def _ops_from_seqs(name: str, M: int, N: int, V: int,
+                   fwd_seqs, bwd_seqs, warmups) -> SchedPlan:
+    """Assemble the 1F1B skeleton: per device, ``warmup`` forwards, then
+    alternate (B, F) until the forwards drain, then the remaining
+    backwards."""
+    device_ops = []
+    for n in range(N):
+        fwd, bwd = fwd_seqs[n], bwd_seqs[n]
+        total = len(fwd)
+        warmup = max(1, min(total, warmups[n]))
+        mk = lambda kind, mv: Op(kind, mv[0], mv[1], n, N, V)
+        ops = [mk("F", mv) for mv in fwd[:warmup]]
+        nf, nb = warmup, 0
+        while nb < total:
+            ops.append(mk("B", bwd[nb])); nb += 1
+            if nf < total:
+                ops.append(mk("F", fwd[nf])); nf += 1
+        device_ops.append(tuple(ops))
+    return SchedPlan(name=name, M=M, N=N, V=V,
+                     device_ops=tuple(device_ops)).validate()
+
+
+def build_gpipe(M: int, N: int) -> SchedPlan:
+    """All forwards, then all backwards (no interleave): peak resident
+    features = M on every device."""
+    fwd = [[(m, 0) for m in range(M)]] * N
+    bwd = [[(m, 0) for m in range(M)]] * N
+    return _ops_from_seqs("gpipe", M, N, 1, fwd, bwd, [M] * N)
+
+
+def build_1f1b(M: int, N: int, *, double_warmup: bool = False) -> SchedPlan:
+    """1F1B with warm-up ``N - n`` per device (``2(N-n) - 1`` when
+    ``double_warmup`` — the FBP-AS / 1F1B-SO pipelining depth)."""
+    fwd = [[(m, 0) for m in range(M)]] * N
+    bwd = [[(m, 0) for m in range(M)]] * N
+    warm = [2 * (N - n) - 1 if double_warmup else N - n for n in range(N)]
+    name = "1f1b-2x" if double_warmup else "1f1b"
+    return _ops_from_seqs(name, M, N, 1, fwd, bwd, warm)
+
+
+def build_1f1b_interleaved(M: int, N: int, V: int) -> SchedPlan:
+    """Streaming chunk passes (PR 1's circular-ppermute order): forward
+    element ``e`` on every device is micro-batch ``e % M`` chunk
+    ``e // M``; backwards mirror (last chunk first).  Warm-up must cover
+    the full first V-1 passes plus the 1F1B ``N - n`` window, hence the
+    ``(V-1)M`` resident-features term.  Requires ``M >= N`` so chunk
+    passes stream through the ring without stalling."""
+    if V < 1:
+        raise ValueError(f"V must be >= 1, got {V}")
+    if M < N:
+        raise ValueError(f"1F1B-I needs M >= N to stream chunk passes "
+                         f"(got M={M}, N={N})")
+    MV = M * V
+    fwd = [[(e % M, e // M) for e in range(MV)]] * N
+    bwd = [[(e % M, V - 1 - e // M) for e in range(MV)]] * N
+    warm = [(V - 1) * M + (N - n) for n in range(N)]
+    return _ops_from_seqs("1f1b-interleaved", M, N, V, fwd, bwd, warm)
+
+
+def build_1f1b_interleaved_memlean(M: int, N: int, V: int) -> SchedPlan:
+    """Megatron-style memory-lean interleaved 1F1B: micro-batches advance
+    in groups of N, cycling the V chunks inside each group, with warm-up
+    ``2(N - n - 1) + (V-1)N``.  Peak resident features fall from
+    ``(V-1)M + N - n`` (streaming) to ``2(N - n - 1) + (V-1)N`` while the
+    makespan is unchanged.  Requires ``M % N == 0`` (Megatron's
+    constraint): with group size N, micro-batch m's pass v+1 is issued
+    exactly N elements after pass v, which is also the tick count for the
+    ring return to travel the daisy chain back to stage 0."""
+    if V < 1:
+        raise ValueError(f"V must be >= 1, got {V}")
+    if M < N or M % N != 0:
+        raise ValueError(
+            f"1f1b-interleaved-memlean needs M % N == 0 (micro-batch "
+            f"groups of the pipeline depth), got M={M}, N={N}")
+    fwd_seq = [(g * N + r, v)
+               for g in range(M // N) for v in range(V) for r in range(N)]
+    bwd_seq = [(g * N + r, V - 1 - vv)
+               for g in range(M // N) for vv in range(V) for r in range(N)]
+    fwd = [fwd_seq] * N
+    bwd = [bwd_seq] * N
+    # Megatron counts warm-up forwards before the first steady-state
+    # *forward* (F-then-B iterations); our skeleton alternates B-first, so
+    # its warm-up is one deeper.  Peak resident features are identical:
+    # 2(N-n-1) + (V-1)N + 1.
+    warm = [2 * (N - n - 1) + (V - 1) * N + 1 for n in range(N)]
+    return _ops_from_seqs("1f1b-interleaved-memlean", M, N, V, fwd, bwd, warm)
+
+
+# canonical builder names + legacy schedule-table aliases -------------------
+_ALIASES = {
+    "gpipe": ("gpipe", {}),
+    "1f1b": ("1f1b", {}),
+    "1f1b-2x": ("1f1b", {"double_warmup": True}),
+    "1f1b-interleaved": ("1f1b-interleaved", {}),
+    "1f1b-interleaved-memlean": ("1f1b-interleaved-memlean", {}),
+    # legacy closed-form/simulator names
+    "1F1B-AS": ("1f1b", {}),
+    "1F1B-SNO": ("1f1b", {}),
+    "FBP-AS": ("1f1b", {"double_warmup": True}),
+    "1F1B-SO": ("1f1b", {"double_warmup": True}),
+    "1F1B-I": ("1f1b-interleaved", {}),
+    "1F1B-I-ML": ("1f1b-interleaved-memlean", {}),
+}
+
+_BUILDERS = {
+    "gpipe": lambda M, N, V, **kw: build_gpipe(M, N),
+    "1f1b": lambda M, N, V, **kw: build_1f1b(M, N, **kw),
+    "1f1b-interleaved": lambda M, N, V, **kw: build_1f1b_interleaved(M, N, V),
+    "1f1b-interleaved-memlean":
+        lambda M, N, V, **kw: build_1f1b_interleaved_memlean(M, N, V),
+}
+
+INTERLEAVED = ("1f1b-interleaved", "1f1b-interleaved-memlean")
+
+
+def canonical_name(name: str) -> str:
+    """Map a legacy schedule-table name (or canonical name) to the
+    canonical builder name."""
+    if name not in _ALIASES:
+        raise ValueError(f"unknown schedule {name!r}")
+    return _ALIASES[name][0]
+
+
+def build_schedule(name: str, M: int, N: int, V: int = 1) -> SchedPlan:
+    """Build the op table for a schedule by canonical or legacy name."""
+    builder, kw = _ALIASES.get(name, (None, None))
+    if builder is None:
+        raise ValueError(name)
+    if V != 1 and canonical_name(name) not in INTERLEAVED:
+        raise ValueError(f"V={V} only supported for interleaved schedules "
+                         f"(got {name})")
+    return _BUILDERS[builder](M, N, V, **kw)
+
+
+def resolve_ring_schedule(schedule: str, V: int) -> str:
+    """Resolve the runtime's ``PipelineConfig.schedule`` to a canonical
+    builder name: ``auto`` keeps PR 1's behaviour (plain 1F1B ring for
+    V == 1, streaming interleave for V > 1)."""
+    if schedule in ("auto", "", None):
+        return "1f1b" if V == 1 else "1f1b-interleaved"
+    name = canonical_name(schedule)
+    if V > 1 and name not in INTERLEAVED:
+        raise ValueError(f"schedule {schedule!r} cannot run virtual={V} "
+                         f"chunks; pick an interleaved schedule")
+    return name
+
+
+# ---------------------------------------------------------------------------
+# Closed-form resident-features counts (validated against peak_live()).
+# ---------------------------------------------------------------------------
+
+def live_activation_counts(name: str, M: int, N: int, V: int = 1,
+                           feat_mult: int = 1) -> list[int]:
+    """Per-device peak resident chunk-activation counts — the algebraic
+    form of :meth:`SchedPlan.peak_live`, O(1) per device so the explorer
+    can sweep huge M without materialising tables.  ``feat_mult`` doubles
+    the 1F1B window (FBP-AS / 1F1B-SO).  Differentially tested against
+    the symbolic replay in ``tests/test_schedplan.py``."""
+    cname = canonical_name(name)
+    out = []
+    for n in range(N):
+        if cname == "gpipe":
+            w = M * V
+        elif cname == "1f1b":
+            # feat_mult=2 is the doubled-warm-up window (FBP-AS/1F1B-SO);
+            # the symbolic replay gives 2(N-n)-1, the schedule tables round
+            # up to 2(N-n) — kept here so partition.stage_memory is
+            # bit-identical to the pre-IR arithmetic.
+            w = feat_mult * (N - n)
+        elif cname == "1f1b-interleaved":
+            w = (V - 1) * M + (N - n)
+        else:                          # 1f1b-interleaved-memlean
+            w = 2 * (N - n - 1) + (V - 1) * N + 1
+        out.append(max(1, min(M * V, w)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Ring lowering: compile the forward order into the tick-scan runtime's
+# lookup tables.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RingLowering:
+    """Per-element lookup tables for the synchronous tick-scan runtime.
+
+    The runtime runs ``n_ticks = M*V + N - 1`` ticks; at tick t, device s
+    processes forward element ``e = t - s`` of the shared per-device
+    forward sequence (every device issues the same sequence, shifted by
+    its stage index — a property :func:`lower_to_ring` verifies).  All
+    arrays have length M*V and are indexed by e:
+
+    * ``m_of_e`` / ``v_of_e`` — micro-batch and chunk of element e.
+    * ``fresh``   — stage 0 injects fresh data (chunk-0 pass) at e.
+    * ``direct``  — element e's input is the ring return arriving this
+      very tick (produced by the last stage exactly N ticks earlier), so
+      it is consumed straight off the ppermute carry — no park buffer.
+    * ``park``    — the ring return of element e must be parked in the
+      stage-0 return buffer (slot ``m_of_e[e]``) until its next pass.
+    * ``collect`` — element e's output on the last stage is a final
+      (chunk V-1) output, written to ``outbuf[m_of_e[e]]``.
+
+    ``needs_retbuf`` is False exactly when every chunk handoff is direct —
+    true for the memlean order (and for streaming when M == N), which is
+    what deletes the ``[M, ...]`` micro-batch return buffer from the scan
+    carry.
+    """
+    schedule: str
+    M: int
+    N: int
+    V: int
+    m_of_e: tuple[int, ...]
+    v_of_e: tuple[int, ...]
+    fresh: tuple[bool, ...]
+    direct: tuple[bool, ...]
+    park: tuple[bool, ...]
+    collect: tuple[bool, ...]
+
+    @property
+    def n_ticks(self) -> int:
+        return self.M * self.V + self.N - 1
+
+    @property
+    def needs_retbuf(self) -> bool:
+        return any(self.park)
+
+
+def lower_to_ring(plan: SchedPlan) -> RingLowering:
+    """Lower a schedule plan onto the circular-``ppermute`` runtime.
+
+    Validates that the plan is ring-executable:
+
+    1. every device issues the same forward (m, v) sequence (device n's
+       element e runs at tick e + n);
+    2. chunk pass v+1 of a micro-batch is issued at least N elements
+       after pass v, so its ring return (which takes exactly N ticks to
+       travel stage 0 -> ... -> stage N-1 -> stage 0) has arrived.
+    """
+    M, N, V = plan.M, plan.N, plan.V
+    seq0 = plan.forward_sequence(0)
+    for n in range(1, N):
+        if plan.forward_sequence(n) != seq0:
+            raise ValueError(
+                f"{plan.name}: devices disagree on the forward issue "
+                f"order; not executable on the synchronous ring")
+    index_of = {mv: e for e, mv in enumerate(seq0)}
+    MV = M * V
+    m_of_e = tuple(m for m, _ in seq0)
+    v_of_e = tuple(v for _, v in seq0)
+    fresh = tuple(v == 0 for v in v_of_e)
+    direct = [False] * MV
+    park = [False] * MV
+    for e, (m, v) in enumerate(seq0):
+        if v == 0:
+            continue
+        prev = index_of[(m, v - 1)]
+        gap = e - prev
+        if gap < N:
+            raise ValueError(
+                f"{plan.name}: pass {v} of micro-batch {m} issued only "
+                f"{gap} elements after pass {v - 1}; the ring return "
+                f"needs {N} ticks (M={M}, N={N}, V={V})")
+        if gap == N:
+            direct[e] = True
+        else:
+            park[prev] = True
+    collect = tuple(v == V - 1 for v in v_of_e)
+    return RingLowering(schedule=plan.name, M=M, N=N, V=V,
+                        m_of_e=m_of_e, v_of_e=v_of_e, fresh=fresh,
+                        direct=tuple(direct), park=tuple(park),
+                        collect=collect)

@@ -1,7 +1,7 @@
 """Closed-form pipeline-schedule cost models — paper Tables 1 and 2,
-extended with an interleaved virtual-stage schedule.
+extended with interleaved virtual-stage schedules.
 
-Five schedules:
+Six schedules:
 
 * ``1F1B-AS`` — async (FPGA-style) one-forward-one-backward.
 * ``FBP-AS``  — async, FP and BP computed in parallel on each accelerator
@@ -11,6 +11,15 @@ Five schedules:
   (the paper's contribution). Double activation memory vs SNO.
 * ``1F1B-I``  — async interleaved 1F1B over V *virtual stages* per device
   (beyond-paper; the Megatron/DAPPLE interleaving direction in PAPERS.md).
+* ``1F1B-I-ML`` — memory-lean interleaved 1F1B (Megatron ordering from
+  "Memory-Efficient Pipeline-Parallel DNN Training"): micro-batches advance
+  in groups of N with warm-up ``2(N-n-1) + (V-1)N``, cutting the resident
+  features term from ``(V-1)M`` to ``(V-1)N`` at the same makespan.
+
+The op orders behind these rows live in :mod:`repro.core.schedplan` (the
+schedule-plan IR); the features rows here are the algebraic form of
+``SchedPlan.peak_live()``'s symbolic table replay, and the differential
+suite pins the two (and the discrete-event simulator) together.
 
 Symbols (paper):  M = micro-batches per mini-batch, N = pipeline stages,
 F/B = per-micro-batch FP/BP compute time of one (balanced) stage,
@@ -124,21 +133,56 @@ def eval_1f1b_interleaved(M: int, N: int, F: float, B: float, SR: float,
         V=V)
 
 
+def eval_1f1b_interleaved_memlean(M: int, N: int, F: float, B: float,
+                                  SR: float, a: float, w: float,
+                                  V: int = 2) -> ScheduleEval:
+    """Memory-lean interleaved 1F1B (Megatron ordering; see
+    :func:`repro.core.schedplan.build_1f1b_interleaved_memlean`).
+
+    Micro-batches advance in groups of N, cycling the V chunks inside each
+    group, with warm-up ``2(N - n - 1) + (V-1)N``.  Makespan and bubble are
+    identical to the streaming ``1F1B-I`` order, but the per-device peak
+    resident features — derived by replaying the op table symbolically —
+    drop to ``min(M*V, 2(N-i) + (V-1)N + 1)`` chunk activations: the
+    ``(V-1)M`` term becomes ``(V-1)N``, so the row no longer grows with
+    the micro-batch count.  Requires ``M % N == 0`` (Megatron's group
+    constraint, which is also what lets the runtime consume every ring
+    return the tick it arrives, deleting the [M, ...] park buffer)."""
+    if V < 1:
+        raise ValueError(f"V must be >= 1, got {V}")
+    if M < N or M % N != 0:
+        raise ValueError(
+            f"1F1B-I-ML needs M % N == 0 (micro-batch groups of the "
+            f"pipeline depth), got M={M}, N={N}")
+    from repro.core.schedplan import live_activation_counts
+    t = (M * V + N - 1) * (F + B) / V
+    feats = tuple(float(c) * a for c in
+                  live_activation_counts("1F1B-I-ML", M, N, V))
+    return ScheduleEval(
+        name="1F1B-I-ML", minibatch_time=t,
+        bubble_fraction=(N - 1) / (M * V + N - 1),
+        features_memory=feats, weights_memory=2 * w,
+        bandwidth_demand=(V * a / F) if F > 0 else float("inf"),
+        V=V)
+
+
 SCHEDULES = {
     "1F1B-AS": eval_1f1b_as,
     "FBP-AS": eval_fbp_as,
     "1F1B-SNO": eval_1f1b_sno,
     "1F1B-SO": eval_1f1b_so,
     "1F1B-I": eval_1f1b_interleaved,
+    "1F1B-I-ML": eval_1f1b_interleaved_memlean,
 }
 
-ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS", "1F1B-I")
+ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS", "1F1B-I", "1F1B-I-ML")
 SYNC_SCHEDULES = ("1F1B-SNO", "1F1B-SO")
 
 
 def schedules_for(async_capable: bool) -> tuple[str, ...]:
     """Hardware gating (paper §3.2): FPGA-like devices stream asynchronously,
-    GPU-like devices must use the synchronous schedules.  ``1F1B-I`` relies
-    on overlapping the V-times-denser boundary traffic, so it is offered to
-    async-capable clusters only."""
+    GPU-like devices must use the synchronous schedules.  The interleaved
+    schedules (``1F1B-I``/``1F1B-I-ML``) rely on overlapping the
+    V-times-denser boundary traffic, so they are offered to async-capable
+    clusters only."""
     return ASYNC_SCHEDULES if async_capable else SYNC_SCHEDULES

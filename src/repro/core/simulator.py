@@ -11,12 +11,16 @@ stage-boundary transfers are tasks too.  Three communication models:
 * ``blocking`` — a transfer occupies *both* end-point devices for SR
                  (1F1B-SNO: synchronous execution, no overlap).
 
-Interleaved 1F1B (``1F1B-I``) runs V *virtual stages* per device: virtual
-stage ``v*N + n`` is chunk v of device n, so a micro-batch loops the device
-chain V times.  The op-order generator (`_order_1f1b_interleaved`) streams
-chunk passes — all M micro-batches finish pass v before pass v+1 enters —
-which is exactly the runtime's circular ``ppermute`` schedule and yields the
-closed-form makespan ``(M*V + N - 1)(F + B)/V`` for M >= N.
+Op orders come from the schedule-plan IR (:mod:`repro.core.schedplan`):
+``simulate`` builds the per-device op table once and replays it, so the
+simulator, the closed forms and the SPMD runtime all execute the same
+compiled order.  Interleaved 1F1B (``1F1B-I``) runs V *virtual stages*
+per device (virtual stage ``v*N + n`` is chunk v of device n) in
+streaming chunk-pass order — the runtime's circular ``ppermute``
+schedule, closed-form makespan ``(M*V + N - 1)(F + B)/V`` for M >= N.
+``1F1B-I-ML`` replays the Megatron memory-lean interleaved order (groups
+of N micro-batches, warm-up ``2(N-n-1) + (V-1)N``): same makespan,
+``(V-1)N`` resident-features term instead of ``(V-1)M``.
 
 The simulator also tracks the peak number of live micro-batch activations
 per device, which is the paper's "features memory" column.
@@ -24,8 +28,9 @@ per device, which is the paper's "features memory" column.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Sequence
+
+from repro.core import schedplan as SP
 
 
 @dataclasses.dataclass
@@ -38,42 +43,26 @@ class SimResult:
         return self.idle[stage] / self.makespan if self.makespan else 0.0
 
 
-def _order_1f1b(M: int, N: int, n: int, warmup: int) -> list[tuple[str, int]]:
-    """Per-stage op order: ('F'|'B', microbatch)."""
-    warmup = max(1, min(M, warmup))
-    ops: list[tuple[str, int]] = [("F", m) for m in range(warmup)]
-    nf, nb = warmup, 0
-    while nb < M:
-        ops.append(("B", nb)); nb += 1
-        if nf < M:
-            ops.append(("F", nf)); nf += 1
-    return ops
-
-
-def _order_1f1b_interleaved(M: int, N: int, n: int, V: int
-                            ) -> list[tuple[str, int, int]]:
-    """Per-device op order for interleaved 1F1B: ('F'|'B', m, vstage).
-
-    Device n owns virtual stages ``v*N + n`` (chunk v).  Forward work
-    streams in chunk-pass order (pass v of every micro-batch before pass
-    v+1); backward streams in the mirror order (last chunk first).  The
-    warm-up must cover the full first V-1 passes plus the usual 1F1B
-    ``N - n`` in-flight window: micro-batch 0's backward only exists once
-    it has traversed all N*V virtual stages.
-    """
-    MV = M * V
-    fwd = [(e % M, (e // M) * N + n) for e in range(MV)]
-    bwd = [(e % M, (V - 1 - e // M) * N + n) for e in range(MV)]
-    warmup = max(1, min(MV, (V - 1) * M + (N - n)))
-    ops: list[tuple[str, int, int]] = [("F", m, vs) for m, vs in fwd[:warmup]]
-    nf, nb = warmup, 0
-    while nb < MV:
-        m, vs = bwd[nb]
-        ops.append(("B", m, vs)); nb += 1
-        if nf < MV:
-            m, vs = fwd[nf]
-            ops.append(("F", m, vs)); nf += 1
-    return ops
+# default communication model per schedule-table name (the paper's async
+# figures omit SR; SNO pays it blocking, SO hides it behind compute)
+_DEFAULT_COMM = {
+    "gpipe": "free",
+    "1F1B-AS": "free",
+    # FBP-AS: FPGA spatial dataflow — FP and BP *timeshare* the DSP array,
+    # so a (F, B) pair still costs F+B of device time (paper Table 1 keeps
+    # the makespan equal to 1F1B-AS); what changes is the pipeline depth of
+    # BP behind FP — doubled warm-up — hence 2x live activations and the
+    # gentler 2a/(F+B) bandwidth demand.
+    "FBP-AS": "free",
+    "1F1B-SNO": "blocking",
+    "1F1B-SO": "latency",
+    "1F1B-I": "free",
+    "1F1B-I-ML": "free",
+    "1f1b": "free",
+    "1f1b-2x": "free",
+    "1f1b-interleaved": "free",
+    "1f1b-interleaved-memlean": "free",
+}
 
 
 def simulate(schedule: str, M: int, N: int,
@@ -82,45 +71,21 @@ def simulate(schedule: str, M: int, N: int,
              comm: str | None = None) -> SimResult:
     """Simulate one mini-batch of M micro-batches through N devices.
 
-    ``V`` (>1 only for ``1F1B-I``) interleaves V virtual stages per device;
-    per-chunk compute time is the device time divided by V.  ``comm``
-    overrides the schedule's default communication model (used by the
-    differential tests to bracket the closed forms).
+    ``V`` (>1 only for the interleaved schedules) interleaves V virtual
+    stages per device; per-chunk compute time is the device time divided
+    by V.  ``comm`` overrides the schedule's default communication model
+    (used by the differential tests to bracket the closed forms).
     """
     Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
     Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
     assert len(Fs) == len(Bs) == N
 
-    if schedule == "1F1B-AS":
-        default_comm = "free"
-        orders = [_order_1f1b(M, N, n, N - n) for n in range(N)]
-    elif schedule == "FBP-AS":
-        # FPGA spatial dataflow: FP and BP *timeshare* the DSP array, so a
-        # (F, B) pair still costs F+B of device time (paper Table 1 keeps
-        # the makespan equal to 1F1B-AS); what changes is the pipeline
-        # depth of BP behind FP — doubled warm-up — hence 2x live
-        # activations and the gentler 2a/(F+B) bandwidth demand.
-        default_comm = "free"
-        orders = [_order_1f1b(M, N, n, 2 * (N - n) - 1) for n in range(N)]
-    elif schedule == "1F1B-SNO":
-        default_comm = "blocking"
-        orders = [_order_1f1b(M, N, n, N - n) for n in range(N)]
-    elif schedule == "1F1B-SO":
-        default_comm = "latency"
-        orders = [_order_1f1b(M, N, n, 2 * (N - n) - 1) for n in range(N)]
-    elif schedule == "1F1B-I":
-        if M < N:
-            raise ValueError(f"1F1B-I needs M >= N to stream chunk passes "
-                             f"(got M={M}, N={N})")
-        default_comm = "free"
-        orders = [_order_1f1b_interleaved(M, N, n, V) for n in range(N)]
-    else:
+    default_comm = _DEFAULT_COMM.get(schedule)
+    if default_comm is None:
         raise ValueError(schedule)
-    if schedule != "1F1B-I":
-        if V != 1:
-            raise ValueError(f"V={V} only supported for 1F1B-I")
-        # normalise (kind, m) -> (kind, m, vstage) with vstage == device
-        orders = [[(k, m, n) for k, m in ops] for n, ops in enumerate(orders)]
+    plan = SP.build_schedule(schedule, M, N, V)
+    orders = [[(op.kind, op.m, op.vstage) for op in ops]
+              for ops in plan.device_ops]
     comm = comm or default_comm
     if comm not in ("free", "latency", "blocking"):
         raise ValueError(comm)

@@ -6,6 +6,13 @@ CPU quickstart:
     PYTHONPATH=src python -m repro.launch.serve \\
         --arch llama3.2-1b --reduced --data 2 --stages 2 --tensor 2 \\
         --batch 8 --prompt-len 32 --gen 16
+
+``--virtual V`` (V > 1) runs the *prefill* phase on an interleaved
+1F1B-I plan — prefill is throughput-bound, so the V-times-smaller flush
+bubble pays — then unstacks the V-chunk parameters and restacks them
+contiguously for the latency-bound decode loop, whose plan stays V=1.
+The prefill cache is written chunk-stacked [S, V, Lc, ...] and is
+re-folded to the contiguous [S, Lps, ...] decode layout between phases.
 """
 from __future__ import annotations
 
@@ -31,6 +38,12 @@ def main(argv=None):
     ap.add_argument("--stages", type=int, default=0)
     ap.add_argument("--tensor", type=int, default=0)
     ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--virtual", type=int, default=0,
+                    help="interleave the PREFILL over V chunks/device "
+                         "(decode always runs the contiguous V=1 plan)")
+    ap.add_argument("--schedule", default="auto",
+                    help="prefill op order (schedplan name); memlean needs "
+                         "--microbatches %% stages == 0")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -44,30 +57,49 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, stages=args.stages)
     if args.tensor:
         cfg = dataclasses.replace(cfg, tensor=args.tensor)
+    if args.virtual:
+        cfg = dataclasses.replace(cfg, virtual=args.virtual)
     from repro.launch.mesh import make_mesh
     mesh = make_mesh((args.data, cfg.stages, cfg.tensor),
                      ("data", "stage", "tensor"))
-    plan = ST.plan_stages(cfg)
-    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(args.seed), plan)
+    # decode always runs the contiguous plan; prefill may interleave
+    plan = ST.plan_stages(cfg, virtual=1)
+    plan_p = ST.plan_stages(cfg) if cfg.virtual > 1 else plan
+    params_p = ST.init_stacked_params(cfg, jax.random.PRNGKey(args.seed),
+                                      plan_p)
+    params = ST.restack_params(params_p, plan_p, plan, cfg.n_layers) \
+        if cfg.virtual > 1 else params_p
     max_len = args.prompt_len + args.gen
-    pcfg = RT.PipelineConfig(n_microbatches=args.microbatches)
+    pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
+                             schedule=args.schedule)
+    pcfg1 = RT.PipelineConfig(n_microbatches=args.microbatches)
 
-    prefill, _, cspecs, _ = RT.make_serve_step(
-        cfg, mesh, plan, pcfg, max_len=max_len, global_batch=args.batch,
+    prefill, _, cspecs_p, _ = RT.make_serve_step(
+        cfg, mesh, plan_p, pcfg, max_len=max_len, global_batch=args.batch,
         q_len=args.prompt_len)
-    decode, _, _, _ = RT.make_serve_step(
-        cfg, mesh, plan, pcfg, max_len=max_len, global_batch=args.batch,
+    decode, _, cspecs, _ = RT.make_serve_step(
+        cfg, mesh, plan, pcfg1, max_len=max_len, global_batch=args.batch,
         q_len=1)
     cache = jax.jit(
-        lambda: RT.init_pipeline_cache(cfg, plan, args.batch, max_len),
-        out_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs))()
+        lambda: RT.init_pipeline_cache(cfg, plan_p, args.batch, max_len),
+        out_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                   cspecs_p))()
 
     prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab)
     t0 = time.time()
-    logits, cache = prefill(params, cache, dict(tokens=prompt))
+    logits, cache = prefill(params_p, cache, dict(tokens=prompt))
     logits.block_until_ready()
     t_prefill = time.time() - t0
+    if cfg.virtual > 1:
+        # re-fold the chunk-stacked [S, V, Lc, ...] prefill cache into the
+        # contiguous [S, Lps, ...] layout the decode plan scans
+        refold = jax.jit(
+            lambda c: jax.tree.map(
+                lambda a: ST.restack_layers(a, plan_p, plan, cfg.n_layers), c),
+            out_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       cspecs))
+        cache = refold(cache)
     next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
     generated = [np.asarray(next_tok)]
     t0 = time.time()

@@ -41,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--virtual", type=int, default=0,
                     help="1F1B-I virtual stages (chunks) per device; "
                          "needs --microbatches >= stages")
+    ap.add_argument("--schedule", default="",
+                    help="pipeline op order: auto | 1f1b | 1f1b-interleaved"
+                         " | 1f1b-interleaved-memlean | gpipe "
+                         "(memlean needs --microbatches %% stages == 0)")
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -64,6 +68,8 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, tensor=args.tensor)
     if args.virtual:
         cfg = dataclasses.replace(cfg, virtual=args.virtual)
+    if args.schedule:
+        cfg = dataclasses.replace(cfg, schedule=args.schedule)
     if args.auto_plan:
         from repro.core.autoplan import auto_plan
         plan_ = auto_plan(cfg, global_batch=args.batch, seq_len=args.seq,
@@ -73,6 +79,7 @@ def main(argv=None):
         args.microbatches = plan_.n_microbatches
         print(f"auto-plan: stages={plan_.stages} tensor={plan_.tensor} "
               f"M={plan_.n_microbatches} sched={plan_.schedule} "
+              f"V={plan_.virtual} "
               f"(predicted {plan_.predicted_step_time*1e3:.2f} ms/step)")
     need = args.data * cfg.stages * cfg.tensor
     assert need <= jax.device_count(), \
@@ -92,7 +99,7 @@ def main(argv=None):
     opt = AdamW(lr=warmup_cosine(args.lr, 20, args.steps), weight_decay=0.01)
     opt_state = opt.init(params)
     pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
-                             remat=args.remat)
+                             schedule=cfg.schedule, remat=args.remat)
     step_fn, specs = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,

@@ -29,13 +29,31 @@ models for GPU/FPGA targets.
 Interleaved 1F1B (``1F1B-I``, plan.virtual = V > 1): parameters arrive
 stacked ``[1, V, Lc, ...]`` — V non-contiguous layer chunks per device,
 chunk v of device n being virtual stage v*S + n — and the tick scan runs
-``M*V + S - 1`` ticks with the ppermute daisy chain looping V times.  Each
-tick the device selects chunk ``(t - stage) // M``; stage 0 injects fresh
-micro-batches on pass 0 and re-injects ring-returned activations (a
-``[M, ...]`` return buffer) on later passes, so the pipeline-flush bubble
-shrinks by V, matching ``eval_1f1b_interleaved`` and the discrete-event
-simulator's ``1F1B-I`` order.  Requires M >= S so chunk passes stream
-without stalling.
+``M*V + S - 1`` ticks with the ppermute daisy chain looping V times.
+
+The per-tick (stage, micro-batch, chunk) assignment is *data*, not
+arithmetic: ``make_train_step`` builds the schedule's op table with the
+schedule-plan IR (:mod:`repro.core.schedplan`), lowers it to per-element
+lookup arrays (:func:`repro.core.schedplan.lower_to_ring`), and the scan
+body indexes them — the same compiled order the discrete-event simulator
+replays.  ``PipelineConfig.schedule`` selects the order:
+
+* ``1f1b-interleaved`` (the ``auto`` default for V > 1) — streaming chunk
+  passes; stage 0 injects fresh micro-batches on pass 0 and re-injects
+  ring-returned activations from a ``[M, ...]`` return buffer (parked
+  there for M - S ticks; the buffer is gated to stage 0 and elided when
+  M == S).  Requires M >= S.
+* ``1f1b-interleaved-memlean`` — the Megatron memory-lean order
+  (micro-batch groups of S, warm-up ``2(S-n-1) + (V-1)S``): every ring
+  return is consumed the very tick it arrives back at stage 0, so the
+  [M, ...] return buffer vanishes from the scan carry — the runtime
+  realisation of the closed form's ``(V-1)M -> (V-1)S`` features-memory
+  drop.  Requires M % S == 0.
+
+Micro-batch positions (``pos3``, VLM M-RoPE) ride the ppermute ring
+alongside the activation, so stage s applies the positions of the
+micro-batch it actually holds — not stage 0's — whichever schedule is
+running.
 """
 from __future__ import annotations
 
@@ -51,6 +69,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ArchConfig
+from repro.core import schedplan as SP
 from repro.models import layers as LYR
 from repro.models import model as M
 from repro.pipeline import stage as ST
@@ -59,6 +78,9 @@ from repro.pipeline import stage as ST
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     n_microbatches: int = 4
+    schedule: str = "auto"          # schedplan name: auto | 1f1b |
+                                    # 1f1b-interleaved |
+                                    # 1f1b-interleaved-memlean | gpipe
     remat: str = "stage"            # none | stage | full
     pod_role: str = "data"          # data | stage  (stage = pipeline over DCN)
     unroll: bool = False            # fully unroll ALL scans (roofline mode)
@@ -189,6 +211,69 @@ def _hidden_of(y):
     return y["h_dec"] if isinstance(y, dict) else y
 
 
+def _ring_tables(lowering: SP.RingLowering) -> dict:
+    """The lowering's per-element lookup arrays as device constants: the
+    per-tick (micro-batch, chunk, fresh/direct/park/collect) assignment of
+    the compiled schedule, indexed by ``e = tick - stage`` in the scan."""
+    return dict(
+        m=jnp.asarray(lowering.m_of_e, jnp.int32),
+        v=jnp.asarray(lowering.v_of_e, jnp.int32),
+        fresh=jnp.asarray(lowering.fresh, bool),
+        direct=jnp.asarray(lowering.direct, bool),
+        park=jnp.asarray(lowering.park, bool),
+        collect=jnp.asarray(lowering.collect, bool))
+
+
+def _at(table: jnp.ndarray, idx):
+    return lax.dynamic_index_in_dim(table, idx, 0, keepdims=False)
+
+
+def _ring_ingest(tab: dict, MV: int, S: int, stage_idx, t, inj, x_cur,
+                 retbuf):
+    """Stage-0 ring ingestion for one tick of the compiled schedule: park
+    the arriving ring return (when the schedule buffers; stage 0 only),
+    then select this tick's stage-0 source — fresh injection (chunk-0
+    pass), the ring return straight off the ppermute carry (``direct``),
+    or the parked return.  ``retbuf`` is None for schedules that consume
+    every return the tick it arrives.  Returns (retbuf, x_in)."""
+    if retbuf is not None:
+        e_arr = t - S
+        eacl = jnp.clip(e_arr, 0, MV - 1)
+        do_park = ((e_arr >= 0) & _at(tab["park"], eacl)
+                   & (stage_idx == 0))
+        slot = _at(tab["m"], eacl)
+
+        def park(rb, c):
+            old = lax.dynamic_index_in_dim(rb, slot, 0, keepdims=False)
+            return lax.dynamic_update_index_in_dim(
+                rb, jnp.where(do_park, c, old), slot, 0)
+
+        retbuf = jax.tree.map(park, retbuf, x_cur)
+    e0 = jnp.clip(t, 0, MV - 1)
+    m0 = _at(tab["m"], e0)
+    is_fresh = _at(tab["fresh"], e0)
+    if retbuf is not None:
+        take_direct = _at(tab["direct"], e0)
+        src = jax.tree.map(
+            lambda q, rb, c: jnp.where(
+                is_fresh,
+                lax.dynamic_index_in_dim(q, m0, 0, keepdims=False),
+                jnp.where(take_direct, c,
+                          lax.dynamic_index_in_dim(rb, m0, 0,
+                                                   keepdims=False))),
+            inj, retbuf, x_cur)
+    else:
+        src = jax.tree.map(
+            lambda q, c: jnp.where(
+                is_fresh,
+                lax.dynamic_index_in_dim(q, m0, 0, keepdims=False),
+                c),
+            inj, x_cur)
+    x_in = jax.tree.map(
+        lambda s_, c: jnp.where(stage_idx == 0, s_, c), src, x_cur)
+    return retbuf, x_in
+
+
 # ---------------------------------------------------------------------------
 # Training step factory.
 # ---------------------------------------------------------------------------
@@ -212,15 +297,15 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         f"stage plan ({plan.n_stages}) != mesh pipeline depth ({S}); " \
         f"with pod_role='stage' build the plan with n_stages=pod*stages"
     V = plan.virtual
-    assert V == 1 or not cfg.fsdp, "1F1B-I (virtual>1) with fsdp unsupported"
     specs = ST.param_specs(cfg, shape_params, stage_axis=stage_ax,
                            fsdp_axis="data" if cfg.fsdp else None,
                            tensor_size=mesh.shape["tensor"], virtual=V)
     M_ = pcfg.n_microbatches
-    assert V == 1 or M_ >= S, \
-        f"1F1B-I needs n_microbatches ({M_}) >= stages ({S}) to stream " \
-        f"chunk passes through the ring"
-    fsdp_dims = ST.fsdp_scan_dims(specs) if cfg.fsdp else {}
+    # compile the schedule's op table and lower it onto the ring: the
+    # per-tick (stage, micro-batch, chunk) assignment becomes lookup data
+    sched = SP.resolve_ring_schedule(pcfg.schedule, V)
+    lowering = SP.lower_to_ring(SP.build_schedule(sched, M_, S, V))
+    fsdp_dims = ST.fsdp_scan_dims(specs, virtual=V) if cfg.fsdp else {}
     ep_dp_axis = "data" if (cfg.moe and cfg.moe.ep_data) else None
     ep_n_dp = mesh.shape["data"] if ep_dp_axis else 1
     n_batch_shards = math.prod(mesh.shape[a] for a in batch_axes) or 1
@@ -246,41 +331,29 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         lp_local = jax.tree.map(lambda a: a[0], params["layers"])
         inj, pos, pos3, mb, T = _prepare_microbatches(
             cfg, params, batch, M_, tp_index)
+        # ring payload: the boundary activation plus, when present, the
+        # micro-batch's pos3 — positions travel WITH the micro-batch, so
+        # stage s applies the positions of the micro-batch it holds
+        ring_inj = {"x": inj}
+        if pos3 is not None:
+            ring_inj["p3"] = pos3
+        tab = _ring_tables(lowering)
+        MV = M_ * V
+        use_retbuf = lowering.needs_retbuf
 
         def tick(carry, t):
-            if V > 1:
+            if use_retbuf:
                 x_cur, outbuf, retbuf, aux = carry
-                # a pass that looped back from the last stage arrives S
-                # ticks after it entered; park it until its next pass
-                e_arr = t - S
-                ok_arr = (e_arr >= 0) & (e_arr < M_ * (V - 1))
-                slot = jnp.clip(e_arr, 0, M_ * (V - 1) - 1) % M_
-
-                def park(rb, c):
-                    old = lax.dynamic_index_in_dim(rb, slot, 0,
-                                                   keepdims=False)
-                    return lax.dynamic_update_index_in_dim(
-                        rb, jnp.where(ok_arr, c, old), slot, 0)
-
-                retbuf = jax.tree.map(park, retbuf, x_cur)
             else:
                 x_cur, outbuf, aux = carry
                 retbuf = None
-            tcl = jnp.clip(t, 0, M_ - 1)
-            m0 = jnp.clip(t, 0, M_ * V - 1) % M_    # stage-0 micro-batch
+            retbuf, x_in = _ring_ingest(tab, MV, S, stage_idx, t,
+                                        ring_inj, x_cur, retbuf)
+            p3 = x_in.get("p3")
+            e_idx = t - stage_idx
+            ecl = jnp.clip(e_idx, 0, MV - 1)
             if V > 1:
-                src = jax.tree.map(
-                    lambda q, rb: jnp.where(
-                        t < M_, q[tcl],
-                        lax.dynamic_index_in_dim(rb, m0, 0, keepdims=False)),
-                    inj, retbuf)
-            else:
-                src = jax.tree.map(lambda q: q[tcl], inj)
-            x_in = jax.tree.map(
-                lambda s_, c: jnp.where(stage_idx == 0, s_, c), src, x_cur)
-            p3 = None if pos3 is None else pos3[m0]
-            if V > 1:
-                chunk = jnp.clip((t - stage_idx) // M_, 0, V - 1)
+                chunk = _at(tab["v"], ecl)
                 lp_t = jax.tree.map(
                     lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
                                                        keepdims=False),
@@ -311,34 +384,37 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                         "moe_y"))
             elif pcfg.remat in ("stage", "full"):
                 stage_fn = jax.checkpoint(stage_fn)
-            y, a = stage_fn(x_in)
+            y, a = stage_fn(x_in["x"])
             # ticks outside this stage's window process garbage: gate aux
-            e_idx = t - stage_idx
-            a = jnp.where((e_idx >= 0) & (e_idx < M_ * V), a, 0.0)
-            # last stage collects its finished micro-batch (final pass only)
-            out_t = t - (S - 1)
-            oc = jnp.clip(out_t - M_ * (V - 1), 0, M_ - 1)
+            a = jnp.where((e_idx >= 0) & (e_idx < MV), a, 0.0)
+            # last stage collects a finished micro-batch (chunk V-1 output)
+            out_e = t - (S - 1)
+            oecl = jnp.clip(out_e, 0, MV - 1)
+            oc = _at(tab["m"], oecl)
+            do_collect = ((out_e >= 0) & _at(tab["collect"], oecl)
+                          & (stage_idx == S - 1))
             cur = lax.dynamic_index_in_dim(outbuf, oc, 0, keepdims=False)
-            wr = jnp.where((out_t >= M_ * (V - 1)) & (stage_idx == S - 1),
-                           _hidden_of(y), cur)
+            wr = jnp.where(do_collect, _hidden_of(y), cur)
             outbuf = lax.dynamic_update_index_in_dim(outbuf, wr, oc, 0)
-            # daisy-chain shift
+            # daisy-chain shift (activation + its pos3 together)
+            y_ring = dict(x_in, x=y)
             perm = [(i, (i + 1) % S) for i in range(S)]
-            x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm), y)
-            if V > 1:
+            x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm),
+                                  y_ring)
+            if use_retbuf:
                 return (x_next, outbuf, retbuf, aux + a), None
             return (x_next, outbuf, aux + a), None
 
-        x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), inj)
+        x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), ring_inj)
         outbuf0 = jnp.zeros((M_, mb, T, cfg.d_model),
-                            _hidden_of(x0).dtype)
+                            _hidden_of(x0["x"]).dtype)
         carry0 = (x0, outbuf0, jnp.zeros((), jnp.float32))
-        if V > 1:
-            retbuf0 = jax.tree.map(jnp.zeros_like, inj)
+        if use_retbuf:
+            retbuf0 = jax.tree.map(jnp.zeros_like, ring_inj)
             carry0 = (x0, outbuf0, retbuf0, jnp.zeros((), jnp.float32))
         carry_out, _ = lax.scan(
             tick, carry0,
-            jnp.arange(M_ * V + S - 1), unroll=pcfg.tick_scan_unroll)
+            jnp.arange(lowering.n_ticks), unroll=pcfg.tick_scan_unroll)
         outbuf, aux = carry_out[1], carry_out[-1]
 
         h = LYR.rms_norm(outbuf.reshape(M_ * mb, T, -1), params["final_norm"],
@@ -391,18 +467,21 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
 # ---------------------------------------------------------------------------
 
 def cache_specs(cfg: ArchConfig, cache_shapes, batch_axes, *,
-                b_sharded: bool, stage_axis="stage"):
-    """Stage-sharded cache specs: every leaf is [S, Lps, B, ...].
-    Attention K/V caches additionally shard their head dim over tensor."""
+                b_sharded: bool, stage_axis="stage", virtual: int = 1):
+    """Stage-sharded cache specs: every leaf is [S, Lps, B, ...] — or
+    [S, V, Lc, B, ...] for an interleaved (virtual > 1) plan, which shifts
+    the positional dims right by one.  Attention K/V caches additionally
+    shard their head dim over tensor."""
+    off = 0 if virtual == 1 else 1
     def leaf(path, l):
         name = getattr(path[-1], "key", None)
         if name == "len":
-            return P(stage_axis, None)
+            return P(*([stage_axis] + [None] * (l.ndim - 1)))
         spec = [stage_axis, None] + [None] * (l.ndim - 2)
-        if b_sharded and l.ndim >= 3:
-            spec[2] = batch_axes
-        if name in ("k", "v", "xk", "xv") and l.ndim >= 6:
-            spec[4] = "tensor"       # [S, Lps, B, len, heads, hd]
+        if b_sharded and l.ndim >= 3 + off:
+            spec[2 + off] = batch_axes
+        if name in ("k", "v", "xk", "xv") and l.ndim >= 6 + off:
+            spec[4 + off] = "tensor"   # [S, (V,) Lps, B, len, heads, hd]
         return P(*spec)
     return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
 
@@ -455,12 +534,22 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     tick dynamic-slices its micro-batch rows.  Cache ``len`` counters are
     frozen during the tick scan (every micro-batch writes at the same
     offset) and advanced once at the end.
+
+    Interleaved (``plan.virtual`` = V > 1) plans are supported for the
+    *prefill* phase only: prefill is throughput-bound, so shrinking the
+    flush bubble by V pays, and the tick scan replays the same compiled
+    schedule table as training (cache leaves are [V, Lc, B, ...]; each
+    tick chunk-indexes them).  One-token decode is latency-bound — every
+    extra ring lap adds S hops to the token's critical path — so
+    ``q_len == 1`` with V > 1 still raises.
     """
-    if plan.virtual != 1:
+    V = plan.virtual
+    if V != 1 and q_len == 1:
         raise NotImplementedError(
-            "pipelined serving does not support interleaved (virtual>1) "
+            "pipelined decode does not support interleaved (virtual>1) "
             "plans; decode is latency-bound, not flush-bubble-bound — "
-            "use plan_stages(cfg, virtual=1) for serving")
+            "use plan_stages(cfg, virtual=1) for decode (prefill may "
+            "keep V > 1)")
     shape_params = jax.eval_shape(
         lambda k: ST.init_stacked_params(cfg, k, plan, param_dtype),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -472,9 +561,11 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         f"stage plan ({plan.n_stages}) != mesh pipeline depth ({S})"
     specs = ST.param_specs(cfg, shape_params, stage_axis=stage_ax,
                            fsdp_axis="data" if cfg.fsdp else None,
-                           tensor_size=mesh.shape["tensor"])
+                           tensor_size=mesh.shape["tensor"], virtual=V)
     M_ = pcfg.n_microbatches
-    fsdp_dims = ST.fsdp_scan_dims(specs) if cfg.fsdp else {}
+    sched = SP.resolve_ring_schedule(pcfg.schedule, V)
+    lowering = SP.lower_to_ring(SP.build_schedule(sched, M_, S, V))
+    fsdp_dims = ST.fsdp_scan_dims(specs, virtual=V) if cfg.fsdp else {}
     ep_dp_axis = "data" if (cfg.moe and cfg.moe.ep_data) else None
     ep_n_dp = mesh.shape["data"] if ep_dp_axis else 1
 
@@ -482,10 +573,15 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         functools.partial(init_pipeline_cache, cfg, plan, global_batch,
                           max_len, dtype=cache_dtype, enc_len=enc_len))
     cspecs = cache_specs(cfg, cache_shapes, batch_axes,
-                         b_sharded=batch_sharded, stage_axis=stage_ax)
+                         b_sharded=batch_sharded, stage_axis=stage_ax,
+                         virtual=V)
     batch_spec = dict(tokens=P(batch_axes if batch_sharded else None, None))
     if cfg.family == "vlm":
         batch_spec["pos3"] = P(None, batch_axes if batch_sharded else None, None)
+
+    tab = _ring_tables(lowering)
+    MV = M_ * V
+    use_retbuf = lowering.needs_retbuf
 
     def sharded_decode(params, cache, batch):
         stage_idx = lax.axis_index(stage_ax)
@@ -519,25 +615,45 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             pos3 = jnp.moveaxis(batch["pos3"].reshape(3, M_, mb, q_len), 1, 0)
 
         def tick(carry, t):
-            x_cur, cache_l, outbuf = carry
-            # micro-batch this stage works on at tick t
-            m_idx = t - stage_idx
-            valid = (m_idx >= 0) & (m_idx < M_)
-            mc = jnp.clip(m_idx, 0, M_ - 1)
-            x_in = jax.tree.map(
-                lambda q, c: jnp.where(stage_idx == 0,
-                                       q[jnp.clip(t, 0, M_ - 1)], c),
-                inj, x_cur)
-            # slice this micro-batch's cache rows
+            if use_retbuf:
+                x_cur, cache_l, outbuf, retbuf = carry
+            else:
+                x_cur, cache_l, outbuf = carry
+                retbuf = None
+            retbuf, x_in = _ring_ingest(tab, MV, S, stage_idx, t,
+                                        inj, x_cur, retbuf)
+            # element (micro-batch, chunk) this stage works on at tick t
+            e_idx = t - stage_idx
+            valid = (e_idx >= 0) & (e_idx < MV)
+            ecl = jnp.clip(e_idx, 0, MV - 1)
+            mc = _at(tab["m"], ecl)
+            if V > 1:
+                chunk = _at(tab["v"], ecl)
+                lp_t = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
+                                                       keepdims=False),
+                    lp_local)
+                sm_t = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
+                                                       keepdims=False),
+                    smeta_local)
+                cache_chunk = jax.tree.map(
+                    lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
+                                                       keepdims=False),
+                    cache_l)
+            else:
+                lp_t, sm_t, cache_chunk = lp_local, smeta_local, cache_l
+            # slice this micro-batch's cache rows ([Lc, B_loc, ...] leaves;
+            # 'len' counters are [Lc] and pass through whole)
             c_mb = jax.tree.map(
                 lambda a: lax.dynamic_slice_in_dim(a, mc * mb, mb, 1)
-                if a.ndim >= 2 else a, cache_l)
+                if a.ndim >= 2 else a, cache_chunk)
             p3 = None if pos3 is None else pos3[mc]
 
             def _run(args):
                 x_in, c_mb = args
                 y, _, c_new = apply_stage(
-                    cfg, lp_local, smeta_local, x_in, pos=pos, pos3=p3,
+                    cfg, lp_t, sm_t, x_in, pos=pos, pos3=p3,
                     cache=c_mb, tp_axis="tensor", tp_index=tp_index,
                     dp_axis=ep_dp_axis, n_dp=ep_n_dp,
                     fsdp_axis="data" if cfg.fsdp else None,
@@ -556,25 +672,41 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             c_new = jax.tree.map(
                 lambda new, old: jnp.where(valid, new, old), c_new, c_mb)
             c_new = _restore_len(c_new, c_mb)
-            cache_l = jax.tree.map(
+            cache_chunk = jax.tree.map(
                 lambda full, blk: lax.dynamic_update_slice_in_dim(
                     full, blk.astype(full.dtype), mc * mb, 1)
-                if full.ndim >= 2 else blk, cache_l, c_new)
-            out_t = t - (S - 1)
-            oc = jnp.clip(out_t, 0, M_ - 1)
+                if full.ndim >= 2 else blk, cache_chunk, c_new)
+            if V > 1:
+                cache_l = jax.tree.map(
+                    lambda full, blk: lax.dynamic_update_index_in_dim(
+                        full, blk.astype(full.dtype), chunk, 0),
+                    cache_l, cache_chunk)
+            else:
+                cache_l = cache_chunk
+            # last stage emits the final (chunk V-1) last-position hidden
+            out_e = t - (S - 1)
+            oecl = jnp.clip(out_e, 0, MV - 1)
+            oc = _at(tab["m"], oecl)
+            do_collect = ((out_e >= 0) & _at(tab["collect"], oecl)
+                          & (stage_idx == S - 1))
             curo = lax.dynamic_index_in_dim(outbuf, oc, 0, keepdims=False)
-            wr = jnp.where((out_t >= 0) & (stage_idx == S - 1),
-                           _hidden_of(y)[:, -1:], curo)
+            wr = jnp.where(do_collect, _hidden_of(y)[:, -1:], curo)
             outbuf = lax.dynamic_update_index_in_dim(outbuf, wr, oc, 0)
             perm = [(i, (i + 1) % S) for i in range(S)]
             x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm), y)
+            if use_retbuf:
+                return (x_next, cache_l, outbuf, retbuf), None
             return (x_next, cache_l, outbuf), None
 
         x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), inj)
         outbuf0 = jnp.zeros((M_, mb, 1, cfg.d_model), x_all.dtype)
-        (_, cache_local, outbuf), _ = lax.scan(
-            tick, (x0, cache_local, outbuf0), jnp.arange(M_ + S - 1),
+        carry0 = (x0, cache_local, outbuf0)
+        if use_retbuf:
+            carry0 = carry0 + (jax.tree.map(jnp.zeros_like, inj),)
+        carry_out, _ = lax.scan(
+            tick, carry0, jnp.arange(lowering.n_ticks),
             unroll=pcfg.tick_scan_unroll)
+        cache_local, outbuf = carry_out[1], carry_out[2]
         cache_local = _advance_len(cache_local, q_len)
 
         h = LYR.rms_norm(outbuf.reshape(B_loc, 1, -1), params["final_norm"],

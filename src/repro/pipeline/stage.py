@@ -71,6 +71,31 @@ def unstack_chunks(a, plan: StagePlan):
     return a.swapaxes(0, 1).reshape((-1,) + a.shape[3:])
 
 
+def restack_layers(a, plan_from: StagePlan, plan_to: StagePlan,
+                   n_layers: int):
+    """Re-fold a layer-stacked leaf from one plan's chunk layout to
+    another's (e.g. the interleaved-prefill [S, V, Lc, ...] cache into the
+    contiguous [S, Lps, ...] decode layout): unstack to the global layer
+    order, trim to the real layers, re-pad by repeating the last real
+    layer (padded slots are inactive), restack for the target plan."""
+    u = unstack_chunks(a, plan_from)[:n_layers]
+    pad = plan_to.n_layers_padded - n_layers
+    if pad:
+        u = jnp.concatenate([u, jnp.repeat(u[-1:], pad, 0)], 0)
+    return _stack_chunks(u, plan_to)
+
+
+def restack_params(params: dict, plan_from: StagePlan, plan_to: StagePlan,
+                   n_layers: int) -> dict:
+    """Re-stack the ``layers`` subtree of a stacked parameter pytree from
+    one stage plan to another (embed/head/final_norm pass through)."""
+    out = dict(params)
+    out["layers"] = jax.tree.map(
+        lambda a: restack_layers(a, plan_from, plan_to, n_layers),
+        params["layers"])
+    return out
+
+
 def init_stacked_params(cfg: ArchConfig, key: jax.Array, plan: StagePlan,
                         dtype=jnp.float32) -> dict:
     """Global (unsharded-shape) parameters with layers stacked [S, Lps, ...]
@@ -167,9 +192,12 @@ def param_specs(cfg: ArchConfig, params: dict, *, stage_axis="stage",
     return jax.tree_util.tree_map_with_path(leaf_spec, params)
 
 
-def fsdp_scan_dims(specs: dict) -> dict:
-    """Map layer-leaf name -> all_gather dim *after* the leading [S, Lps]
-    dims are stripped by shard_map + the layer scan."""
+def fsdp_scan_dims(specs: dict, virtual: int = 1) -> dict:
+    """Map layer-leaf name -> all_gather dim *after* the leading stacking
+    dims are stripped: shard_map + the layer scan remove [S, Lps] for a
+    contiguous plan, and [S, V, Lc] (stage, chunk select, layer scan) for
+    an interleaved one — so the offset is 2 or 3 leading axes."""
+    lead = 2 if virtual == 1 else 3
     out: dict = {}
 
     def visit(path, spec):
@@ -177,7 +205,7 @@ def fsdp_scan_dims(specs: dict) -> dict:
         name = keys[-1]
         for i, s in enumerate(spec):
             if s == "data":
-                out[name] = i - 2
+                out[name] = i - lead
     jax.tree_util.tree_map_with_path(visit, specs["layers"])
     return out
 

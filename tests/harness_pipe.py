@@ -159,18 +159,22 @@ def moe_ep_data(arch="deepseek-v3-671b"):
 
 
 def interleaved_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
-                            virtual=2, microbatches=2):
+                            virtual=2, microbatches=2, schedule="auto",
+                            fsdp=0):
     """1F1B-I: V>1 chunked pipeline loss/grads must equal both the V=1
-    pipeline and the single-device reference."""
+    pipeline and the single-device reference — for every ring schedule
+    (streaming and memory-lean) and with fsdp sharding of the chunked
+    [S, V, Lc] parameters."""
     import dataclasses as _dc
     data = 8 // (stages * tensor) or 1
     cfg = get_config(arch).reduced(n_layers=stages * virtual, d_model=128)
-    cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=virtual)
+    cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=virtual,
+                      fsdp=bool(fsdp))
     mesh = _mesh(data, stages, tensor)
     plan = ST.plan_stages(cfg)
     assert plan.virtual == virtual and plan.layers_per_stage == 1
     params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
-    pcfg = RT.PipelineConfig(n_microbatches=microbatches)
+    pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=schedule)
     step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
     batch = _batch(cfg, 8, 32)
     loss, grads = step(params, batch)
@@ -192,16 +196,102 @@ def interleaved_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
     assert worst < 1e-4, worst
 
     # V=1 pipeline on the same weights (re-stacked contiguously)
-    cfg1 = _dc.replace(cfg, virtual=1)
+    cfg1 = _dc.replace(cfg, virtual=1, fsdp=False)
     plan1 = ST.plan_stages(cfg1)
     params1 = dict(rp)
     params1["layers"] = jax.tree.map(
         lambda a: ST._stack_chunks(a, plan1), rp["layers"])
-    step1, _ = RT.make_train_step(cfg1, mesh, plan1, pcfg)
+    step1, _ = RT.make_train_step(cfg1, mesh, plan1,
+                                  RT.PipelineConfig(
+                                      n_microbatches=microbatches))
     loss1, _ = step1(params1, batch)
     assert abs(float(loss) - float(loss1)) < 1e-4, \
         (float(loss), float(loss1))
     print(f"OK gerr={worst:.2e}")
+
+
+def pos3_ring(arch="qwen2-vl-7b", stages=4, tensor=1, virtual=1,
+              microbatches=4, schedule="auto"):
+    """Regression for the latent pos3 defect: per-micro-batch DISTINCT
+    M-RoPE positions must reach the stage that holds the micro-batch
+    (they ride the ppermute ring), not stage 0's micro-batch index."""
+    import dataclasses as _dc
+    data = 8 // (stages * tensor) or 1
+    cfg = get_config(arch).reduced(n_layers=max(4, stages * virtual),
+                                   d_model=128)
+    cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=virtual)
+    assert cfg.family == "vlm", "pos3 regression needs an M-RoPE arch"
+    mesh = _mesh(data, stages, tensor)
+    plan = ST.plan_stages(cfg)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=schedule)
+    step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+    B, T = 8, 32
+    batch = _batch(cfg, B, T)
+    # distinct positions per batch row => distinct per micro-batch
+    batch["pos3"] = jax.random.randint(jax.random.PRNGKey(7), (3, B, T),
+                                       0, T).astype(jnp.int32)
+    loss, grads = step(params, batch)
+    rp = _ref_params(cfg, params, plan)
+    ref_loss = M.loss_fn(cfg, rp, batch)
+    assert abs(float(loss) - float(ref_loss)) < 1e-4, \
+        (float(loss), float(ref_loss))
+    ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+    gp = jax.tree.map(
+        lambda a: np.asarray(ST.unstack_chunks(a, plan))[:cfg.n_layers],
+        grads["layers"])
+    gr = jax.tree.map(np.asarray, ref_grads["layers"])
+    errs = jax.tree.map(
+        lambda a, b: float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)),
+        gp, gr)
+    worst = max(jax.tree.leaves(errs))
+    assert worst < 1e-4, worst
+    print(f"OK gerr={worst:.2e}")
+
+
+def prefill_equivalence(arch="llama3.2-1b", stages=2, tensor=2, virtual=2,
+                        microbatches=2, schedule="auto"):
+    """Interleaved (V>1) pipelined prefill must match the single-device
+    reference — run in two segments so the second consumes the KV cache
+    the first wrote through the chunked [V, Lc, ...] layout.  Decode
+    (q_len=1) on an interleaved plan must still raise."""
+    import dataclasses as _dc
+    data = 8 // (stages * tensor) or 1
+    cfg = get_config(arch).reduced(n_layers=stages * virtual, d_model=128)
+    cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=virtual)
+    mesh = _mesh(data, stages, tensor)
+    plan = ST.plan_stages(cfg)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    B, P1, P2, maxlen = 8, 8, 8, 32
+    pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=schedule)
+    if virtual > 1:
+        try:
+            RT.make_serve_step(cfg, mesh, plan, pcfg, max_len=maxlen,
+                               global_batch=B, q_len=1)
+            raise AssertionError("interleaved decode must raise")
+        except NotImplementedError:
+            pass
+    pre1, _, cspecs, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
+                                            max_len=maxlen, global_batch=B,
+                                            q_len=P1)
+    pre2, _, _, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
+                                       max_len=maxlen, global_batch=B,
+                                       q_len=P2)
+    cache = jax.jit(lambda: RT.init_pipeline_cache(cfg, plan, B, maxlen),
+                    out_shardings=jax.tree.map(
+                        lambda s: NamedSharding(mesh, s), cspecs))()
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, P1 + P2), 0,
+                              cfg.vocab)
+    lg1, cache = pre1(params, cache, dict(tokens=toks[:, :P1]))
+    lg2, cache = pre2(params, cache, dict(tokens=toks[:, P1:]))
+    rp = _ref_params(cfg, params, plan)
+    rcache = M.init_cache(cfg, B, max_len=maxlen)
+    rlg1, rcache = M.decode_step(cfg, rp, dict(tokens=toks[:, :P1]), rcache)
+    rlg2, rcache = M.decode_step(cfg, rp, dict(tokens=toks[:, P1:]), rcache)
+    e1 = float(np.max(np.abs(np.asarray(lg1[:, 0]) - np.asarray(rlg1[:, -1]))))
+    e2 = float(np.max(np.abs(np.asarray(lg2[:, 0]) - np.asarray(rlg2[:, -1]))))
+    assert max(e1, e2) < TOL, (e1, e2)
+    print(f"OK maxerr={max(e1, e2):.2e}")
 
 
 
@@ -273,4 +363,6 @@ if __name__ == "__main__":
      "pod_stage_equivalence": pod_stage_equivalence,
      "gated_serve": gated_serve,
      "interleaved_equivalence": interleaved_equivalence,
+     "pos3_ring": pos3_ring,
+     "prefill_equivalence": prefill_equivalence,
      }[mode](*args)

@@ -99,6 +99,43 @@ def test_interleaved_rejected_when_memory_exceeded():
     assert all(m <= cap for m in r.per_stage_memory)
 
 
+def test_memlean_selected_when_memory_gates_plain_interleaving():
+    """Acceptance: on a memory-gated fixture where plain 1F1B-I is
+    rejected (its (V-1)M resident-features term blows the capacity), the
+    explorer must land on 1F1B-I-ML — whose (V-1)N term fits — rather
+    than falling back to a slower V=1 schedule."""
+    from repro.core.profiler import LayerProfile, NetworkProfile
+    from repro.core.hardware import DeviceSpec
+    # compute-heavy layers on fast links: interleaving is NOT comm-bound,
+    # so its smaller bubble wins on time and only memory can gate it
+    prof = NetworkProfile("acty", tuple(
+        LayerProfile(name=f"l{i}", flops_fwd=1e12, bytes_weights=1e6,
+                     bytes_act_out=1e9) for i in range(16)), unit="sample")
+    dev = DeviceSpec("async_dev", 100e12, 1e12, 1e15, 1e15,
+                     async_capable=True, efficiency=1.0)
+    cl = homogeneous_cluster(dev, 4)
+    # roomy: plain streaming 1F1B-I wins (memlean has no edge when memory
+    # is free, and the search prefers the incumbent on exact time ties)
+    roomy = explore(prof, cl, 16, candidate_Ms=[16], consider_dp=False,
+                    candidate_Vs=(2,))
+    assert roomy.schedule == "1F1B-I" and roomy.V == 2
+    # capacity between the memlean and streaming footprints: with M=16,
+    # N=4, V=2 the stage-1 live rows are 2(N-1)+(V-1)N+1 = 11 (memlean)
+    # vs (V-1)M + N = 20 (streaming)
+    cap = max(roomy.per_stage_memory) * (15.0 / 20.0)
+    tight = homogeneous_cluster(
+        dataclasses.replace(dev, memory_capacity=cap), 4)
+    r = explore(prof, tight, 16, candidate_Ms=[16], consider_dp=False,
+                candidate_Vs=(2,))
+    assert r.feasible
+    assert r.schedule == "1F1B-I-ML" and r.V == 2, (r.schedule, r.V)
+    assert all(m <= cap for m in r.per_stage_memory)
+    # and it keeps the interleaved makespan the V=1 fallback cannot reach
+    v1 = explore(prof, tight, 16, candidate_Ms=[16], consider_dp=False,
+                 candidate_Vs=())
+    assert r.minibatch_time < v1.minibatch_time
+
+
 def test_explorer_still_prefers_dp_for_resnet_with_interleaving_enabled():
     """Adding 1F1B-I to the search space must not flip the paper's
     ResNet-50 'use DP' answer (activation traffic only grows with V)."""

@@ -73,6 +73,57 @@ def test_interleaved_1f1b_grad_equivalence(stages, tensor, virtual,
              str(tensor), str(virtual), str(microbatches))
 
 
+@pytest.mark.parametrize("stages,tensor,virtual,microbatches", [
+    (2, 2, 2, 2),     # M == S: tight ring, every return consumed directly
+    (4, 1, 2, 4),     # 4-stage ring, Megatron group order, M == S
+    (2, 2, 2, 4),     # M == 2S: two micro-batch groups per chunk cycle
+])
+def test_memlean_1f1b_grad_equivalence(stages, tensor, virtual,
+                                       microbatches):
+    """1f1b-interleaved-memlean executes on the runtime ring with NO
+    [M, ...] return buffer and must stay grad-equivalent to the V=1
+    pipeline and the single-device reference."""
+    run_case("interleaved_equivalence", "llama3.2-1b", str(stages),
+             str(tensor), str(virtual), str(microbatches),
+             "1f1b-interleaved-memlean")
+
+
+def test_interleaved_fsdp_grad_equivalence():
+    """fsdp x virtual>1: the [S, V, Lc] stacking shifts the all_gather
+    dims (fsdp_scan_dims offsets); gradients must match the reference."""
+    run_case("interleaved_equivalence", "llama3.2-1b", "2", "2", "2", "4",
+             "auto", "1")
+    run_case("interleaved_equivalence", "llama3.2-1b", "2", "2", "2", "2",
+             "1f1b-interleaved-memlean", "1")
+
+
+@pytest.mark.parametrize("virtual", ["1", "2"])
+def test_pos3_rides_the_ppermute_ring(virtual):
+    """Regression (pre-seed defect): per-micro-batch DISTINCT M-RoPE
+    positions must follow their micro-batch through the ring — stage s
+    works on micro-batch (t - s) % M, not stage 0's t % M."""
+    if virtual == "1":
+        run_case("pos3_ring")                       # 4-stage, V=1
+    else:
+        run_case("pos3_ring", "qwen2-vl-7b", "2", "2", "2", "4")
+
+
+@pytest.mark.parametrize("arch,stages,tensor,virtual,microbatches,schedule", [
+    ("llama3.2-1b", 2, 2, 2, 4, "auto"),       # streaming, park buffer
+    ("llama3.2-1b", 2, 2, 2, 2,
+     "1f1b-interleaved-memlean"),              # memlean, no park buffer
+    ("llama3.2-1b", 2, 2, 4, 4, "auto"),       # deep interleave
+    ("mamba2-2.7b", 2, 1, 2, 2, "auto"),       # ssm conv/state cache chunks
+])
+def test_interleaved_prefill_equivalence(arch, stages, tensor, virtual,
+                                         microbatches, schedule):
+    """Pipelined prefill on an interleaved (V>1) plan: two-segment prefill
+    through the chunk-stacked cache must match the single-device
+    reference; interleaved one-token decode must still raise."""
+    run_case("prefill_equivalence", arch, str(stages), str(tensor),
+             str(virtual), str(microbatches), schedule)
+
+
 def test_pod_as_stage_pipeline():
     """Beyond-paper: pipeline depth spans the pod axis (pipeline over DCN);
     gradients must still match the reference."""

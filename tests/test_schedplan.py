@@ -1,0 +1,190 @@
+"""Schedule-plan IR: the one compiled op table must (a) replay through the
+discrete-event simulator to exactly the pre-IR makespans/closed forms,
+(b) predict peak resident features by symbolic replay consistently with
+both the O(1) algebraic rows and the timed simulator, and (c) lower onto
+the ring runtime with the documented feasibility rules."""
+import random
+
+import pytest
+
+from repro.core import schedplan as SP
+from repro.core import schedules as S
+from repro.core.simulator import simulate
+
+RNG = random.Random(20260730)
+
+GRID = []
+for _ in range(40):
+    N = RNG.randint(1, 6)
+    GRID.append((N * RNG.randint(1, 5), N, RNG.choice([1, 2, 3, 4]),
+                 round(RNG.uniform(0.1, 5.0), 3),
+                 round(RNG.uniform(0.1, 5.0), 3)))
+
+
+# ---------------------------------------------------------------------------
+# (a) replaying the table reproduces PR 1's makespans.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,N,V,F,B", GRID)
+def test_replay_reproduces_closed_form_makespans(M, N, V, F, B):
+    """gpipe / 1f1b / 1f1b-interleaved replayed through the simulator give
+    the pre-IR closed-form makespans exactly (free comm)."""
+    assert simulate("gpipe", M, N, F, B, 0.0).makespan == \
+        pytest.approx((M + N - 1) * (F + B), rel=1e-9)
+    assert simulate("1f1b", M, N, F, B, 0.0).makespan == \
+        pytest.approx(S.eval_1f1b_as(M, N, F, B, 0.0, 1.0, 1.0)
+                      .minibatch_time, rel=1e-9)
+    assert simulate("1f1b-interleaved", M, N, F, B, 0.0, V=V).makespan == \
+        pytest.approx(S.eval_1f1b_interleaved(M, N, F, B, 0.0, 1.0, 1.0,
+                                              V=V).minibatch_time, rel=1e-9)
+
+
+@pytest.mark.parametrize("M,N,V,F,B", GRID)
+def test_memlean_same_makespan_as_streaming(M, N, V, F, B):
+    """The memory-lean order must not slow the pipeline down: identical
+    makespan and bubble to streaming 1F1B-I (M % N == 0 grid)."""
+    ml = simulate("1f1b-interleaved-memlean", M, N, F, B, 0.0, V=V)
+    ev = S.eval_1f1b_interleaved_memlean(M, N, F, B, 0.0, 1.0, 1.0, V=V)
+    assert ml.makespan == pytest.approx(ev.minibatch_time, rel=1e-9)
+    assert ml.makespan == pytest.approx(
+        simulate("1f1b-interleaved", M, N, F, B, 0.0, V=V).makespan,
+        rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# (b) features rows: symbolic replay == algebraic rows == timed simulator.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,N,V,F,B", GRID)
+def test_symbolic_replay_matches_algebraic_counts(M, N, V, F, B):
+    for name, fm in (("gpipe", 1), ("1F1B-AS", 1), ("FBP-AS", 2),
+                     ("1F1B-I", V), ("1F1B-I-ML", V)):
+        v = V if name in ("1F1B-I", "1F1B-I-ML") else 1
+        plan = SP.build_schedule(name, M, N, v)
+        replay = plan.peak_live()
+        alg = SP.live_activation_counts(name, M, N, v,
+                                        feat_mult=2 if name == "FBP-AS"
+                                        else 1)
+        for r, a in zip(replay, alg):
+            assert abs(r - a) <= 1, (name, M, N, v, replay, alg)
+
+
+@pytest.mark.parametrize("M,N,V,F,B", GRID)
+def test_memlean_simulated_peak_live_matches_closed_form(M, N, V, F, B):
+    """Acceptance: memlean's simulated peak-live equals its new closed
+    form min(M*V, 2(N-i) + (V-1)N + 1) within the one-op greedy slack."""
+    sim = simulate("1F1B-I-ML", M, N, F, B, 0.0, V=V)
+    ev = S.eval_1f1b_interleaved_memlean(M, N, F, B, 0.0, 1.0, 1.0, V=V)
+    for i in range(N):
+        want = min(M * V, 2 * (N - (i + 1)) + (V - 1) * N + 1)
+        assert ev.features_memory[i] == pytest.approx(max(1, want))
+        assert abs(sim.peak_live[i] - want) <= 1, \
+            (i, sim.peak_live, ev.features_memory)
+
+
+@pytest.mark.parametrize("M,N,V,F,B", GRID)
+def test_memlean_features_below_streaming(M, N, V, F, B):
+    """Acceptance: the memlean features term is < the streaming
+    (V-1)M + N - i + 1 row whenever interleaving is real (V > 1) and
+    there are strictly more micro-batches than stages."""
+    if V == 1 or M <= N:
+        pytest.skip("memory win needs V > 1 and M > N")
+    ml = S.eval_1f1b_interleaved_memlean(M, N, 1.0, 1.0, 0.0, 1.0, 1.0, V=V)
+    st = S.eval_1f1b_interleaved(M, N, 1.0, 1.0, 0.0, 1.0, 1.0, V=V)
+    # stage 1 (the peak) must strictly improve; no stage may get worse
+    assert ml.features_memory[0] < st.features_memory[0]
+    assert all(m <= s for m, s in zip(ml.features_memory,
+                                      st.features_memory))
+
+
+# ---------------------------------------------------------------------------
+# (c) builders, aliases, validation and ring lowering.
+# ---------------------------------------------------------------------------
+
+def test_canonical_names_and_aliases():
+    assert SP.canonical_name("1F1B-AS") == "1f1b"
+    assert SP.canonical_name("1F1B-SO") == "1f1b"
+    assert SP.canonical_name("1F1B-I") == "1f1b-interleaved"
+    assert SP.canonical_name("1F1B-I-ML") == "1f1b-interleaved-memlean"
+    with pytest.raises(ValueError):
+        SP.canonical_name("bogus")
+    # legacy and canonical names build identical tables
+    a = SP.build_schedule("1F1B-I", 4, 2, 2)
+    b = SP.build_schedule("1f1b-interleaved", 4, 2, 2)
+    assert a.device_ops == b.device_ops
+
+
+def test_plan_validate_counts_every_op_once():
+    plan = SP.build_schedule("1f1b-interleaved-memlean", 4, 2, 2)
+    for n, ops in enumerate(plan.device_ops):
+        assert len(ops) == 2 * 4 * 2
+        fs = {(o.m, o.v) for o in ops if o.kind == "F"}
+        bs = {(o.m, o.v) for o in ops if o.kind == "B"}
+        assert fs == bs == {(m, v) for m in range(4) for v in range(2)}
+
+
+def test_op_edges():
+    plan = SP.build_schedule("1f1b-interleaved", 4, 2, 2)
+    ops0 = plan.device_ops[0]
+    f00 = next(o for o in ops0 if o.kind == "F" and o.m == 0 and o.v == 0)
+    assert f00.vstage == 0 and f00.send_to == 1 and f00.recv_from is None
+    f01 = next(o for o in ops0 if o.kind == "F" and o.m == 0 and o.v == 1)
+    assert f01.vstage == 2 and f01.send_to == 3 and f01.recv_from == 1
+    b01 = next(o for o in ops0 if o.kind == "B" and o.m == 0 and o.v == 1)
+    assert b01.send_to == 1 and b01.recv_from == 3
+    last = next(o for o in plan.device_ops[1]
+                if o.kind == "F" and o.m == 0 and o.v == 1)
+    assert last.vstage == 3 and last.send_to is None
+
+
+def test_builders_reject_infeasible_shapes():
+    with pytest.raises(ValueError, match="M >= N"):
+        SP.build_1f1b_interleaved(2, 4, 2)
+    with pytest.raises(ValueError, match="M % N == 0"):
+        SP.build_1f1b_interleaved_memlean(6, 4, 2)
+    with pytest.raises(ValueError):
+        SP.build_schedule("1F1B-AS", 4, 2, V=2)
+
+
+def test_ring_lowering_memlean_needs_no_return_buffer():
+    """The memlean order consumes every ring return the tick it arrives
+    (the gap between chunk passes of a micro-batch is exactly N), so the
+    [M, ...] park buffer disappears from the runtime carry."""
+    for (M, N, V) in ((4, 2, 2), (8, 4, 2), (6, 2, 3), (4, 4, 4)):
+        lo = SP.lower_to_ring(
+            SP.build_schedule("1f1b-interleaved-memlean", M, N, V))
+        assert not lo.needs_retbuf
+        assert sum(lo.direct) == M * (V - 1)
+        assert sum(lo.fresh) == M
+        assert sum(lo.collect) == M
+        assert lo.n_ticks == M * V + N - 1
+
+
+def test_ring_lowering_streaming_parks_early_passes():
+    lo = SP.lower_to_ring(SP.build_schedule("1f1b-interleaved", 4, 2, 2))
+    assert lo.needs_retbuf
+    assert sum(lo.park) == 4          # every pass-0 return waits M - N ticks
+    # at M == N the stream is tight: direct consumption, no buffer
+    lo2 = SP.lower_to_ring(SP.build_schedule("1f1b-interleaved", 2, 2, 2))
+    assert not lo2.needs_retbuf
+
+
+def test_ring_lowering_v1_trivial():
+    lo = SP.lower_to_ring(SP.build_schedule("1f1b", 5, 3))
+    assert not lo.needs_retbuf
+    assert all(lo.fresh) and all(lo.collect)
+    assert lo.m_of_e == tuple(range(5))
+
+
+def test_resolve_ring_schedule():
+    assert SP.resolve_ring_schedule("auto", 1) == "1f1b"
+    assert SP.resolve_ring_schedule("auto", 2) == "1f1b-interleaved"
+    assert SP.resolve_ring_schedule("1F1B-I-ML", 2) == \
+        "1f1b-interleaved-memlean"
+    with pytest.raises(ValueError):
+        SP.resolve_ring_schedule("1f1b", 2)     # contiguous order, V chunks
+
+
+def test_memlean_closed_form_rejects_bad_M():
+    with pytest.raises(ValueError, match="M % N"):
+        S.eval_1f1b_interleaved_memlean(6, 4, 1.0, 1.0, 0.0, 1.0, 1.0, V=2)
