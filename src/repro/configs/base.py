@@ -92,8 +92,9 @@ class ArchConfig:
     tensor: int = 1
     virtual: int = 1                 # 1F1B-I virtual stages (chunks) per device
     schedule: str = "auto"           # runtime op order (schedplan name):
-                                     # auto | 1f1b | 1f1b-interleaved |
-                                     # 1f1b-interleaved-memlean | gpipe
+                                     # auto | gpipe | 1f1b | dapple | zb-h1 |
+                                     # 1f1b-interleaved |
+                                     # 1f1b-interleaved-memlean
     fsdp: bool = False               # shard stage weights over "data" axis too
 
     # ----------------------------------------------------------------------

@@ -22,7 +22,7 @@ from repro.core.schedules import (SCHEDULES, ScheduleEval,
                                   schedules_for)
 
 FEAT_MULT = {"1F1B-AS": 1, "FBP-AS": 2, "1F1B-SNO": 1, "1F1B-SO": 2,
-             "1F1B-I": 1, "1F1B-I-ML": 1}
+             "1F1B-I": 1, "1F1B-I-ML": 1, "DAPPLE": 1, "ZB-H1": 1}
 
 INTERLEAVED_SCHEDULES = ("1F1B-I", "1F1B-I-ML")
 

@@ -1,7 +1,8 @@
 """Closed-form pipeline-schedule cost models — paper Tables 1 and 2,
-extended with interleaved virtual-stage schedules.
+extended with interleaved virtual-stage, early-backward and zero-bubble
+schedules.
 
-Six schedules:
+Eight schedules:
 
 * ``1F1B-AS`` — async (FPGA-style) one-forward-one-backward.
 * ``FBP-AS``  — async, FP and BP computed in parallel on each accelerator
@@ -15,6 +16,16 @@ Six schedules:
   "Memory-Efficient Pipeline-Parallel DNN Training"): micro-batches advance
   in groups of N with warm-up ``2(N-n-1) + (V-1)N``, cutting the resident
   features term from ``(V-1)M`` to ``(V-1)N`` at the same makespan.
+* ``DAPPLE`` — DAPPLE's early-backward synchronous schedule (arXiv
+  2007.01045): warm-up ``N - i + 1`` then strict 1F1B alternation.  Same
+  rows as 1F1B-AS; kept as its own entry because the runtime now executes
+  its backward order as first-class ticks.
+* ``ZB-H1`` — zero-bubble H1 (arXiv 2211.05953): every backward splits
+  into an input-gradient op (B/2) that propagates the error and a
+  weight-gradient op (B/2) that fills drain bubbles.  Makespan
+  ``M(F+B) + (N-1)(F + B/2)`` — the ``(N-1)B/2`` saved is exactly the
+  weight-grad work pulled off the critical path — at 1F1B's
+  ``N - i + 1`` features row.
 
 The op orders behind these rows live in :mod:`repro.core.schedplan` (the
 schedule-plan IR); the features rows here are the algebraic form of
@@ -108,6 +119,41 @@ def eval_1f1b_so(M: int, N: int, F: float, B: float, SR: float,
         bandwidth_demand=(a / F) if F > 0 else float("inf"))
 
 
+def eval_dapple(M: int, N: int, F: float, B: float, SR: float,
+                a: float, w: float) -> ScheduleEval:
+    """DAPPLE early-backward schedule (arXiv 2007.01045): warm-up
+    ``N - i + 1`` forwards then strict 1F1B alternation.  The rows ARE
+    1F1B-AS's (derived, so they can never diverge) — the point of the
+    entry is that the runtime now *executes* the early-backward order
+    (first-class B ticks), so the row names the schedule it actually
+    runs."""
+    return dataclasses.replace(eval_1f1b_as(M, N, F, B, SR, a, w),
+                               name="DAPPLE")
+
+
+def eval_zb_h1(M: int, N: int, F: float, B: float, SR: float,
+               a: float, w: float) -> ScheduleEval:
+    """Zero-bubble H1 (arXiv 2211.05953): the backward splits evenly into
+    an input-gradient op ``b = B/2`` (sends the error upstream) and a
+    weight-gradient op ``w = B/2`` (no boundary edges; fills what would
+    otherwise be drain bubbles).
+
+    Makespan ``M(F + B) + (N-1)(F + B/2)`` — differentially pinned against
+    the op-table replay in the simulator: errors propagate upstream at
+    ``b = B/2`` per hop instead of the full ``B``, and each drain wait is
+    filled by exactly one W, so ``(N-1) B/2`` of weight-grad work leaves
+    the critical path.  Peak resident features stay at 1F1B's
+    ``N - i + 1`` row (each W directly follows its B).  Bubble strictly
+    below 1F1B-AS for N > 1."""
+    b = B / 2.0
+    t = M * (F + B) + (N - 1) * (F + b)
+    bubble = (N - 1) * (F + b) / t if t else 0.0
+    return ScheduleEval(
+        name="ZB-H1", minibatch_time=t, bubble_fraction=bubble,
+        features_memory=_feat(1, N, a), weights_memory=2 * w,
+        bandwidth_demand=(a / F) if F > 0 else float("inf"))
+
+
 def eval_1f1b_interleaved(M: int, N: int, F: float, B: float, SR: float,
                           a: float, w: float, V: int = 2) -> ScheduleEval:
     """Interleaved 1F1B (see module docstring).  ``F``/``B``/``a``/``w`` are
@@ -166,6 +212,57 @@ def eval_1f1b_interleaved_memlean(M: int, N: int, F: float, B: float,
         V=V)
 
 
+def latency_hops_1f1b_interleaved(M: int, N: int, V: int = 1) -> int:
+    """Number of SR-latency hops on the 1F1B-I critical path under the
+    ``latency`` comm model (transfers on a dedicated engine, SR each):
+
+    ``2(N-1)`` fill/drain hops plus a warm-up->steady handover that
+    zigzags between neighbouring saturated devices, collecting two hops
+    per micro-batch except once every N micro-batches when the 1F1B
+    phase realigns — ``2(M - 2 - floor((M-2)/N))`` in total.  At
+    ``M == N`` (V > 1) the stream is tight: every one of the ``N(V-1)``
+    chunk ring-returns sits on the critical path too (2 hops each).
+
+    Exact (differentially pinned over randomized sweeps) whenever the
+    per-hop latency is hideable: ``SR <= hideable_sr_1f1b_interleaved``.
+    """
+    if N <= 1:
+        return 0
+    hops = 2 * (M + N - 3 - (M - 2) // N)
+    if M == N:
+        hops += 2 * N * (V - 1)
+    return hops
+
+
+def hideable_sr_1f1b_interleaved(M: int, N: int, V: int, F: float,
+                                 B: float) -> float:
+    """Largest per-hop SR for which :func:`eval_1f1b_interleaved_latency`
+    is exact (the paper-style "comm hideable" premise, as the seed suite's
+    1F1B-SO pin clamps ``SR <= min(F, B)/2``): the zigzag critical path
+    tolerates ``min(F, B)/(3V)`` per hop, and for V > 1 the chunk ring
+    return must come back within its ``(M - N)``-element slack,
+    ``(M - N) min(F, B)/(NV)``."""
+    cap = min(F, B) / (3.0 * V)
+    if V > 1 and M > N:
+        cap = min(cap, (M - N) * min(F, B) / (N * V))
+    return cap
+
+
+def eval_1f1b_interleaved_latency(M: int, N: int, F: float, B: float,
+                                  SR: float, a: float, w: float,
+                                  V: int = 2) -> ScheduleEval:
+    """1F1B-I under the ``latency`` comm model: the free-comm makespan
+    plus ``SR`` per critical-path hop (:func:`latency_hops_1f1b_interleaved`).
+    Exact for ``SR <= hideable_sr_1f1b_interleaved(M, N, V, F, B)``;
+    beyond it transfers stall the stream and the value is a lower bound
+    (the ``blocking`` model brackets from above)."""
+    ev = eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=V)
+    t = ev.minibatch_time + latency_hops_1f1b_interleaved(M, N, V) * SR
+    return dataclasses.replace(
+        ev, minibatch_time=t,
+        bubble_fraction=1.0 - M * V * (F + B) / V / t if t else 0.0)
+
+
 SCHEDULES = {
     "1F1B-AS": eval_1f1b_as,
     "FBP-AS": eval_fbp_as,
@@ -173,9 +270,12 @@ SCHEDULES = {
     "1F1B-SO": eval_1f1b_so,
     "1F1B-I": eval_1f1b_interleaved,
     "1F1B-I-ML": eval_1f1b_interleaved_memlean,
+    "DAPPLE": eval_dapple,
+    "ZB-H1": eval_zb_h1,
 }
 
-ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS", "1F1B-I", "1F1B-I-ML")
+ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS", "DAPPLE", "ZB-H1", "1F1B-I",
+                   "1F1B-I-ML")
 SYNC_SCHEDULES = ("1F1B-SNO", "1F1B-SO")
 
 

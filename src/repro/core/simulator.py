@@ -20,7 +20,12 @@ streaming chunk-pass order — the runtime's circular ``ppermute``
 schedule, closed-form makespan ``(M*V + N - 1)(F + B)/V`` for M >= N.
 ``1F1B-I-ML`` replays the Megatron memory-lean interleaved order (groups
 of N micro-batches, warm-up ``2(N-n-1) + (V-1)N``): same makespan,
-``(V-1)N`` resident-features term instead of ``(V-1)M``.
+``(V-1)N`` resident-features term instead of ``(V-1)M``.  ``dapple``
+replays DAPPLE's early-backward order (== synchronous 1F1B), and
+``zb-h1`` replays the zero-bubble split-backward table: its ``B`` ops
+(input gradient, B/2 each) propagate errors upstream while ``W`` ops
+(weight gradient, B/2, no transfer) fill the drain bubbles — makespan
+``M(F+B) + (N-1)(F + B/2)``.
 
 The simulator also tracks the peak number of live micro-batch activations
 per device, which is the paper's "features memory" column.
@@ -62,6 +67,13 @@ _DEFAULT_COMM = {
     "1f1b-2x": "free",
     "1f1b-interleaved": "free",
     "1f1b-interleaved-memlean": "free",
+    # DAPPLE's early-backward order (== sync 1F1B) and zero-bubble H1:
+    # both rely on overlapped boundary transfers
+    "dapple": "free",
+    "DAPPLE": "free",
+    "zb-h1": "free",
+    "zb_h1": "free",
+    "ZB-H1": "free",
 }
 
 
@@ -75,6 +87,11 @@ def simulate(schedule: str, M: int, N: int,
     stages per device; per-chunk compute time is the device time divided
     by V.  ``comm`` overrides the schedule's default communication model
     (used by the differential tests to bracket the closed forms).
+
+    For zero-bubble plans (``zb-h1``) the ``B`` argument is the FULL
+    per-micro-batch backward time of a device: the plan's input-gradient
+    ``B`` ops and weight-gradient ``W`` ops each take half of it (the
+    even split the closed form assumes).
     """
     Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
     Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
@@ -84,6 +101,7 @@ def simulate(schedule: str, M: int, N: int,
     if default_comm is None:
         raise ValueError(schedule)
     plan = SP.build_schedule(schedule, M, N, V)
+    has_w = plan.has_w
     orders = [[(op.kind, op.m, op.vstage) for op in ops]
               for ops in plan.device_ops]
     comm = comm or default_comm
@@ -91,12 +109,15 @@ def simulate(schedule: str, M: int, N: int,
         raise ValueError(comm)
 
     NS = N * V                                 # virtual stages
+    bsplit = 2.0 if has_w else 1.0             # zb: B is split evenly B/W
     dur = {"F": [Fs[vs % N] / V for vs in range(NS)],
-           "B": [Bs[vs % N] / V for vs in range(NS)]}
+           "B": [Bs[vs % N] / V / bsplit for vs in range(NS)],
+           "W": [Bs[vs % N] / V / bsplit for vs in range(NS)]}
 
     # --- task state ------------------------------------------------------
     f_done = [[-1.0] * NS for _ in range(M)]   # completion time of F[m][vs]
     b_done = [[-1.0] * NS for _ in range(M)]
+    w_done = [[-1.0] * NS for _ in range(M)]
     f_ready = [[-1.0] * NS for _ in range(M)]  # input-activation arrival
     b_ready = [[-1.0] * NS for _ in range(M)]  # error arrival
     for m in range(M):
@@ -105,10 +126,12 @@ def simulate(schedule: str, M: int, N: int,
     busy = [0.0] * N                           # accumulated busy time
     ptr = [0] * N                              # next op index
     n_done = 0
-    total_ops = 2 * M * NS
+    total_ops = sum(len(o) for o in orders)
 
     def deliver(kind: str, m: int, vs_from: int, t_prod: float):
         """Schedule the transfer of an activation/error to the neighbour."""
+        if kind == "W":
+            return None                        # weight grads stay local
         if kind == "F":
             if vs_from == NS - 1:
                 b_ready[m][NS - 1] = t_prod    # loss: error available locally
@@ -155,6 +178,8 @@ def simulate(schedule: str, M: int, N: int,
                 s = max(dev_free[n], f_ready[m][vs])
             elif kind == "B" and b_ready[m][vs] >= 0 and f_done[m][vs] >= 0:
                 s = max(dev_free[n], b_ready[m][vs], f_done[m][vs])
+            elif kind == "W" and b_done[m][vs] >= 0:
+                s = max(dev_free[n], b_done[m][vs])
             else:
                 continue
             if best is None or s < best[0]:
@@ -167,8 +192,10 @@ def simulate(schedule: str, M: int, N: int,
         busy[n] += d
         if kind == "F":
             f_done[m][vs] = end
-        else:
+        elif kind == "B":
             b_done[m][vs] = end
+        else:
+            w_done[m][vs] = end
         ptr[n] += 1
         tgt = deliver(kind, m, vs, end)
         if tgt is not None:
@@ -177,16 +204,18 @@ def simulate(schedule: str, M: int, N: int,
         n_done += 1
 
     try_transfers()
-    makespan = max(max(r) for r in b_done)
+    done_rows = w_done if has_w else b_done
+    makespan = max(max(r) for r in done_rows)
 
-    # peak live activations per device: F done (or started) but B not done,
-    # summed over the device's V chunks.
+    # peak live activations per device: F done (or started) but the
+    # residual-releasing op (B; W for zero-bubble plans) not done, summed
+    # over the device's V chunks.
     peak = []
     for n in range(N):
         events = []
         for vs in range(n, NS, N):
             events += [(f_done[m][vs] - dur["F"][vs], +1) for m in range(M)]
-            events += [(b_done[m][vs], -1) for m in range(M)]
+            events += [(done_rows[m][vs], -1) for m in range(M)]
         events.sort()
         live = pk = 0
         for _, delta in events:

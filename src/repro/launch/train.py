@@ -42,9 +42,11 @@ def main(argv=None):
                     help="1F1B-I virtual stages (chunks) per device; "
                          "needs --microbatches >= stages")
     ap.add_argument("--schedule", default="",
-                    help="pipeline op order: auto | 1f1b | 1f1b-interleaved"
-                         " | 1f1b-interleaved-memlean | gpipe "
-                         "(memlean needs --microbatches %% stages == 0)")
+                    help="pipeline op order: auto | gpipe | 1f1b | dapple"
+                         " | zb-h1 | 1f1b-interleaved |"
+                         " 1f1b-interleaved-memlean (memlean needs"
+                         " --microbatches %% stages == 0); backward order"
+                         " is executed as first-class ticks")
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)

@@ -5,55 +5,59 @@
 Execution model (per device, SPMD):
 
 * layer parameters arrive stacked ``[1, Lps, ...]`` (stage-sharded);
-* one scan over ``M + S - 1`` ticks; each tick the device applies its stage
-  block to its current micro-batch and ``ppermute``s the boundary
-  activation to the next stage (a 1-D daisy chain — exactly the paper's
-  cluster topology);
-* stage 0 injects micro-batches, stage S-1 accumulates outputs;
-* the loss is computed on the last stage, masked, and ``psum``-broadcast;
-* per-device ``jax.grad`` of that global scalar is SPMD-correct because
-  every collective (ppermute/psum/all_gather) transposes to a collective;
+* TRAINING runs ONE tick scan over the schedule's full mixed F/B(/W) op
+  table: backward ops are first-class ticks.  ``make_train_step`` builds
+  the op table with the schedule-plan IR (:mod:`repro.core.schedplan`)
+  and compiles it with :func:`repro.core.schedplan.lower_to_ticks` into
+  per-device per-tick lookup arrays (op kind, micro-batch, chunk,
+  stash/inbox slots); the scan body ``lax.switch``es on the op kind.
+  There is NO autodiff of the scan — gradients are assembled manually:
+
+  - an F tick applies the stage block and saves its *input* into a
+    statically allocated residual stash (slot count == the schedule's
+    peak-live row, by construction);
+  - a B tick re-runs the stage forward from the stashed residual under
+    ``jax.vjp`` and applies it to the cotangent arriving on the
+    *backward* ppermute ring (stage s -> s-1), accumulating layer grads
+    and sending the input-cotangent upstream.  On the last virtual stage
+    the cotangent is seeded by that micro-batch's loss head
+    (final-norm + logits + xent), computed inside the tick;
+  - a W tick (zero-bubble schedules) re-runs the forward once more and
+    applies the stashed cotangent to the *parameters* only — the
+    input-gradient B tick earlier propagated the error without paying
+    for weight grads on the critical path;
+  - the two rings shift every tick; arrivals the consuming op is not
+    ready for are parked in statically allocated inbox slots.
+
+* stage 0 injects micro-batches (and collects the injection cotangents
+  that feed the embedding backward); the per-micro-batch losses are
+  summed into the same global scalar as before and ``psum``-broadcast;
 * gradients are then ``psum``'d over exactly the axes each leaf is
   replicated on (data/pod for everything; +stage for embed/head/norm) —
   the paper's "orthogonal to data parallelism", literally.
 
-Schedule mapping (paper §3.2 -> TPU): the scan's steady state is 1F1B
-(one in-flight micro-batch per stage); ``remat='stage'`` recomputes stage
-internals in backward so only the O(S) boundary carries persist — the
-paper's 1F1B features-memory row.  ``remat='none'`` stores everything
-(GPipe-like).  The sync/async distinction dissolves: XLA issues the
-ppermute asynchronously and overlaps it with compute (1F1B-SO behaviour)
-without needing the doubled warm-up, which the analytic explorer still
-models for GPU/FPGA targets.
+``PipelineConfig.schedule`` selects the executed order — ``gpipe``,
+``1f1b`` / ``dapple`` (early backward), ``zb-h1`` (zero-bubble split
+backward), ``1f1b-interleaved`` (streaming chunk passes, the ``auto``
+default for V > 1) or ``1f1b-interleaved-memlean`` (Megatron groups of
+S; its every ring return is consumed the tick it arrives).  Interleaved
+1F1B (plan.virtual = V > 1) stacks parameters ``[1, V, Lc, ...]`` — V
+non-contiguous layer chunks per device, chunk v of device n being
+virtual stage v*S + n — and both rings loop the daisy chain V times.
 
-Interleaved 1F1B (``1F1B-I``, plan.virtual = V > 1): parameters arrive
-stacked ``[1, V, Lc, ...]`` — V non-contiguous layer chunks per device,
-chunk v of device n being virtual stage v*S + n — and the tick scan runs
-``M*V + S - 1`` ticks with the ppermute daisy chain looping V times.
+Because B ticks recompute the stage from its stashed input, the residual
+footprint IS the schedule's features-memory row (1F1B's S - n instead of
+GPipe's M) — ``remat='stage'`` semantics are structural now.
+``remat='full'`` additionally rematerialises per layer inside the B-tick
+recompute.
 
-The per-tick (stage, micro-batch, chunk) assignment is *data*, not
-arithmetic: ``make_train_step`` builds the schedule's op table with the
-schedule-plan IR (:mod:`repro.core.schedplan`), lowers it to per-element
-lookup arrays (:func:`repro.core.schedplan.lower_to_ring`), and the scan
-body indexes them — the same compiled order the discrete-event simulator
-replays.  ``PipelineConfig.schedule`` selects the order:
-
-* ``1f1b-interleaved`` (the ``auto`` default for V > 1) — streaming chunk
-  passes; stage 0 injects fresh micro-batches on pass 0 and re-injects
-  ring-returned activations from a ``[M, ...]`` return buffer (parked
-  there for M - S ticks; the buffer is gated to stage 0 and elided when
-  M == S).  Requires M >= S.
-* ``1f1b-interleaved-memlean`` — the Megatron memory-lean order
-  (micro-batch groups of S, warm-up ``2(S-n-1) + (V-1)S``): every ring
-  return is consumed the very tick it arrives back at stage 0, so the
-  [M, ...] return buffer vanishes from the scan carry — the runtime
-  realisation of the closed form's ``(V-1)M -> (V-1)S`` features-memory
-  drop.  Requires M % S == 0.
-
-Micro-batch positions (``pos3``, VLM M-RoPE) ride the ppermute ring
-alongside the activation, so stage s applies the positions of the
-micro-batch it actually holds — not stage 0's — whichever schedule is
-running.
+SERVING (``make_serve_step``) still runs the forward-only lowering
+(:func:`repro.core.schedplan.lower_to_ring`): one tick scan over
+``M*V + S - 1`` forward elements with the stage-0 return buffer rules the
+ring lowering emits.  Micro-batch positions (``pos3``, VLM M-RoPE) ride
+the serve ring alongside the activation; the train scan instead indexes
+the per-micro-batch position table by the tick's micro-batch, so stage s
+always applies the positions of the micro-batch it actually holds.
 """
 from __future__ import annotations
 
@@ -81,7 +85,14 @@ class PipelineConfig:
     schedule: str = "auto"          # schedplan name: auto | 1f1b |
                                     # 1f1b-interleaved |
                                     # 1f1b-interleaved-memlean | gpipe
-    remat: str = "stage"            # none | stage | full
+    remat: str = "stage"            # none | stage | stage_save_moe | full.
+                                    # Training recomputes each stage from
+                                    # its stashed input at the B tick, so
+                                    # 'none'/'stage'/'stage_save_moe' all
+                                    # behave as structural stage-remat
+                                    # (MoE all_to_alls DO re-run in the
+                                    # B-tick recompute); 'full' adds
+                                    # per-layer remat inside it
     pod_role: str = "data"          # data | stage  (stage = pipeline over DCN)
     unroll: bool = False            # fully unroll ALL scans (roofline mode)
     gate_ticks: bool = False        # serve: lax.cond-skip invalid ticks so
@@ -224,6 +235,37 @@ def _ring_tables(lowering: SP.RingLowering) -> dict:
         collect=jnp.asarray(lowering.collect, bool))
 
 
+def _tick_tables(lo: SP.TickLowering) -> dict:
+    """The tick lowering's per-device per-tick lookup tables as flat
+    device constants, indexed by ``stage_idx * n_ticks + t``: op kind,
+    micro-batch, chunk, and the stash/inbox slots of the mixed F/B(/W)
+    schedule."""
+    def flat(rows, dt=jnp.int32):
+        return jnp.asarray([x for row in rows for x in row], dt)
+    return dict(
+        kind=flat(lo.kind), m=flat(lo.m), v=flat(lo.v),
+        xw=flat(lo.xw), xr=flat(lo.xr),
+        fsrc=flat(lo.fsrc), fr=flat(lo.fr), fpark=flat(lo.fpark),
+        bsrc=flat(lo.bsrc), br=flat(lo.br), bpark=flat(lo.bpark),
+        cw=flat(lo.cw), cr=flat(lo.cr), dinj=flat(lo.dinj, bool))
+
+
+def _buf_read(buf, slot):
+    """Read pytree slot ``buf[slot]`` of a leading-dim buffer pytree."""
+    return jax.tree.map(
+        lambda a: lax.dynamic_index_in_dim(a, slot, 0, keepdims=False), buf)
+
+
+def _buf_write(buf, slot, val, do):
+    """Write ``val`` into pytree slot ``buf[slot]`` where ``do`` (else
+    keep the old slot content)."""
+    def w(a, x):
+        old = lax.dynamic_index_in_dim(a, slot, 0, keepdims=False)
+        return lax.dynamic_update_index_in_dim(
+            a, jnp.where(do, x, old), slot, 0)
+    return jax.tree.map(w, buf, val)
+
+
 def _at(table: jnp.ndarray, idx):
     return lax.dynamic_index_in_dim(table, idx, 0, keepdims=False)
 
@@ -301,10 +343,18 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                            fsdp_axis="data" if cfg.fsdp else None,
                            tensor_size=mesh.shape["tensor"], virtual=V)
     M_ = pcfg.n_microbatches
-    # compile the schedule's op table and lower it onto the ring: the
-    # per-tick (stage, micro-batch, chunk) assignment becomes lookup data
+    # compile the schedule's FULL mixed F/B(/W) op table and lower it to
+    # per-device per-tick lookup arrays: backward ops are first-class
+    # ticks, executed by the same scan as the forwards
     sched = SP.resolve_ring_schedule(pcfg.schedule, V)
-    lowering = SP.lower_to_ring(SP.build_schedule(sched, M_, S, V))
+    lowering = SP.lower_to_ticks(SP.build_schedule(sched, M_, S, V))
+    has_w = lowering.has_w
+    if pcfg.remat not in ("none", "stage", "stage_save_moe", "full"):
+        raise ValueError(
+            f"unknown remat {pcfg.remat!r}: expected none | stage | "
+            f"stage_save_moe | full (the first three are equivalent under "
+            f"first-class backward ticks — B recomputes the stage from "
+            f"its stashed input)")
     fsdp_dims = ST.fsdp_scan_dims(specs, virtual=V) if cfg.fsdp else {}
     ep_dp_axis = "data" if (cfg.moe and cfg.moe.ep_data) else None
     ep_n_dp = mesh.shape["data"] if ep_dp_axis else 1
@@ -321,7 +371,12 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                 spec[k] = P(None, batch_axes, None)
         return spec
 
-    def global_loss(params, batch):
+    tp_size = mesh.shape["tensor"]
+
+    def global_loss_and_grads(params, batch):
+        """One pass over the compiled mixed F/B(/W) tick table, producing
+        this device's LOCAL loss term and its gradient contributions —
+        no autodiff of the scan; every backward is an explicit tick."""
         stage_idx = lax.axis_index(stage_ax)
         tp_index = lax.axis_index("tensor")
         smeta = ST.stacked_meta(cfg, plan)
@@ -329,108 +384,226 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             lambda a: lax.dynamic_index_in_dim(a, stage_idx, 0, keepdims=False),
             smeta)
         lp_local = jax.tree.map(lambda a: a[0], params["layers"])
-        inj, pos, pos3, mb, T = _prepare_microbatches(
-            cfg, params, batch, M_, tp_index)
-        # ring payload: the boundary activation plus, when present, the
-        # micro-batch's pos3 — positions travel WITH the micro-batch, so
-        # stage s applies the positions of the micro-batch it holds
-        ring_inj = {"x": inj}
-        if pos3 is not None:
-            ring_inj["p3"] = pos3
-        tab = _ring_tables(lowering)
-        MV = M_ * V
-        use_retbuf = lowering.needs_retbuf
+
+        # micro-batch preparation under vjp: the injection cotangents the
+        # scan accumulates (stage 0's chunk-0 B ticks) drive the
+        # embedding backward after the scan
+        def prep(embed):
+            inj, pos, pos3, mb, T = _prepare_microbatches(
+                cfg, dict(params, embed=embed), batch, M_, tp_index)
+            return inj, (pos, pos3, mb, T)
+
+        inj, prep_vjp, (pos, pos3, mb, T) = jax.vjp(
+            prep, params["embed"], has_aux=True)
+        labels_mb = batch["labels"].reshape(M_, mb, -1)
+        fn_p = params["final_norm"]
+        head_p = params.get("head", params["embed"])
+        tab = _tick_tables(lowering)
+        nT = lowering.n_ticks
+        # d(global loss)/d(per-micro-batch ce) == d/d(per-op aux): the
+        # seed every B tick's vjp is driven by
+        ct_scale = jnp.float32(1.0 / (M_ * n_batch_shards * tp_size))
+
+        def stage_f(lp_t, sm_t, x, m):
+            """Forward of one stage chunk on micro-batch m: the function
+            every F tick applies and every B/W tick re-runs under vjp
+            from the stashed residual (remat='stage' structurally)."""
+            p3 = None if pos3 is None else lax.dynamic_index_in_dim(
+                pos3, m, 0, keepdims=False)
+            y, a, _ = apply_stage(
+                cfg, lp_t, sm_t, x, pos=pos, pos3=p3, cache=None,
+                tp_axis="tensor", tp_index=tp_index,
+                dp_axis=ep_dp_axis, n_dp=ep_n_dp,
+                fsdp_axis="data" if cfg.fsdp else None,
+                fsdp_dims=fsdp_dims,
+                remat="full" if pcfg.remat == "full" else "none",
+                unroll=pcfg.inner_unroll)
+            return y, a
+
+        def head_loss(fn_param, head_param, y, m):
+            """Per-micro-batch loss head (final norm + logits + xent):
+            seeds the backward of the last virtual stage."""
+            h = LYR.rms_norm(_hidden_of(y), fn_param, cfg.norm_eps)
+            labels_m = lax.dynamic_index_in_dim(labels_mb, m, 0,
+                                                keepdims=False)
+            return M.logits_and_xent(cfg,
+                                     {"head": head_param,
+                                      "embed": head_param}, h, labels_m,
+                                     "tensor", tp_index)
+
+        zero_pay = jax.tree.map(lambda q: jnp.zeros_like(q[0]), inj)
+
+        def buf0(k):
+            if not k:
+                return None
+            return jax.tree.map(
+                lambda z: jnp.zeros((k,) + z.shape, z.dtype), zero_pay)
+
+        carry0 = dict(
+            fwd=zero_pay, bwd=zero_pay,
+            xs=buf0(lowering.n_x),      # residual stash == peak-live row
+            fin=buf0(lowering.n_f),     # parked forward arrivals
+            bin=buf0(lowering.n_b),     # parked backward arrivals
+            ct=buf0(lowering.n_c),      # zb: cotangents alive B -> W
+            dinj=jax.tree.map(jnp.zeros_like, inj),
+            dlp=jax.tree.map(jnp.zeros_like, lp_local),
+            dfn=jnp.zeros_like(fn_p), dhd=jnp.zeros_like(head_p),
+            ce=jnp.zeros((), jnp.float32), aux=jnp.zeros((), jnp.float32))
 
         def tick(carry, t):
-            if use_retbuf:
-                x_cur, outbuf, retbuf, aux = carry
-            else:
-                x_cur, outbuf, aux = carry
-                retbuf = None
-            retbuf, x_in = _ring_ingest(tab, MV, S, stage_idx, t,
-                                        ring_inj, x_cur, retbuf)
-            p3 = x_in.get("p3")
-            e_idx = t - stage_idx
-            ecl = jnp.clip(e_idx, 0, MV - 1)
+            idx = stage_idx * nT + t
+            g = lambda name: _at(tab[name], idx)
+            m_t, v_t = g("m"), g("v")
+            # park this tick's ring arrivals the consumer isn't ready for
+            if carry["fin"] is not None:
+                sl = g("fpark")
+                carry = dict(carry, fin=_buf_write(
+                    carry["fin"], jnp.maximum(sl, 0), carry["fwd"], sl >= 0))
+            if carry["bin"] is not None:
+                sl = g("bpark")
+                carry = dict(carry, bin=_buf_write(
+                    carry["bin"], jnp.maximum(sl, 0), carry["bwd"], sl >= 0))
             if V > 1:
-                chunk = _at(tab["v"], ecl)
-                lp_t = jax.tree.map(
-                    lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
-                                                       keepdims=False),
-                    lp_local)
-                sm_t = jax.tree.map(
-                    lambda a: lax.dynamic_index_in_dim(a, chunk, 0,
-                                                       keepdims=False),
-                    smeta_local)
+                pick = lambda a: lax.dynamic_index_in_dim(a, v_t, 0,
+                                                          keepdims=False)
+                lp_t = jax.tree.map(pick, lp_local)
+                sm_t = jax.tree.map(pick, smeta_local)
             else:
                 lp_t, sm_t = lp_local, smeta_local
 
-            def stage_fn(x_in):
-                y, a, _ = apply_stage(
-                    cfg, lp_t, sm_t, x_in, pos=pos, pos3=p3,
-                    cache=None, tp_axis="tensor", tp_index=tp_index,
-                    dp_axis=ep_dp_axis, n_dp=ep_n_dp,
-                    fsdp_axis="data" if cfg.fsdp else None,
-                    fsdp_dims=fsdp_dims, remat=pcfg.remat,
-                    unroll=pcfg.inner_unroll)
-                return y, a
+            def read_res(c):
+                return _buf_read(c["xs"], jnp.maximum(g("xr"), 0))
 
-            if pcfg.remat == "stage_save_moe":
-                # collective-aware remat: keep expert outputs (so backward
-                # never re-runs the MoE all_to_alls), recompute the rest
-                stage_fn = jax.checkpoint(
-                    stage_fn,
-                    policy=jax.checkpoint_policies.save_only_these_names(
-                        "moe_y"))
-            elif pcfg.remat in ("stage", "full"):
-                stage_fn = jax.checkpoint(stage_fn)
-            y, a = stage_fn(x_in["x"])
-            # ticks outside this stage's window process garbage: gate aux
-            a = jnp.where((e_idx >= 0) & (e_idx < MV), a, 0.0)
-            # last stage collects a finished micro-batch (chunk V-1 output)
-            out_e = t - (S - 1)
-            oecl = jnp.clip(out_e, 0, MV - 1)
-            oc = _at(tab["m"], oecl)
-            do_collect = ((out_e >= 0) & _at(tab["collect"], oecl)
-                          & (stage_idx == S - 1))
-            cur = lax.dynamic_index_in_dim(outbuf, oc, 0, keepdims=False)
-            wr = jnp.where(do_collect, _hidden_of(y), cur)
-            outbuf = lax.dynamic_update_index_in_dim(outbuf, wr, oc, 0)
-            # daisy-chain shift (activation + its pos3 together)
-            y_ring = dict(x_in, x=y)
-            perm = [(i, (i + 1) % S) for i in range(S)]
-            x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm),
-                                  y_ring)
-            if use_retbuf:
-                return (x_next, outbuf, retbuf, aux + a), None
-            return (x_next, outbuf, aux + a), None
+            def acc_dlp(acc, dlp):
+                if V > 1:
+                    def upd(a, d):
+                        cur = lax.dynamic_index_in_dim(a, v_t, 0,
+                                                       keepdims=False)
+                        return lax.dynamic_update_index_in_dim(
+                            a, cur + d, v_t, 0)
+                    return jax.tree.map(upd, acc, dlp)
+                return jax.tree.map(lambda a, d: a + d, acc, dlp)
 
-        x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), ring_inj)
-        outbuf0 = jnp.zeros((M_, mb, T, cfg.d_model),
-                            _hidden_of(x0["x"]).dtype)
-        carry0 = (x0, outbuf0, jnp.zeros((), jnp.float32))
-        if use_retbuf:
-            retbuf0 = jax.tree.map(jnp.zeros_like, ring_inj)
-            carry0 = (x0, outbuf0, retbuf0, jnp.zeros((), jnp.float32))
-        carry_out, _ = lax.scan(
-            tick, carry0,
-            jnp.arange(lowering.n_ticks), unroll=pcfg.tick_scan_unroll)
-        outbuf, aux = carry_out[1], carry_out[-1]
+            def idle_fn(c):
+                return c
 
-        h = LYR.rms_norm(outbuf.reshape(M_ * mb, T, -1), params["final_norm"],
-                         cfg.norm_eps)
-        ce = M.logits_and_xent(cfg, params, h, batch["labels"], "tensor",
-                               tp_index)
-        on_last = (stage_idx == S - 1).astype(jnp.float32)
+            def f_fn(c):
+                fsrc = g("fsrc")
+                fresh = jax.tree.map(
+                    lambda q: lax.dynamic_index_in_dim(q, m_t, 0,
+                                                       keepdims=False), inj)
+                if c["fin"] is not None:
+                    inbox = _buf_read(c["fin"], jnp.maximum(g("fr"), 0))
+                    x_in = jax.tree.map(
+                        lambda fq, cq, bq: jnp.where(
+                            fsrc == 0, fq, jnp.where(fsrc == 2, bq, cq)),
+                        fresh, c["fwd"], inbox)
+                else:
+                    x_in = jax.tree.map(
+                        lambda fq, cq: jnp.where(fsrc == 0, fq, cq),
+                        fresh, c["fwd"])
+                y, a = stage_f(lp_t, sm_t, x_in, m_t)
+                return dict(c, fwd=y, aux=c["aux"] + a,
+                            xs=_buf_write(c["xs"], g("xw"), x_in, True))
+
+            def b_ct(c):
+                if c["bin"] is not None:
+                    inbox = _buf_read(c["bin"], jnp.maximum(g("br"), 0))
+                    return jax.tree.map(
+                        lambda cq, bq: jnp.where(g("bsrc") == 2, bq, cq),
+                        c["bwd"], inbox)
+                return c["bwd"]
+
+            def b_ring_fn(c):
+                x_res = read_res(c)
+                ctan = b_ct(c)
+                if has_w:
+                    # zb: input-gradient only; stash the cotangent for W
+                    _, vjp = jax.vjp(
+                        lambda xx: stage_f(lp_t, sm_t, xx, m_t), x_res)
+                    (dx,) = vjp((ctan, ct_scale))
+                    c = dict(c, ct=_buf_write(
+                        c["ct"], jnp.maximum(g("cw"), 0), ctan,
+                        g("cw") >= 0))
+                else:
+                    _, vjp = jax.vjp(
+                        lambda lp, xx: stage_f(lp, sm_t, xx, m_t),
+                        lp_t, x_res)
+                    dlp, dx = vjp((ctan, ct_scale))
+                    c = dict(c, dlp=acc_dlp(c["dlp"], dlp))
+                return dict(c, bwd=dx, dinj=_buf_write(
+                    c["dinj"], m_t, dx, g("dinj")))
+
+            def b_seed_fn(c):
+                x_res = read_res(c)
+                if has_w:
+                    # zb: vjp the stage (input grad) and the loss head
+                    # separately — the head's y-cotangent is stashed so
+                    # the seed's W tick is an ordinary w_fn, and the
+                    # head/final-norm grads (outside the pipeline
+                    # stages) land here without a second head pass
+                    (y, _), svjp = jax.vjp(
+                        lambda xx: stage_f(lp_t, sm_t, xx, m_t), x_res)
+                    ce_m, hvjp = jax.vjp(
+                        lambda fnp, hdp, yy: head_loss(fnp, hdp, yy, m_t),
+                        fn_p, head_p, y)
+                    dfn_d, dhd_d, dy = hvjp(ct_scale)
+                    (dx,) = svjp((dy, ct_scale))
+                    c = dict(c, dfn=c["dfn"] + dfn_d, dhd=c["dhd"] + dhd_d,
+                             ct=_buf_write(c["ct"], jnp.maximum(g("cw"), 0),
+                                           dy, g("cw") >= 0))
+                else:
+                    def fl(lp, fnp, hdp, xx):
+                        y, a = stage_f(lp, sm_t, xx, m_t)
+                        return head_loss(fnp, hdp, y, m_t), a
+                    (ce_m, _), vjp = jax.vjp(fl, lp_t, fn_p, head_p, x_res)
+                    dlp, dfn_d, dhd_d, dx = vjp((ct_scale, ct_scale))
+                    c = dict(c, dlp=acc_dlp(c["dlp"], dlp),
+                             dfn=c["dfn"] + dfn_d, dhd=c["dhd"] + dhd_d)
+                return dict(c, bwd=dx, ce=c["ce"] + ce_m,
+                            dinj=_buf_write(c["dinj"], m_t, dx, g("dinj")))
+
+            def w_fn(c):
+                x_res = read_res(c)
+                ctan = _buf_read(c["ct"], jnp.maximum(g("cr"), 0))
+                _, vjp = jax.vjp(
+                    lambda lp: stage_f(lp, sm_t, x_res, m_t), lp_t)
+                (dlp,) = vjp((ctan, ct_scale))
+                return dict(c, dlp=acc_dlp(c["dlp"], dlp))
+
+            branches = [idle_fn, f_fn, b_ring_fn, b_seed_fn]
+            if has_w:
+                branches.append(w_fn)
+            carry = lax.switch(jnp.clip(g("kind"), 0, len(branches) - 1),
+                               branches, carry)
+            # shift both rings (forward +1, backward -1) every tick
+            perm_f = [(i, (i + 1) % S) for i in range(S)]
+            perm_b = [(i, (i - 1) % S) for i in range(S)]
+            return dict(
+                carry,
+                fwd=jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm_f),
+                                 carry["fwd"]),
+                bwd=jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm_b),
+                                 carry["bwd"])), None
+
+        out, _ = lax.scan(tick, carry0, jnp.arange(nT),
+                          unroll=pcfg.tick_scan_unroll)
         # Per-device LOCAL term of the global loss: global = psum(local).
-        # (Under check_rep=False shard_map, psum transposes to psum, so
-        # the scalar we differentiate must be the local contribution, with
-        # tensor-replication divided out.)
-        tp_size = mesh.shape["tensor"]
-        return (ce * on_last + aux / M_) / (n_batch_shards * tp_size)
+        # ce/aux accumulated only where the table placed the ops, so no
+        # stage masking is needed; tensor replication is divided out.
+        local = (out["ce"] + out["aux"]) / M_ / (n_batch_shards * tp_size)
+        (d_embed,) = prep_vjp(out["dinj"])
+        grads = dict(embed=d_embed,
+                     layers=jax.tree.map(lambda a: a[None], out["dlp"]),
+                     final_norm=out["dfn"])
+        if "head" in params:
+            grads["head"] = out["dhd"]
+        else:
+            grads["embed"] = grads["embed"] + out["dhd"]
+        return local, grads
 
     def sharded_step(params, batch):
-        local, grads = jax.value_and_grad(global_loss)(params, batch)
+        local, grads = global_loss_and_grads(params, batch)
         loss = lax.psum(local, mesh_axes)
         grads = jax.tree.map(
             lambda g, s: lax.psum(g, axes)

@@ -210,6 +210,45 @@ def interleaved_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
     print(f"OK gerr={worst:.2e}")
 
 
+def schedule_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
+                         microbatches=4, *schedules):
+    """First-class backward ticks: every ring schedule — including the
+    early-backward ``dapple`` and the zero-bubble split-backward
+    ``zb_h1`` — must produce loss/grads equal to the single-device
+    reference (and hence to each other / to gpipe).  Runs several
+    schedules in one subprocess so the reference is computed once."""
+    schedules = schedules or ("gpipe", "dapple", "zb_h1")
+    data = 8 // (stages * tensor) or 1
+    cfg, plan, params = _setup(arch, stages, tensor)
+    mesh = _mesh(data, stages, tensor)
+    batch = _batch(cfg, 8, 32)
+    rp = _ref_params(cfg, params)
+    ref_loss = float(M.loss_fn(cfg, rp, batch))
+    ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+    gr = jax.tree.map(np.asarray, ref_grads["layers"])
+    worsts = {}
+    for sched in schedules:
+        pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=sched)
+        step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+        loss, grads = step(params, batch)
+        assert abs(float(loss) - ref_loss) < 1e-4, (sched, float(loss),
+                                                    ref_loss)
+        gp = jax.tree.map(
+            lambda a: np.asarray(a).reshape((-1,) + a.shape[2:])
+            [:cfg.n_layers], grads["layers"])
+        errs = jax.tree.map(
+            lambda a, b: float(np.max(np.abs(a - b))
+                               / (np.max(np.abs(b)) + 1e-9)), gp, gr)
+        worst = max(jax.tree.leaves(errs))
+        assert worst < 1e-4, (sched, worst)
+        emb = float(np.max(np.abs(np.asarray(grads["embed"])
+                                  - np.asarray(ref_grads["embed"]))))
+        assert emb < 1e-4 * (np.abs(np.asarray(ref_grads["embed"])).max()
+                             + 1), (sched, emb)
+        worsts[sched] = worst
+    print("OK " + " ".join(f"{k}={v:.2e}" for k, v in worsts.items()))
+
+
 def pos3_ring(arch="qwen2-vl-7b", stages=4, tensor=1, virtual=1,
               microbatches=4, schedule="auto"):
     """Regression for the latent pos3 defect: per-micro-batch DISTINCT
@@ -363,6 +402,7 @@ if __name__ == "__main__":
      "pod_stage_equivalence": pod_stage_equivalence,
      "gated_serve": gated_serve,
      "interleaved_equivalence": interleaved_equivalence,
+     "schedule_equivalence": schedule_equivalence,
      "pos3_ring": pos3_ring,
      "prefill_equivalence": prefill_equivalence,
      }[mode](*args)

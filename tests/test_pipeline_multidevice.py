@@ -97,6 +97,21 @@ def test_interleaved_fsdp_grad_equivalence():
              "1f1b-interleaved-memlean", "1")
 
 
+@pytest.mark.parametrize("stages,tensor,microbatches,schedules", [
+    (2, 2, 4, ("gpipe", "1f1b", "dapple", "zb_h1")),   # all V=1 builders
+    (4, 1, 4, ("gpipe", "dapple", "zb_h1")),           # deep ring, warm-up 4
+])
+def test_backward_tick_schedules_grad_equivalence(stages, tensor,
+                                                  microbatches, schedules):
+    """First-class backward ticks: every V=1 builder — gpipe's
+    all-F-then-all-B, 1f1b/dapple's early backward, zb_h1's split
+    input-/weight-gradient ticks — must produce loss/grads equal to the
+    single-device reference on 8 fake devices.  Together with the
+    interleaved cases above this covers all five ring builders."""
+    run_case("schedule_equivalence", "llama3.2-1b", str(stages), str(tensor),
+             str(microbatches), *schedules, timeout=540)
+
+
 @pytest.mark.parametrize("virtual", ["1", "2"])
 def test_pos3_rides_the_ppermute_ring(virtual):
     """Regression (pre-seed defect): per-micro-batch DISTINCT M-RoPE

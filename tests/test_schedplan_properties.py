@@ -1,0 +1,167 @@
+"""Schedule-conformance property suite: the invariants the runtime's
+first-class-backward tick lowering depends on, for EVERY builder over
+randomized (N, M, V) sweeps.
+
+The mixed F/B(/W) tick scan (``pipeline/runtime.py``) executes whatever
+``schedplan.lower_to_ticks`` emits; these properties are what make that
+lowering sound:
+
+* per-(m, v) causal order on every device: F before B (before W);
+* every stage-boundary edge pairs up: an op that sends has exactly one
+  consumer op with the matching receive edge on the neighbouring virtual
+  stage;
+* the synchronous tick assignment exists (no in-flight deadlock) and its
+  tick count equals the discrete-event simulator's free-comm makespan at
+  unit per-op durations — the two lowerings agree on the schedule;
+* the symbolic ``peak_live()`` replay equals the O(1) algebraic
+  features-memory rows, and the tick lowering's residual-stash size is
+  exactly that row — the runtime's memory claim is structural.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # tier-1 must collect without hypothesis
+    from _hypo_shim import given, settings, strategies as st
+
+import pytest
+
+from repro.core import schedplan as SP
+from repro.core.simulator import simulate
+
+BUILDERS = SP.BUILDER_NAMES
+
+
+def _draw_shape(name, N, mmult, V):
+    """Feasible (M, V) for a builder given the drawn knobs."""
+    if name not in SP.INTERLEAVED:
+        V = 1
+    M = N * mmult            # M % N == 0 and M >= N: feasible for all
+    return M, V
+
+
+def _plans(N, mmult, V):
+    for name in BUILDERS:
+        M, v = _draw_shape(name, N, mmult, V)
+        yield name, M, v, SP.build_schedule(name, M, N, v)
+
+
+@settings(max_examples=25)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
+def test_f_before_b_before_w(N, mmult, V):
+    """On every device, each (m, v)'s F precedes its B, and (zero-bubble
+    plans) its B precedes its W."""
+    for name, M, v, plan in _plans(N, mmult, V):
+        for ops in plan.device_ops:
+            pos = {(o.kind, o.m, o.v): i for i, o in enumerate(ops)}
+            for (kind, m, vv), i in pos.items():
+                if kind == "B":
+                    assert pos[("F", m, vv)] < i, (name, M, N, v)
+                if kind == "W":
+                    assert pos[("B", m, vv)] < i, (name, M, N, v)
+
+
+@settings(max_examples=25)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
+def test_send_recv_edges_pair_up(N, mmult, V):
+    """Every send edge has exactly one matching receive edge: F(m, vs)
+    sending to vs+1 pairs with F(m, vs+1) receiving from vs (backwards
+    mirrored); W ops never touch the ring."""
+    for name, M, v, plan in _plans(N, mmult, V):
+        ops = [o for dev in plan.device_ops for o in dev]
+        sends = {(o.kind, o.m, o.vstage, o.send_to)
+                 for o in ops if o.send_to is not None}
+        recvs = {(o.kind, o.m, o.recv_from, o.vstage)
+                 for o in ops if o.recv_from is not None}
+        assert sends == recvs, (name, M, N, v)
+        assert all(o.send_to is None and o.recv_from is None
+                   for o in ops if o.kind == "W")
+        # every interior edge is a single neighbour hop on the ring
+        for kind, m, src, dst in sends:
+            assert abs(dst - src) == 1
+
+
+@settings(max_examples=20)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
+def test_tick_lowering_no_deadlock_and_matches_simulator(N, mmult, V):
+    """lower_to_ticks terminates (raises on any cyclic cross-device
+    dependency) and its synchronous tick count equals the discrete-event
+    free-comm makespan at unit per-op durations — i.e. one tick == one
+    chunk-op, with the one-tick ppermute hop hidden exactly like the
+    simulator's free transfers."""
+    for name, M, v, plan in _plans(N, mmult, V):
+        lo = SP.lower_to_ticks(plan)
+        ms = simulate(name, M, N, float(v),
+                      float(v) * (2 if plan.has_w else 1), 0.0, V=v).makespan
+        assert lo.n_ticks == pytest.approx(ms), (name, M, N, v)
+        # one op per device per tick, each exactly once
+        per_mv = 3 if plan.has_w else 2
+        for n in range(N):
+            kinds = [k for k in lo.kind[n] if k != SP.TICK_IDLE]
+            assert len(kinds) == per_mv * M * v
+
+
+@settings(max_examples=25)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
+def test_peak_live_replay_matches_algebraic_rows(N, mmult, V):
+    """``SchedPlan.peak_live()`` symbolic replay == the O(1)
+    ``live_activation_counts`` rows for every builder (dapple and zb-h1
+    hold 1F1B's N - n window)."""
+    for name, M, v, plan in _plans(N, mmult, V):
+        replay = plan.peak_live()
+        alg = SP.live_activation_counts(name, M, N, v)
+        for r, a in zip(replay, alg):
+            assert abs(r - a) <= 1, (name, M, N, v, replay, alg)
+
+
+@settings(max_examples=20)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
+def test_residual_stash_is_the_features_row(N, mmult, V):
+    """The tick lowering's statically allocated residual stash (``n_x``)
+    equals the schedule's peak-live row — the runtime's features-memory
+    footprint IS the closed form's, by register allocation."""
+    for name, M, v, plan in _plans(N, mmult, V):
+        lo = SP.lower_to_ticks(plan)
+        assert lo.n_x == max(plan.peak_live()), (name, M, N, v)
+
+
+@settings(max_examples=20)
+@given(N=st.integers(2, 6), mmult=st.integers(1, 4))
+def test_zb_h1_holds_the_1f1b_memory_window(N, mmult):
+    """Acceptance (ZB-H1 is the '1F1B-equivalent memory' zero-bubble
+    point): its residual window equals dapple/1f1b's N - n on every
+    device, while the simulator makespan is strictly smaller."""
+    M = N * mmult
+    zb = SP.build_schedule("zb-h1", M, N, 1)
+    da = SP.build_schedule("dapple", M, N, 1)
+    assert zb.peak_live() == da.peak_live()
+    ms_zb = simulate("zb-h1", M, N, 1.0, 1.0, 0.0).makespan
+    ms_da = simulate("dapple", M, N, 1.0, 1.0, 0.0).makespan
+    assert ms_zb < ms_da
+
+
+def test_dapple_table_equals_1f1b():
+    """The documented 'dapple coincides with synchronous 1F1B' invariant
+    is structural (the builder derives from build_1f1b) — pin it."""
+    for (M, N) in ((4, 2), (8, 4), (6, 3), (5, 5)):
+        da = SP.build_schedule("dapple", M, N, 1)
+        fb = SP.build_schedule("1f1b", M, N, 1)
+        assert da.device_ops == fb.device_ops
+
+
+def test_dapple_table_is_early_backward():
+    """DAPPLE's first backward on the last device comes directly after
+    its first forward — M - 1 forwards earlier than gpipe's."""
+    M, N = 8, 4
+    da = SP.build_schedule("dapple", M, N, 1)
+    gp = SP.build_schedule("gpipe", M, N, 1)
+    first_b = lambda p, n: [o.kind for o in p.device_ops[n]].index("B")
+    assert first_b(da, N - 1) == 1
+    assert first_b(gp, N - 1) == M
+
+
+def test_zb_h1_w_fills_the_drain():
+    """The drain tail of every zb-h1 device alternates B, W (the W's fill
+    what would otherwise be bubbles), ending on the last W."""
+    plan = SP.build_schedule("zb-h1", 8, 4, 1)
+    for n, ops in enumerate(plan.device_ops):
+        tail = [o.kind for o in ops[-2 * (4 - n):]]
+        assert tail == ["B", "W"] * (4 - n), (n, tail)

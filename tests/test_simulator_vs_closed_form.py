@@ -74,13 +74,33 @@ def test_sync_schedules_still_bracketed(M, N, V, F, B, SR):
 @pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
 def test_interleaved_all_comm_models_no_deadlock(M, N, V, F, B, SR):
     """1F1B-I completes (no deadlock) under all three comm models and the
-    makespans are ordered free <= latency <= blocking, with latency
-    overhead bounded by the per-boundary transfer count."""
+    makespans are ordered free <= latency <= blocking."""
     free = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="free").makespan
     lat = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="latency").makespan
     blk = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="blocking").makespan
     assert free <= lat + 1e-9 <= blk + 2e-9
-    assert lat <= free + 4.0 * SR * (M * V + N)
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_interleaved_latency_exact_closed_form(M, N, V, F, B, SR):
+    """The 1F1B-I latency-model closed form is EXACT (not a bracket) in
+    the comm-hideable regime: free makespan plus SR per critical-path hop
+    (2(N-1) fill/drain + the warm-up->steady zigzag + the tight ring
+    returns at M == N).  SR is clamped to the hideable premise exactly as
+    the seed suite clamps 1F1B-SO's (``min(F, B)/2``)."""
+    SR_h = min(SR, 0.95 * S.hideable_sr_1f1b_interleaved(M, N, V, F, B))
+    lat = simulate("1F1B-I", M, N, F, B, SR_h, V=V, comm="latency").makespan
+    ev = S.eval_1f1b_interleaved_latency(M, N, F, B, SR_h, 1.0, 1.0, V=V)
+    assert lat == pytest.approx(ev.minibatch_time, rel=1e-9)
+    # the hop count is the whole overhead: subtracting it recovers free
+    free = simulate("1F1B-I", M, N, F, B, 0.0, V=V, comm="free").makespan
+    hops = S.latency_hops_1f1b_interleaved(M, N, V)
+    assert lat - free == pytest.approx(hops * SR_h, abs=1e-9 + 1e-9 * lat)
+    # and beyond the premise the closed form is still a lower bound
+    lat_full = simulate("1F1B-I", M, N, F, B, SR, V=V,
+                        comm="latency").makespan
+    ev_full = S.eval_1f1b_interleaved_latency(M, N, F, B, SR, 1.0, 1.0, V=V)
+    assert ev_full.minibatch_time <= lat_full + 1e-9
 
 
 @pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
@@ -112,6 +132,32 @@ def test_memlean_matches_closed_form_and_streaming(M, N, V, F, B, SR):
             # the memory win needs real interleaving and more micro-batches
             # than stages (at M == N the streaming row is already minimal)
             assert ev.features_memory[i] <= st.features_memory[i] + 1e-9
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_dapple_and_zb_h1_match_closed_forms(M, N, V, F, B, SR):
+    """DAPPLE (early backward == 1F1B rows) and ZB-H1
+    (``M(F+B) + (N-1)(F+B/2)``) replay exactly under free comm, ZB-H1's
+    bubble strictly below 1F1B's for N > 1, at the same 1F1B peak-live
+    row."""
+    for name in ("DAPPLE", "ZB-H1"):
+        sim = simulate(name, M, N, F, B, 0.0)
+        ev = S.SCHEDULES[name](M, N, F, B, 0.0, 1.0, 1.0)
+        assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-9)
+        for i in range(N):
+            want = min(M, ev.features_memory[i])
+            assert abs(sim.peak_live[i] - want) <= 1, (name, sim.peak_live)
+    zb = S.eval_zb_h1(M, N, F, B, 0.0, 1.0, 1.0)
+    base = S.eval_1f1b_as(M, N, F, B, 0.0, 1.0, 1.0)
+    if N > 1:
+        assert zb.minibatch_time < base.minibatch_time
+        assert zb.bubble_fraction < base.bubble_fraction
+        # the saving is exactly the weight-grad half pulled off the
+        # drain's critical path
+        assert base.minibatch_time - zb.minibatch_time == \
+            pytest.approx((N - 1) * B / 2, rel=1e-9)
+    else:
+        assert zb.minibatch_time == pytest.approx(base.minibatch_time)
 
 
 def test_interleaved_requires_streaming_microbatches():
