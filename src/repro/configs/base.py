@@ -93,8 +93,11 @@ class ArchConfig:
     virtual: int = 1                 # 1F1B-I virtual stages (chunks) per device
     schedule: str = "auto"           # runtime op order (schedplan name):
                                      # auto | gpipe | 1f1b | dapple | zb-h1 |
-                                     # 1f1b-interleaved |
+                                     # zb-h2 | zb-auto | 1f1b-interleaved |
                                      # 1f1b-interleaved-memlean
+    mem_limit: int = 0               # zb-auto peak-live cap (resident
+                                     # micro-batch residuals per device);
+                                     # 0 = unbounded (fully bubble-free)
     fsdp: bool = False               # shard stage weights over "data" axis too
 
     # ----------------------------------------------------------------------
@@ -140,7 +143,7 @@ class ArchConfig:
             n_layers=n_layers, d_model=d_model, n_heads=n_heads,
             n_kv_heads=n_kv, head_dim=hd, d_ff=2 * d_model,
             vocab=min(self.vocab, 1024), stages=1, tensor=1, virtual=1,
-            schedule="auto", fsdp=False,
+            schedule="auto", mem_limit=0, fsdp=False,
         )
         if self.mla is not None:
             changes["mla"] = MLAConfig(

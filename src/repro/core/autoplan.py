@@ -32,6 +32,7 @@ class AutoPlan:
     predicted_step_time: float
     predicted_speedup_over_dp: float
     virtual: int = 1                 # 1F1B-I interleave depth (V)
+    mem_limit: int = 0               # zb-auto peak-live cap (0 = unbounded)
 
     def apply(self, cfg: ArchConfig) -> ArchConfig:
         from repro.core.schedplan import canonical_name
@@ -44,7 +45,9 @@ class AutoPlan:
         return dataclasses.replace(cfg, stages=self.stages,
                                    tensor=self.tensor,
                                    virtual=self.virtual,
-                                   schedule=sched)
+                                   schedule=sched,
+                                   mem_limit=self.mem_limit
+                                   if sched == "zb-auto" else 0)
 
 
 def _stage_device(base: DeviceSpec, tensor: int) -> DeviceSpec:
@@ -73,9 +76,12 @@ def _valid_factorisations(cfg: ArchConfig, model_axis: int):
 def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
               model_axis: int = 16, data_axis: int = 16,
               device: DeviceSpec = TPU_V5E,
-              max_microbatches: Optional[int] = None) -> AutoPlan:
+              max_microbatches: Optional[int] = None,
+              mem_limit: Optional[int] = None) -> AutoPlan:
     """Pick (stages, tensor, M, schedule) minimising the predicted
-    mini-batch time subject to per-chip memory."""
+    mini-batch time subject to per-chip memory.  ``mem_limit`` caps the
+    ZB-AUTO candidate's peak-live row (and is carried into the runtime
+    config when that schedule wins)."""
     prof = profile_arch(cfg, seq=seq_len)
     # per-stage workload unit = tokens per data shard
     local_batch_tokens = max(1, global_batch // data_axis) * seq_len
@@ -88,14 +94,15 @@ def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
         if max_microbatches:
             ms = [m for m in ms if m <= max_microbatches] or ms[:1]
         r = explore(prof, cluster, local_batch_tokens,
-                    candidate_Ms=[m for m in ms], consider_dp=False)
+                    candidate_Ms=[m for m in ms], consider_dp=False,
+                    mem_limit=mem_limit)
         if r.plan is None:
             continue
         cand = AutoPlan(stages=s, tensor=t, n_microbatches=max(1, r.M),
                         schedule=r.schedule or "1F1B-AS",
                         predicted_step_time=r.minibatch_time,
                         predicted_speedup_over_dp=r.speedup_over_dp,
-                        virtual=r.V)
+                        virtual=r.V, mem_limit=mem_limit or 0)
         if best is None or cand.predicted_step_time < best.predicted_step_time:
             best = cand
     if best is None:

@@ -19,10 +19,11 @@ from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
 from repro.core.schedules import (SCHEDULES, ScheduleEval,
                                   eval_1f1b_interleaved,
                                   eval_1f1b_interleaved_memlean,
-                                  schedules_for)
+                                  eval_zb_auto, schedules_for)
 
 FEAT_MULT = {"1F1B-AS": 1, "FBP-AS": 2, "1F1B-SNO": 1, "1F1B-SO": 2,
-             "1F1B-I": 1, "1F1B-I-ML": 1, "DAPPLE": 1, "ZB-H1": 1}
+             "1F1B-I": 1, "1F1B-I-ML": 1, "DAPPLE": 1, "ZB-H1": 1,
+             "ZB-H2": 1, "ZB-AUTO": 1}
 
 INTERLEAVED_SCHEDULES = ("1F1B-I", "1F1B-I-ML")
 
@@ -98,7 +99,8 @@ def _candidate_Ms(minibatch: int, n_stages: int) -> list[int]:
 def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
             candidate_Ms: Optional[Sequence[int]] = None,
             consider_dp: bool = True,
-            candidate_Vs: Sequence[int] = (2, 4)) -> ExplorationResult:
+            candidate_Vs: Sequence[int] = (2, 4),
+            mem_limit: Optional[int] = None) -> ExplorationResult:
     """Run the full BaPipe exploration and return the chosen plan.
 
     ``candidate_Vs`` are the interleave depths tried for the interleaved
@@ -108,6 +110,14 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
     1F1B-I's makespan with a smaller resident-features term, so it wins
     exactly when memory gates the streaming order (ties prefer the
     schedule found first).
+
+    ``mem_limit`` caps the ``ZB-AUTO`` entry's peak-live row (None =
+    unbounded).  The zero-bubble family degrades gracefully along the
+    memory axis: unbounded ZB-AUTO is fully bubble-free at M resident
+    activations, ZB-H2 keeps only the fill ramp at ~2x 1F1B's window,
+    ZB-H1 halves the drain term at exactly 1F1B's window — so the
+    explorer lands on the fastest entry whose features row fits the
+    devices.
     """
     N = cluster.n
     dp_t, dp_mem, dp_ok = dp_time_and_memory(prof, cluster, minibatch)
@@ -140,7 +150,8 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                 if comm_bound(plan):
                     plan = coarse_partition(prof, cluster, mb, overlap, V=V)
                 plan, mem_ok = memory_fine_tune(prof, cluster, plan, mb,
-                                                feat_mult, M, schedule=sched)
+                                                feat_mult, M, schedule=sched,
+                                                mem_limit=mem_limit)
                 if not comm_bound(plan) and V == 1:
                     # intra-layer (fractional) balancing LAST — memory
                     # fine-tuning re-finalises integer bounds and would
@@ -156,9 +167,13 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                                                        V=V)
                 elif V > 1:
                     ev = eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=V)
+                elif sched == "ZB-AUTO":
+                    ev = eval_zb_auto(M, N, F, B, SR, a, w,
+                                      mem_limit=mem_limit)
                 else:
                     ev = SCHEDULES[sched](M, N, F, B, SR, a, w)
-                mem = stage_memory(plan, feat_mult, M, schedule=sched)
+                mem = stage_memory(plan, feat_mult, M, schedule=sched,
+                                   mem_limit=mem_limit)
                 t = ev.minibatch_time
                 if not mem_ok:
                     # paper §4.3: weights kept on-chip "as much as

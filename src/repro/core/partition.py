@@ -395,20 +395,24 @@ def intra_layer_refine(prof: NetworkProfile, cluster: ClusterSpec,
 # ---------------------------------------------------------------------------
 
 def stage_memory(plan: PartitionPlan, feat_mult: int, M: int,
-                 schedule: Optional[str] = None) -> list[float]:
+                 schedule: Optional[str] = None,
+                 mem_limit=None) -> list[float]:
     """Schedule-dependent per-device memory: 2w (weights+grads) plus the
     live micro-batch boundary activations.  The live counts come from the
     schedule-plan IR (:func:`repro.core.schedplan.live_activation_counts`,
     the algebraic form of the op-table replay): feat_mult*(N-i+1) for the
     contiguous schedules, ``(V-1)*M + N - i + 1`` chunk activations for a
     streaming interleaved plan, ``2(N-i) + (V-1)N + 1`` for the memory-lean
-    interleaved order.  ``schedule`` defaults to the plan's natural
-    schedule (1F1B for V == 1, streaming 1F1B-I for V > 1)."""
+    interleaved order, the zero-bubble rows for the ``zb-*`` family
+    (``mem_limit`` caps the zb-auto row; unbounded zb-auto pays M).
+    ``schedule`` defaults to the plan's natural schedule (1F1B for
+    V == 1, streaming 1F1B-I for V > 1)."""
     from repro.core.schedplan import live_activation_counts
     N = plan.n_stages
     if schedule is None:
         schedule = "1f1b" if plan.V == 1 else "1f1b-interleaved"
-    live = live_activation_counts(schedule, M, N, plan.V, feat_mult)
+    live = live_activation_counts(schedule, M, N, plan.V, feat_mult,
+                                  mem_limit=mem_limit)
     return [2.0 * c.weight_bytes + lv * c.act_out_bytes
             for lv, c in zip(live, plan.device_costs())]
 
@@ -416,7 +420,8 @@ def stage_memory(plan: PartitionPlan, feat_mult: int, M: int,
 def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
                      plan: PartitionPlan, mb: int, feat_mult: int,
                      M: int, max_iters: int = 64,
-                     schedule: Optional[str] = None
+                     schedule: Optional[str] = None,
+                     mem_limit=None
                      ) -> tuple[PartitionPlan, bool]:
     """Shift boundary layers off over-capacity devices.  Returns
     (plan, feasible).  ``schedule`` picks the live-activation row used to
@@ -437,7 +442,7 @@ def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
 
     for _ in range(max_iters):
         cur = finalize()
-        mem = stage_memory(cur, feat_mult, M, schedule)
+        mem = stage_memory(cur, feat_mult, M, schedule, mem_limit)
         caps = [d.memory_capacity for d in cluster.devices]
         over = [i for i in range(N) if mem[i] > caps[i]]
         if not over:
@@ -475,6 +480,6 @@ def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
         if not moved:
             return cur, False
     cur = finalize()
-    mem = stage_memory(cur, feat_mult, M, schedule)
+    mem = stage_memory(cur, feat_mult, M, schedule, mem_limit)
     ok = all(m <= d.memory_capacity for m, d in zip(mem, cluster.devices))
     return cur, ok

@@ -2,7 +2,7 @@
 extended with interleaved virtual-stage, early-backward and zero-bubble
 schedules.
 
-Eight schedules:
+Ten schedules:
 
 * ``1F1B-AS`` — async (FPGA-style) one-forward-one-backward.
 * ``FBP-AS``  — async, FP and BP computed in parallel on each accelerator
@@ -26,6 +26,14 @@ Eight schedules:
   ``M(F+B) + (N-1)(F + B/2)`` — the ``(N-1)B/2`` saved is exactly the
   weight-grad work pulled off the critical path — at 1F1B's
   ``N - i + 1`` features row.
+* ``ZB-H2`` — zero-bubble H2: warm-up deepens to ``2(N-i+1) - 1`` and
+  weight-gradients bank past the drain, removing the whole flush bubble:
+  makespan ``M(F+B) + (N-1)F`` (exact at the even-split design point
+  ``B = 2F``; the work-and-fill floor elsewhere) at ~2x 1F1B's memory.
+* ``ZB-AUTO`` — the automatic zero-bubble scheduler: a cost-driven list
+  scheduler over F/B/W placement under a peak-live ``mem_limit`` knob;
+  reports the scheduled (replayed) makespan, interpolating ZB-H1 (1F1B
+  cap) through ZB-H2 to fully bubble-free (unbounded cap, M-deep memory).
 
 The op orders behind these rows live in :mod:`repro.core.schedplan` (the
 schedule-plan IR); the features rows here are the algebraic form of
@@ -154,6 +162,64 @@ def eval_zb_h1(M: int, N: int, F: float, B: float, SR: float,
         bandwidth_demand=(a / F) if F > 0 else float("inf"))
 
 
+def eval_zb_h2(M: int, N: int, F: float, B: float, SR: float,
+               a: float, w: float) -> ScheduleEval:
+    """Zero-bubble H2 (arXiv 2211.05953): the bubble-free hand-crafted
+    point.  Warm-up deepens to ``2(N-i+1) - 1`` forwards and the
+    downstream devices bank weight-gradients past the drain, so after the
+    unavoidable ``(N-1)F`` fill ramp no device idles:
+
+        makespan  t = M(F + B) + (N-1) F
+
+    — the whole ``(N-1)(F + B)`` 1F1B flush bubble is gone, paid for with
+    the ``max(2(N-i+1)-1, i-1+ceil((N+1)/2))`` features row (~2x 1F1B's
+    warm-up memory; ZB-H1 keeps 1F1B's row but only halves the drain
+    term).  The reported makespan is the op-table *replay* (so the
+    explorer ranks an achievable number): it EQUALS the closed form above
+    at the even-split design point ``B == 2F`` for ``M >= 2N - 1`` —
+    differentially pinned — while at other cost ratios the closed form is
+    only the work-and-fill *floor* (a strict lower bound any V=1 schedule
+    obeys) that the static table's unit-cost W weave may miss; the
+    cost-adaptive ``ZB-AUTO`` entry adapts the weave instead."""
+    from repro.core.schedplan import build_zb_h2, live_activation_counts
+    from repro.core.simulator import simulate
+    t = simulate(build_zb_h2(M, N), M, N, F, B, 0.0).makespan
+    bubble = 1.0 - M * (F + B) / t if t else 0.0
+    feats = tuple(float(c) * a
+                  for c in live_activation_counts("ZB-H2", M, N))
+    return ScheduleEval(
+        name="ZB-H2", minibatch_time=t, bubble_fraction=bubble,
+        features_memory=feats, weights_memory=2 * w,
+        bandwidth_demand=(a / F) if F > 0 else float("inf"))
+
+
+def eval_zb_auto(M: int, N: int, F: float, B: float, SR: float,
+                 a: float, w: float, mem_limit=None,
+                 w_frac: float = 0.5) -> ScheduleEval:
+    """Automatic zero-bubble scheduler (arXiv 2211.05953's heuristic):
+    :func:`repro.core.schedplan.build_zb_auto` places F/B/W ops under the
+    ``mem_limit`` peak-live cap with the actual op costs, and this entry
+    reports the *scheduled* makespan — the discrete-event replay of the
+    emitted table, not a formula — plus the peak-live row from the IR's
+    symbolic replay.  ``B`` is the full backward; ``w_frac`` of it is the
+    weight-gradient half.  With an unbounded cap the steady state is
+    bubble-free (only the fill/drain ramp remains; peak-live climbs to
+    M); under the 1F1B cap the table IS ZB-H1's, so this entry always
+    interpolates the zero-bubble family along the memory axis."""
+    from repro.core.schedplan import build_zb_auto
+    from repro.core.simulator import simulate
+    plan = build_zb_auto(M, N, costs=(F, B * (1 - w_frac), B * w_frac),
+                         mem_limit=mem_limit)
+    sim = simulate(plan, M, N, F, B, 0.0, w_frac=w_frac)
+    t = sim.makespan
+    feats = tuple(float(c) * a for c in plan.peak_live())
+    return ScheduleEval(
+        name="ZB-AUTO", minibatch_time=t,
+        bubble_fraction=1.0 - M * (F + B) / t if t else 0.0,
+        features_memory=feats, weights_memory=2 * w,
+        bandwidth_demand=(a / F) if F > 0 else float("inf"))
+
+
 def eval_1f1b_interleaved(M: int, N: int, F: float, B: float, SR: float,
                           a: float, w: float, V: int = 2) -> ScheduleEval:
     """Interleaved 1F1B (see module docstring).  ``F``/``B``/``a``/``w`` are
@@ -272,10 +338,12 @@ SCHEDULES = {
     "1F1B-I-ML": eval_1f1b_interleaved_memlean,
     "DAPPLE": eval_dapple,
     "ZB-H1": eval_zb_h1,
+    "ZB-H2": eval_zb_h2,
+    "ZB-AUTO": eval_zb_auto,
 }
 
-ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS", "DAPPLE", "ZB-H1", "1F1B-I",
-                   "1F1B-I-ML")
+ASYNC_SCHEDULES = ("1F1B-AS", "FBP-AS", "DAPPLE", "ZB-H1", "ZB-H2",
+                   "ZB-AUTO", "1F1B-I", "1F1B-I-ML")
 SYNC_SCHEDULES = ("1F1B-SNO", "1F1B-SO")
 
 

@@ -25,10 +25,19 @@ replays DAPPLE's early-backward order (== synchronous 1F1B), and
 ``zb-h1`` replays the zero-bubble split-backward table: its ``B`` ops
 (input gradient, B/2 each) propagate errors upstream while ``W`` ops
 (weight gradient, B/2, no transfer) fill the drain bubbles — makespan
-``M(F+B) + (N-1)(F + B/2)``.
+``M(F+B) + (N-1)(F + B/2)``.  ``zb-h2`` replays the bubble-free
+hand-crafted table (makespan ``M(F+B) + (N-1)F`` at the even-split
+design point) and ``zb-auto`` the automatic scheduler's table;
+cost-/cap-parameterised auto tables are replayed by passing the prebuilt
+:class:`~repro.core.schedplan.SchedPlan` as ``schedule``.
 
 The simulator also tracks the peak number of live micro-batch activations
-per device, which is the paper's "features memory" column.
+per device — the paper's "features memory" column; for W-bearing
+(zero-bubble) plans this is read off the IR's ``peak_live()`` symbolic
+replay, the same quantity the runtime's residual stash allocates — plus
+each device's active window (``t_start``/``t_end``/``busy``), whose
+``internal_idle`` is the schedule bubble with the fill/drain ramp
+excluded (zero everywhere == bubble-free).
 """
 from __future__ import annotations
 
@@ -43,9 +52,22 @@ class SimResult:
     makespan: float
     peak_live: list[int]          # per device: peak resident activations
     idle: list[float]             # per device: total idle (bubble) time
+    t_start: list[float] = dataclasses.field(default_factory=list)
+    t_end: list[float] = dataclasses.field(default_factory=list)
+    busy: list[float] = dataclasses.field(default_factory=list)
 
     def bubble_fraction(self, stage: int = 0) -> float:
         return self.idle[stage] / self.makespan if self.makespan else 0.0
+
+    @property
+    def internal_idle(self) -> list[float]:
+        """Per-device idle *inside* the device's own active window (first
+        op start to last op end) — the schedule bubble proper, excluding
+        the unavoidable pipeline fill/drain ramp.  A schedule is
+        bubble-free exactly when this is zero everywhere (zb-h2 and
+        unbounded zb-auto, for M >= 2N)."""
+        return [(e - s) - b
+                for s, e, b in zip(self.t_start, self.t_end, self.busy)]
 
 
 # default communication model per schedule-table name (the paper's async
@@ -67,40 +89,61 @@ _DEFAULT_COMM = {
     "1f1b-2x": "free",
     "1f1b-interleaved": "free",
     "1f1b-interleaved-memlean": "free",
-    # DAPPLE's early-backward order (== sync 1F1B) and zero-bubble H1:
-    # both rely on overlapped boundary transfers
+    # DAPPLE's early-backward order (== sync 1F1B) and the zero-bubble
+    # family: all rely on overlapped boundary transfers
     "dapple": "free",
     "DAPPLE": "free",
     "zb-h1": "free",
     "zb_h1": "free",
     "ZB-H1": "free",
+    "zb-h2": "free",
+    "zb_h2": "free",
+    "ZB-H2": "free",
+    "zb-auto": "free",
+    "zb_auto": "free",
+    "ZB-AUTO": "free",
 }
 
 
-def simulate(schedule: str, M: int, N: int,
+def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
              F: float | Sequence[float], B: float | Sequence[float],
              SR: float = 0.0, V: int = 1,
-             comm: str | None = None) -> SimResult:
+             comm: str | None = None, w_frac: float = 0.5) -> SimResult:
     """Simulate one mini-batch of M micro-batches through N devices.
 
-    ``V`` (>1 only for the interleaved schedules) interleaves V virtual
-    stages per device; per-chunk compute time is the device time divided
-    by V.  ``comm`` overrides the schedule's default communication model
-    (used by the differential tests to bracket the closed forms).
+    ``schedule`` is a schedule name (the op table is built via
+    :func:`repro.core.schedplan.build_schedule`) or a prebuilt
+    :class:`~repro.core.schedplan.SchedPlan` — the way cost- or
+    cap-parameterised ``zb-auto`` tables are replayed.  ``V`` (>1 only
+    for the interleaved schedules) interleaves V virtual stages per
+    device; per-chunk compute time is the device time divided by V.
+    ``comm`` overrides the schedule's default communication model (used
+    by the differential tests to bracket the closed forms).
 
-    For zero-bubble plans (``zb-h1``) the ``B`` argument is the FULL
-    per-micro-batch backward time of a device: the plan's input-gradient
-    ``B`` ops and weight-gradient ``W`` ops each take half of it (the
-    even split the closed form assumes).
+    For zero-bubble plans (``zb-h1``/``zb-h2``/``zb-auto``) the ``B``
+    argument is the FULL per-micro-batch backward time of a device;
+    ``w_frac`` is the fraction of it spent in the weight-gradient ``W``
+    op (default the even split the closed forms assume), the rest in the
+    input-gradient ``B`` op.
     """
     Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
     Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
     assert len(Fs) == len(Bs) == N
+    if not 0.0 < w_frac < 1.0:
+        raise ValueError(f"w_frac must be in (0, 1), got {w_frac}")
 
-    default_comm = _DEFAULT_COMM.get(schedule)
-    if default_comm is None:
-        raise ValueError(schedule)
-    plan = SP.build_schedule(schedule, M, N, V)
+    if isinstance(schedule, SP.SchedPlan):
+        plan = schedule
+        if (plan.M, plan.N, plan.V) != (M, N, V):
+            raise ValueError(
+                f"plan {plan.name!r} is (M={plan.M}, N={plan.N}, "
+                f"V={plan.V}); simulate() was asked for ({M}, {N}, {V})")
+        default_comm = _DEFAULT_COMM.get(plan.name, "free")
+    else:
+        default_comm = _DEFAULT_COMM.get(schedule)
+        if default_comm is None:
+            raise ValueError(schedule)
+        plan = SP.build_schedule(schedule, M, N, V)
     has_w = plan.has_w
     orders = [[(op.kind, op.m, op.vstage) for op in ops]
               for ops in plan.device_ops]
@@ -109,10 +152,11 @@ def simulate(schedule: str, M: int, N: int,
         raise ValueError(comm)
 
     NS = N * V                                 # virtual stages
-    bsplit = 2.0 if has_w else 1.0             # zb: B is split evenly B/W
+    # zb: B is split into input-grad (B) and weight-grad (W) halves
+    b_frac = (1.0 - w_frac) if has_w else 1.0
     dur = {"F": [Fs[vs % N] / V for vs in range(NS)],
-           "B": [Bs[vs % N] / V / bsplit for vs in range(NS)],
-           "W": [Bs[vs % N] / V / bsplit for vs in range(NS)]}
+           "B": [Bs[vs % N] / V * b_frac for vs in range(NS)],
+           "W": [Bs[vs % N] / V * w_frac for vs in range(NS)]}
 
     # --- task state ------------------------------------------------------
     f_done = [[-1.0] * NS for _ in range(M)]   # completion time of F[m][vs]
@@ -124,6 +168,8 @@ def simulate(schedule: str, M: int, N: int,
         f_ready[m][0] = 0.0                    # stage 0 reads local data
     dev_free = [0.0] * N
     busy = [0.0] * N                           # accumulated busy time
+    t_start: list = [None] * N                 # first compute-op start
+    t_end = [0.0] * N                          # last compute-op end
     ptr = [0] * N                              # next op index
     n_done = 0
     total_ops = sum(len(o) for o in orders)
@@ -190,6 +236,9 @@ def simulate(schedule: str, M: int, N: int,
         end = s + d
         dev_free[n] = end
         busy[n] += d
+        if t_start[n] is None:
+            t_start[n] = s
+        t_end[n] = end
         if kind == "F":
             f_done[m][vs] = end
         elif kind == "B":
@@ -207,20 +256,29 @@ def simulate(schedule: str, M: int, N: int,
     done_rows = w_done if has_w else b_done
     makespan = max(max(r) for r in done_rows)
 
-    # peak live activations per device: F done (or started) but the
-    # residual-releasing op (B; W for zero-bubble plans) not done, summed
-    # over the device's V chunks.
-    peak = []
-    for n in range(N):
-        events = []
-        for vs in range(n, NS, N):
-            events += [(f_done[m][vs] - dur["F"][vs], +1) for m in range(M)]
-            events += [(done_rows[m][vs], -1) for m in range(M)]
-        events.sort()
-        live = pk = 0
-        for _, delta in events:
-            live += delta
-            pk = max(pk, live)
-        peak.append(pk)
+    # peak live activations per device.  W-bearing plans take the row
+    # straight from the IR's symbolic replay — the schedule-plan table is
+    # the single source of truth for what the runtime's residual stash
+    # allocates (pinned in tests/test_simulator_vs_closed_form.py); the
+    # event-time reconstruction below is kept for two-op plans, whose
+    # differential tests grant the greedy scheduler one-op-ahead slack.
+    if has_w:
+        peak = plan.peak_live()
+    else:
+        peak = []
+        for n in range(N):
+            events = []
+            for vs in range(n, NS, N):
+                events += [(f_done[m][vs] - dur["F"][vs], +1)
+                           for m in range(M)]
+                events += [(done_rows[m][vs], -1) for m in range(M)]
+            events.sort()
+            live = pk = 0
+            for _, delta in events:
+                live += delta
+                pk = max(pk, live)
+            peak.append(pk)
     idle = [makespan - busy[n] for n in range(N)]
-    return SimResult(makespan=makespan, peak_live=peak, idle=idle)
+    return SimResult(makespan=makespan, peak_live=peak, idle=idle,
+                     t_start=[0.0 if s is None else s for s in t_start],
+                     t_end=t_end, busy=list(busy))

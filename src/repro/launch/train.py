@@ -43,10 +43,16 @@ def main(argv=None):
                          "needs --microbatches >= stages")
     ap.add_argument("--schedule", default="",
                     help="pipeline op order: auto | gpipe | 1f1b | dapple"
-                         " | zb-h1 | 1f1b-interleaved |"
+                         " | zb-h1 | zb-h2 | zb-auto | 1f1b-interleaved |"
                          " 1f1b-interleaved-memlean (memlean needs"
                          " --microbatches %% stages == 0); backward order"
                          " is executed as first-class ticks")
+    ap.add_argument("--mem-limit", type=int, default=0,
+                    help="zb-auto only: peak-live cap (resident micro-batch"
+                         " residuals per device). 0 = unbounded, the fully"
+                         " bubble-free order at an M-deep residual stash;"
+                         " stages (=1F1B window) reproduces zb-h1,"
+                         " ~2*stages reproduces zb-h2")
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -72,11 +78,21 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, virtual=args.virtual)
     if args.schedule:
         cfg = dataclasses.replace(cfg, schedule=args.schedule)
+    if args.mem_limit:
+        if not args.auto_plan:
+            from repro.core.schedplan import canonical_name
+            sched = cfg.schedule if cfg.schedule not in ("auto", "") \
+                else "1f1b"
+            if canonical_name(sched) != "zb-auto":
+                ap.error(f"--mem-limit only applies to --schedule zb-auto "
+                         f"(or --auto-plan); got --schedule {sched}")
+        cfg = dataclasses.replace(cfg, mem_limit=args.mem_limit)
     if args.auto_plan:
         from repro.core.autoplan import auto_plan
         plan_ = auto_plan(cfg, global_batch=args.batch, seq_len=args.seq,
                           model_axis=cfg.stages * cfg.tensor,
-                          data_axis=args.data)
+                          data_axis=args.data,
+                          mem_limit=args.mem_limit or None)
         cfg = plan_.apply(cfg)
         args.microbatches = plan_.n_microbatches
         print(f"auto-plan: stages={plan_.stages} tensor={plan_.tensor} "
@@ -101,7 +117,8 @@ def main(argv=None):
     opt = AdamW(lr=warmup_cosine(args.lr, 20, args.steps), weight_decay=0.01)
     opt_state = opt.init(params)
     pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
-                             schedule=cfg.schedule, remat=args.remat)
+                             schedule=cfg.schedule, remat=args.remat,
+                             mem_limit=cfg.mem_limit)
     step_fn, specs = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,

@@ -82,9 +82,14 @@ from repro.pipeline import stage as ST
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     n_microbatches: int = 4
-    schedule: str = "auto"          # schedplan name: auto | 1f1b |
+    schedule: str = "auto"          # schedplan name: auto | gpipe | 1f1b |
+                                    # dapple | zb-h1 | zb-h2 | zb-auto |
                                     # 1f1b-interleaved |
-                                    # 1f1b-interleaved-memlean | gpipe
+                                    # 1f1b-interleaved-memlean
+    mem_limit: int = 0              # zb-auto peak-live cap (resident
+                                    # micro-batch residuals per device);
+                                    # 0 = unbounded (fully bubble-free
+                                    # order, M-deep residual stash)
     remat: str = "stage"            # none | stage | stage_save_moe | full.
                                     # Training recomputes each stage from
                                     # its stashed input at the B tick, so
@@ -347,7 +352,9 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     # per-device per-tick lookup arrays: backward ops are first-class
     # ticks, executed by the same scan as the forwards
     sched = SP.resolve_ring_schedule(pcfg.schedule, V)
-    lowering = SP.lower_to_ticks(SP.build_schedule(sched, M_, S, V))
+    ml = (pcfg.mem_limit or None) if sched == "zb-auto" else None
+    lowering = SP.lower_to_ticks(SP.build_schedule(sched, M_, S, V,
+                                                   mem_limit=ml))
     has_w = lowering.has_w
     if pcfg.remat not in ("none", "stage", "stage_save_moe", "full"):
         raise ValueError(
@@ -737,7 +744,9 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                            tensor_size=mesh.shape["tensor"], virtual=V)
     M_ = pcfg.n_microbatches
     sched = SP.resolve_ring_schedule(pcfg.schedule, V)
-    lowering = SP.lower_to_ring(SP.build_schedule(sched, M_, S, V))
+    ml = (pcfg.mem_limit or None) if sched == "zb-auto" else None
+    lowering = SP.lower_to_ring(SP.build_schedule(sched, M_, S, V,
+                                                  mem_limit=ml))
     fsdp_dims = ST.fsdp_scan_dims(specs, virtual=V) if cfg.fsdp else {}
     ep_dp_axis = "data" if (cfg.moe and cfg.moe.ep_data) else None
     ep_n_dp = mesh.shape["data"] if ep_dp_axis else 1

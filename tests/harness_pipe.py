@@ -213,11 +213,15 @@ def interleaved_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
 def schedule_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
                          microbatches=4, *schedules):
     """First-class backward ticks: every ring schedule — including the
-    early-backward ``dapple`` and the zero-bubble split-backward
-    ``zb_h1`` — must produce loss/grads equal to the single-device
-    reference (and hence to each other / to gpipe).  Runs several
-    schedules in one subprocess so the reference is computed once."""
-    schedules = schedules or ("gpipe", "dapple", "zb_h1")
+    early-backward ``dapple`` and the zero-bubble family ``zb_h1`` /
+    ``zb_h2`` / ``zb_auto`` (split input-/weight-gradient ticks) — must
+    produce loss/grads equal to the single-device reference (and hence
+    to each other / to gpipe).  A ``name:K`` schedule runs zb_auto under
+    a peak-live cap of K (the PipelineConfig.mem_limit knob).  Runs
+    several schedules in one subprocess so the reference is computed
+    once."""
+    schedules = schedules or ("gpipe", "dapple", "zb_h1", "zb_h2",
+                              "zb_auto")
     data = 8 // (stages * tensor) or 1
     cfg, plan, params = _setup(arch, stages, tensor)
     mesh = _mesh(data, stages, tensor)
@@ -228,7 +232,9 @@ def schedule_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
     gr = jax.tree.map(np.asarray, ref_grads["layers"])
     worsts = {}
     for sched in schedules:
-        pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=sched)
+        name, _, cap = str(sched).partition(":")
+        pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=name,
+                                 mem_limit=int(cap) if cap else 0)
         step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
         loss, grads = step(params, batch)
         assert abs(float(loss) - ref_loss) < 1e-4, (sched, float(loss),

@@ -83,26 +83,80 @@ def test_interleaved_picked_when_bubble_dominates():
     assert r.sched_eval.bubble_fraction < 3 / (4 + 3)
 
 
-def test_zb_h1_wins_unbalanced_bubble_fixture():
+def test_zero_bubble_family_wins_unbalanced_bubble_fixture():
     """Acceptance: on a bubble-dominated fixture whose layers do NOT
-    partition evenly over N*V chunks (GNMT), the explorer lands on ZB-H1
-    — the V=1 zero-bubble schedule keeps the better-balanced N-stage
-    partition — and the simulator replay of the zb-h1 op table confirms
-    a strictly smaller makespan and bubble than 1F1B on the same
-    partition."""
+    partition evenly over N*V chunks (GNMT), the explorer lands on the
+    zero-bubble family — the V=1 schedules keep the better-balanced
+    N-stage partition — specifically on ZB-H2 (first-searched of the
+    bubble-free pair; ZB-AUTO ties it).  The simulator replay of the op
+    tables confirms the family's strict makespan ladder on the same
+    partition: zb-auto <= zb-h2 < zb-h1 < 1f1b."""
     from repro.core.simulator import simulate
     roomy = dataclasses.replace(TPU_V5E, memory_capacity=1e15,
                                 link_bandwidth=1e13)
     r = explore(profile_gnmt(16), homogeneous_cluster(roomy, 4), 8,
                 candidate_Ms=[4], consider_dp=False)
-    assert r.schedule == "ZB-H1", (r.schedule, r.V)
+    assert r.schedule == "ZB-H2", (r.schedule, r.V)
     F, B = r.plan.bottleneck_FB()
+    auto = simulate("zb-auto", r.M, 4, F, B, 0.0)
+    h2 = simulate("zb-h2", r.M, 4, F, B, 0.0)
     zb = simulate("zb-h1", r.M, 4, F, B, 0.0)
     base = simulate("1f1b", r.M, 4, F, B, 0.0)
-    assert zb.makespan < base.makespan
+    assert auto.makespan <= h2.makespan + 1e-12
+    assert h2.makespan < zb.makespan < base.makespan
     assert zb.bubble_fraction() < base.bubble_fraction()
-    # the saving is exactly the weight-grad work off the critical path
+    # ZB-H1's saving is exactly the weight-grad work off the critical
+    # path; ZB-H2 additionally removes the drain's (N-1)(B/2)
     assert base.makespan - zb.makespan == pytest.approx(3 * B / 2, rel=1e-9)
+    assert zb.makespan - h2.makespan == pytest.approx(3 * B / 2, rel=1e-9)
+
+
+def test_zero_bubble_family_degrades_with_memory():
+    """Acceptance: the zero-bubble family interpolates along the memory
+    axis.  On an activation-heavy bubble-dominated fixture (interleaving
+    disabled) the explorer lands on the fastest zero-bubble entry whose
+    features row fits the devices: roomy memory -> the bubble-free point
+    (ZB-H2; unbounded ZB-AUTO ties it at M >= 2N-1), capacity between the
+    ZB-H1 and ZB-H2 rows -> ZB-H1 at exactly 1F1B's window."""
+    from repro.core.profiler import LayerProfile, NetworkProfile
+    from repro.core.hardware import DeviceSpec
+    prof = NetworkProfile("acty", tuple(
+        LayerProfile(name=f"l{i}", flops_fwd=1e12, bytes_weights=1e6,
+                     bytes_act_out=1e9) for i in range(16)), unit="sample")
+    dev = DeviceSpec("async_dev", 100e12, 1e12, 1e15, 1e15,
+                     async_capable=True, efficiency=1.0)
+    N, M = 4, 8
+    roomy = explore(prof, homogeneous_cluster(dev, N), M,
+                    candidate_Ms=[M], consider_dp=False, candidate_Vs=())
+    assert roomy.schedule == "ZB-H2", (roomy.schedule, roomy.V)
+    # per-device rows: zb-auto (unbounded) holds M=8 residuals, zb-h2
+    # max(2(N-i+1)-1, i-1+3) = 7 at stage 1, zb-h1 the 1F1B window 4
+    cap_h2 = 7.5e9          # admits zb-h2's row, rejects zb-auto's M
+    r = explore(prof, homogeneous_cluster(
+        dataclasses.replace(dev, memory_capacity=cap_h2), N), M,
+        candidate_Ms=[M], consider_dp=False, candidate_Vs=())
+    assert r.schedule == "ZB-H2", (r.schedule, r.V)
+    assert all(m <= cap_h2 for m in r.per_stage_memory)
+    cap_h1 = 4.5e9          # admits only the 1F1B window
+    r = explore(prof, homogeneous_cluster(
+        dataclasses.replace(dev, memory_capacity=cap_h1), N), M,
+        candidate_Ms=[M], consider_dp=False, candidate_Vs=())
+    assert r.schedule == "ZB-H1", (r.schedule, r.V)
+    assert all(m <= cap_h1 for m in r.per_stage_memory)
+    # the mem_limit knob caps ZB-AUTO's row to N residuals, making it
+    # feasible again at the tightest tier — and the cost-driven scheduler
+    # beats hand-written ZB-H1 there, because a uniform cap of N gives
+    # the downstream devices slack the 1F1B staircase (N-i+1) wastes
+    r = explore(prof, homogeneous_cluster(
+        dataclasses.replace(dev, memory_capacity=cap_h1), N), M,
+        candidate_Ms=[M], consider_dp=False, candidate_Vs=(),
+        mem_limit=N)
+    assert r.schedule == "ZB-AUTO", (r.schedule, r.V)
+    assert all(m <= cap_h1 for m in r.per_stage_memory)
+    from repro.core.schedules import eval_zb_h1
+    F, B = r.plan.bottleneck_FB()
+    assert r.minibatch_time < eval_zb_h1(M, N, F, B, 0.0, 1.0,
+                                         1.0).minibatch_time
 
 
 def test_interleaved_rejected_when_memory_exceeded():
@@ -147,20 +201,24 @@ def test_memlean_selected_when_memory_gates_plain_interleaving():
                      async_capable=True, efficiency=1.0)
     cl = homogeneous_cluster(dev, 4)
     # roomy: plain streaming 1F1B-I wins (memlean has no edge when memory
-    # is free, and the search prefers the incumbent on exact time ties)
+    # is free, and the search prefers the incumbent on exact time ties).
+    # V=4 so the interleaved bubble (N-1)(F+B)/V beats even ZB-H2's
+    # bubble-free-drain (N-1)F floor, which a V=2 interleave no longer
+    # does now that the zero-bubble family is searched.
     roomy = explore(prof, cl, 16, candidate_Ms=[16], consider_dp=False,
-                    candidate_Vs=(2,))
-    assert roomy.schedule == "1F1B-I" and roomy.V == 2
+                    candidate_Vs=(4,))
+    assert roomy.schedule == "1F1B-I" and roomy.V == 4, (roomy.schedule,
+                                                        roomy.V)
     # capacity between the memlean and streaming footprints: with M=16,
-    # N=4, V=2 the stage-1 live rows are 2(N-1)+(V-1)N+1 = 11 (memlean)
-    # vs (V-1)M + N = 20 (streaming)
-    cap = max(roomy.per_stage_memory) * (15.0 / 20.0)
+    # N=4, V=4 the stage-1 live rows are 2(N-1)+(V-1)N+1 = 19 (memlean)
+    # vs (V-1)M + N = 52 (streaming)
+    cap = max(roomy.per_stage_memory) * (30.0 / 52.0)
     tight = homogeneous_cluster(
         dataclasses.replace(dev, memory_capacity=cap), 4)
     r = explore(prof, tight, 16, candidate_Ms=[16], consider_dp=False,
-                candidate_Vs=(2,))
+                candidate_Vs=(4,))
     assert r.feasible
-    assert r.schedule == "1F1B-I-ML" and r.V == 2, (r.schedule, r.V)
+    assert r.schedule == "1F1B-I-ML" and r.V == 4, (r.schedule, r.V)
     assert all(m <= cap for m in r.per_stage_memory)
     # and it keeps the interleaved makespan the V=1 fallback cannot reach
     v1 = explore(prof, tight, 16, candidate_Ms=[16], consider_dp=False,

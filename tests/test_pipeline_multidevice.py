@@ -98,16 +98,20 @@ def test_interleaved_fsdp_grad_equivalence():
 
 
 @pytest.mark.parametrize("stages,tensor,microbatches,schedules", [
-    (2, 2, 4, ("gpipe", "1f1b", "dapple", "zb_h1")),   # all V=1 builders
+    (2, 2, 4, ("gpipe", "1f1b", "dapple", "zb_h1")),   # two-op + zb-h1
     (4, 1, 4, ("gpipe", "dapple", "zb_h1")),           # deep ring, warm-up 4
+    (2, 2, 4, ("zb_h2", "zb_auto", "zb_auto:2")),      # zero-bubble family
+    (4, 1, 4, ("zb_h2", "zb_auto:4")),                 # deep ring zb; capped
 ])
 def test_backward_tick_schedules_grad_equivalence(stages, tensor,
                                                   microbatches, schedules):
     """First-class backward ticks: every V=1 builder — gpipe's
-    all-F-then-all-B, 1f1b/dapple's early backward, zb_h1's split
-    input-/weight-gradient ticks — must produce loss/grads equal to the
-    single-device reference on 8 fake devices.  Together with the
-    interleaved cases above this covers all five ring builders."""
+    all-F-then-all-B, 1f1b/dapple's early backward, the zero-bubble
+    family's split input-/weight-gradient ticks (zb_h1, zb_h2, zb_auto
+    both unbounded and under a mem_limit cap, where the tick table and
+    the residual stash size change) — must produce loss/grads equal to
+    the single-device reference on 8 fake devices.  Together with the
+    interleaved cases above this covers all ring builders."""
     run_case("schedule_equivalence", "llama3.2-1b", str(stages), str(tensor),
              str(microbatches), *schedules, timeout=540)
 

@@ -16,6 +16,10 @@ lowering sound:
 * the symbolic ``peak_live()`` replay equals the O(1) algebraic
   features-memory rows, and the tick lowering's residual-stash size is
   exactly that row — the runtime's memory claim is structural.
+
+Each test is parametrized over ``schedplan.BUILDER_NAMES`` (NOT a
+hand-maintained list), so a new builder is conformance-checked the
+moment it is registered.
 """
 try:
     from hypothesis import given, settings, strategies as st
@@ -27,10 +31,8 @@ import pytest
 from repro.core import schedplan as SP
 from repro.core.simulator import simulate
 
-BUILDERS = SP.BUILDER_NAMES
 
-
-def _draw_shape(name, N, mmult, V):
+def _shape(name, N, mmult, V):
     """Feasible (M, V) for a builder given the drawn knobs."""
     if name not in SP.INTERLEAVED:
         V = 1
@@ -38,89 +40,94 @@ def _draw_shape(name, N, mmult, V):
     return M, V
 
 
-def _plans(N, mmult, V):
-    for name in BUILDERS:
-        M, v = _draw_shape(name, N, mmult, V)
-        yield name, M, v, SP.build_schedule(name, M, N, v)
-
-
-@settings(max_examples=25)
+@pytest.mark.parametrize("name", SP.BUILDER_NAMES)
+@settings(max_examples=15)
 @given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
-def test_f_before_b_before_w(N, mmult, V):
+def test_f_before_b_before_w(name, N, mmult, V):
     """On every device, each (m, v)'s F precedes its B, and (zero-bubble
     plans) its B precedes its W."""
-    for name, M, v, plan in _plans(N, mmult, V):
-        for ops in plan.device_ops:
-            pos = {(o.kind, o.m, o.v): i for i, o in enumerate(ops)}
-            for (kind, m, vv), i in pos.items():
-                if kind == "B":
-                    assert pos[("F", m, vv)] < i, (name, M, N, v)
-                if kind == "W":
-                    assert pos[("B", m, vv)] < i, (name, M, N, v)
+    M, v = _shape(name, N, mmult, V)
+    plan = SP.build_schedule(name, M, N, v)
+    for ops in plan.device_ops:
+        pos = {(o.kind, o.m, o.v): i for i, o in enumerate(ops)}
+        for (kind, m, vv), i in pos.items():
+            if kind == "B":
+                assert pos[("F", m, vv)] < i, (name, M, N, v)
+            if kind == "W":
+                assert pos[("B", m, vv)] < i, (name, M, N, v)
 
 
-@settings(max_examples=25)
+@pytest.mark.parametrize("name", SP.BUILDER_NAMES)
+@settings(max_examples=15)
 @given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
-def test_send_recv_edges_pair_up(N, mmult, V):
+def test_send_recv_edges_pair_up(name, N, mmult, V):
     """Every send edge has exactly one matching receive edge: F(m, vs)
     sending to vs+1 pairs with F(m, vs+1) receiving from vs (backwards
     mirrored); W ops never touch the ring."""
-    for name, M, v, plan in _plans(N, mmult, V):
-        ops = [o for dev in plan.device_ops for o in dev]
-        sends = {(o.kind, o.m, o.vstage, o.send_to)
-                 for o in ops if o.send_to is not None}
-        recvs = {(o.kind, o.m, o.recv_from, o.vstage)
-                 for o in ops if o.recv_from is not None}
-        assert sends == recvs, (name, M, N, v)
-        assert all(o.send_to is None and o.recv_from is None
-                   for o in ops if o.kind == "W")
-        # every interior edge is a single neighbour hop on the ring
-        for kind, m, src, dst in sends:
-            assert abs(dst - src) == 1
+    M, v = _shape(name, N, mmult, V)
+    plan = SP.build_schedule(name, M, N, v)
+    ops = [o for dev in plan.device_ops for o in dev]
+    sends = {(o.kind, o.m, o.vstage, o.send_to)
+             for o in ops if o.send_to is not None}
+    recvs = {(o.kind, o.m, o.recv_from, o.vstage)
+             for o in ops if o.recv_from is not None}
+    assert sends == recvs, (name, M, N, v)
+    assert all(o.send_to is None and o.recv_from is None
+               for o in ops if o.kind == "W")
+    # every interior edge is a single neighbour hop on the ring
+    for kind, m, src, dst in sends:
+        assert abs(dst - src) == 1
 
 
-@settings(max_examples=20)
+@pytest.mark.parametrize("name", SP.BUILDER_NAMES)
+@settings(max_examples=12)
 @given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
-def test_tick_lowering_no_deadlock_and_matches_simulator(N, mmult, V):
+def test_tick_lowering_no_deadlock_and_matches_simulator(name, N, mmult, V):
     """lower_to_ticks terminates (raises on any cyclic cross-device
     dependency) and its synchronous tick count equals the discrete-event
     free-comm makespan at unit per-op durations — i.e. one tick == one
     chunk-op, with the one-tick ppermute hop hidden exactly like the
     simulator's free transfers."""
-    for name, M, v, plan in _plans(N, mmult, V):
-        lo = SP.lower_to_ticks(plan)
-        ms = simulate(name, M, N, float(v),
-                      float(v) * (2 if plan.has_w else 1), 0.0, V=v).makespan
-        assert lo.n_ticks == pytest.approx(ms), (name, M, N, v)
-        # one op per device per tick, each exactly once
-        per_mv = 3 if plan.has_w else 2
-        for n in range(N):
-            kinds = [k for k in lo.kind[n] if k != SP.TICK_IDLE]
-            assert len(kinds) == per_mv * M * v
+    M, v = _shape(name, N, mmult, V)
+    plan = SP.build_schedule(name, M, N, v)
+    lo = SP.lower_to_ticks(plan)
+    ms = simulate(name, M, N, float(v),
+                  float(v) * (2 if plan.has_w else 1), 0.0, V=v).makespan
+    assert lo.n_ticks == pytest.approx(ms), (name, M, N, v)
+    # one op per device per tick, each exactly once
+    per_mv = 3 if plan.has_w else 2
+    for n in range(N):
+        kinds = [k for k in lo.kind[n] if k != SP.TICK_IDLE]
+        assert len(kinds) == per_mv * M * v
 
 
-@settings(max_examples=25)
+@pytest.mark.parametrize("name", SP.BUILDER_NAMES)
+@settings(max_examples=15)
 @given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
-def test_peak_live_replay_matches_algebraic_rows(N, mmult, V):
+def test_peak_live_replay_matches_algebraic_rows(name, N, mmult, V):
     """``SchedPlan.peak_live()`` symbolic replay == the O(1)
     ``live_activation_counts`` rows for every builder (dapple and zb-h1
-    hold 1F1B's N - n window)."""
-    for name, M, v, plan in _plans(N, mmult, V):
-        replay = plan.peak_live()
-        alg = SP.live_activation_counts(name, M, N, v)
-        for r, a in zip(replay, alg):
-            assert abs(r - a) <= 1, (name, M, N, v, replay, alg)
+    hold 1F1B's N - n window; zb-h2 the deep-warm-up/banked-W row;
+    unbounded zb-auto pays M for its bubble-free steady state)."""
+    M, v = _shape(name, N, mmult, V)
+    plan = SP.build_schedule(name, M, N, v)
+    replay = plan.peak_live()
+    alg = SP.live_activation_counts(name, M, N, v)
+    for r, a in zip(replay, alg):
+        assert abs(r - a) <= 1, (name, M, N, v, replay, alg)
 
 
-@settings(max_examples=20)
+@pytest.mark.parametrize("name", SP.BUILDER_NAMES)
+@settings(max_examples=12)
 @given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
-def test_residual_stash_is_the_features_row(N, mmult, V):
+def test_residual_stash_is_the_features_row(name, N, mmult, V):
     """The tick lowering's statically allocated residual stash (``n_x``)
     equals the schedule's peak-live row — the runtime's features-memory
     footprint IS the closed form's, by register allocation."""
-    for name, M, v, plan in _plans(N, mmult, V):
-        lo = SP.lower_to_ticks(plan)
-        assert lo.n_x == max(plan.peak_live()), (name, M, N, v)
+    M, v = _shape(name, N, mmult, V)
+    plan = SP.build_schedule(name, M, N, v)
+    lo = SP.lower_to_ticks(plan)
+    assert lo.n_x == max(plan.peak_live()), (name, M, N, v)
 
 
 @settings(max_examples=20)
@@ -136,6 +143,50 @@ def test_zb_h1_holds_the_1f1b_memory_window(N, mmult):
     ms_zb = simulate("zb-h1", M, N, 1.0, 1.0, 0.0).makespan
     ms_da = simulate("dapple", M, N, 1.0, 1.0, 0.0).makespan
     assert ms_zb < ms_da
+
+
+@settings(max_examples=25)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 6))
+def test_zb_auto_reproduces_zb_h1_under_the_1f1b_cap(N, mmult):
+    """Acceptance: the automatic zero-bubble scheduler under the 1F1B
+    memory cap (per-device window N - n) emits EXACTLY ZB-H1's op table
+    — the hand-written schedule is a special case of the cap."""
+    M = N * mmult
+    cap = [max(1, min(M, N - n)) for n in range(N)]
+    auto = SP.build_zb_auto(M, N, mem_limit=cap)
+    h1 = SP.build_zb_h1(M, N)
+    assert auto.device_ops == h1.device_ops, (M, N)
+
+
+@settings(max_examples=25)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 6))
+def test_zb_h2_is_zb_auto_under_the_h2_cap(N, mmult):
+    """ZB-H2 is definitionally the automatic scheduler's table under
+    :func:`schedplan.zb_h2_mem_caps` — pin the derivation, and that its
+    peak-live row equals the cap exactly (the cap is attained)."""
+    M = N * mmult
+    h2 = SP.build_zb_h2(M, N)
+    auto = SP.build_zb_auto(M, N, mem_limit=SP.zb_h2_mem_caps(M, N))
+    assert h2.device_ops == auto.device_ops
+    assert h2.peak_live() == SP.zb_h2_mem_caps(M, N)
+
+
+@settings(max_examples=20)
+@given(N=st.integers(1, 6), mmult=st.integers(2, 6))
+def test_zb_h2_and_unbounded_auto_are_bubble_free_in_ticks(N, mmult):
+    """Acceptance: for M >= 2N the zb-h2 table's synchronous tick count
+    is exactly ``3M + N - 1`` — unit-cost M(F+B) work plus only the
+    ``N - 1`` fill ramp; the entire 1F1B flush bubble is gone — and the
+    unbounded zb-auto table matches it while gpipe/1f1b/zb-h1 sit
+    strictly above (N > 1)."""
+    M = N * mmult            # mmult >= 2 -> M >= 2N
+    target = 3 * M + N - 1
+    for name in ("zb-h2", "zb-auto"):
+        lo = SP.lower_to_ticks(SP.build_schedule(name, M, N, 1))
+        assert lo.n_ticks == target, (name, M, N, lo.n_ticks)
+    if N > 1:
+        h1 = SP.lower_to_ticks(SP.build_schedule("zb-h1", M, N, 1))
+        assert h1.n_ticks > target
 
 
 def test_dapple_table_equals_1f1b():
@@ -165,3 +216,32 @@ def test_zb_h1_w_fills_the_drain():
     for n, ops in enumerate(plan.device_ops):
         tail = [o.kind for o in ops[-2 * (4 - n):]]
         assert tail == ["B", "W"] * (4 - n), (n, tail)
+
+
+def test_zb_h2_has_double_warmup_and_banked_drain_ws():
+    """ZB-H2's structure: device n warms up with ``2(N-n) - 1`` forwards
+    (double 1F1B's depth) and the downstream devices end in a run of
+    banked W ops that fills the drain."""
+    M, N = 12, 4
+    plan = SP.build_schedule("zb-h2", M, N, 1)
+    for n, ops in enumerate(plan.device_ops):
+        kinds = [o.kind for o in ops]
+        assert kinds.index("B") == 2 * (N - n) - 1, (n, kinds)
+    # the last device banks the deepest W backlog: a strictly longer
+    # trailing all-W run than device 0's
+    ws = [0] * N
+    for n in range(N):
+        k = [o.kind for o in plan.device_ops[n]]
+        t = 0
+        while k and k[-1] == "W":
+            k.pop(); t += 1
+        ws[n] = t
+    assert ws[N - 1] > ws[0], ws
+
+
+def test_build_schedule_mem_limit_only_for_zb_auto():
+    """The mem_limit knob belongs to the automatic scheduler alone."""
+    with pytest.raises(ValueError, match="mem_limit"):
+        SP.build_schedule("zb-h1", 4, 2, 1, mem_limit=3)
+    plan = SP.build_schedule("zb-auto", 4, 2, 1, mem_limit=2)
+    assert max(plan.peak_live()) <= 2

@@ -87,7 +87,8 @@ def test_bandwidth_demand_ordering():
 
 def test_hardware_gating():
     assert S.schedules_for(True) == ("1F1B-AS", "FBP-AS", "DAPPLE", "ZB-H1",
-                                     "1F1B-I", "1F1B-I-ML")
+                                     "ZB-H2", "ZB-AUTO", "1F1B-I",
+                                     "1F1B-I-ML")
     assert S.schedules_for(False) == ("1F1B-SNO", "1F1B-SO")
 
 

@@ -160,6 +160,114 @@ def test_dapple_and_zb_h1_match_closed_forms(M, N, V, F, B, SR):
         assert zb.minibatch_time == pytest.approx(base.minibatch_time)
 
 
+ZB_GRID = []
+for _ in range(60):
+    N = RNG.randint(1, 6)
+    ZB_GRID.append((RNG.randint(N, 28), N,
+                    round(RNG.uniform(0.1, 5.0), 3),      # F
+                    round(RNG.uniform(0.1, 5.0), 3),      # B (input-grad)
+                    round(RNG.uniform(0.1, 5.0), 3),      # W (weight-grad)
+                    RNG.choice([0, N, N + 1, 2 * N, 2 * N + 3])))
+
+
+@pytest.mark.parametrize("M,N,F,Bc,Wc,mem_limit", ZB_GRID)
+def test_zb_auto_differential_sweep(M, N, F, Bc, Wc, mem_limit):
+    """Satellite acceptance sweep over (M, N, F, B, W, mem_limit): the
+    automatic zero-bubble scheduler's replayed makespan obeys
+    ``zb-auto <= zb-h1 <= 1f1b`` (the portfolio step makes the first
+    inequality structural for any cap admitting the 1F1B window, drawn
+    here), and its peak-live row never exceeds its cap."""
+    from repro.core import schedplan as SP
+    cap = mem_limit or None
+    plan = SP.build_zb_auto(M, N, costs=(F, Bc, Wc), mem_limit=cap)
+    B_full = Bc + Wc
+    wf = Wc / B_full
+    auto = simulate(plan, M, N, F, B_full, 0.0, w_frac=wf).makespan
+    h1 = simulate("zb-h1", M, N, F, B_full, 0.0, w_frac=wf).makespan
+    fb = simulate("1f1b", M, N, F, B_full, 0.0).makespan
+    assert auto <= h1 + 1e-9 <= fb + 2e-9, (auto, h1, fb)
+    caps = [max(1, min(M, mem_limit))] * N if mem_limit else [M] * N
+    assert all(p <= c for p, c in zip(plan.peak_live(), caps)), \
+        (plan.peak_live(), caps)
+
+
+@pytest.mark.parametrize("M,N,F,Bc,Wc,mem_limit", ZB_GRID)
+def test_zb_h2_closed_form_and_bounds(M, N, F, Bc, Wc, mem_limit):
+    """Tentpole pin: ``eval_zb_h2``'s makespan ``M(F+B) + (N-1)F`` is
+    differentially EXACT against the op-table replay at the even-split
+    design point ``B == 2F`` (for M >= 2N - 1, the regime where the
+    static table's W weave fills every drain gap), and a strict lower
+    bound — the work-and-fill floor — at arbitrary (F, B)."""
+    # design point: B = 2F, i.e. b = w = F — the closed form is exact
+    M2 = max(M, 2 * N - 1)
+    ev = S.eval_zb_h2(M2, N, F, 2 * F, 0.0, 1.0, 1.0)
+    sim = simulate("zb-h2", M2, N, F, 2 * F, 0.0)
+    assert sim.makespan == pytest.approx(ev.minibatch_time, rel=1e-9)
+    assert ev.minibatch_time == pytest.approx(
+        M2 * 3 * F + (N - 1) * F, rel=1e-9)
+    # the last device (the makespan carrier) is internally idle-free:
+    # all remaining idle is the unavoidable (N-1)F fill ramp
+    assert sim.internal_idle[N - 1] == pytest.approx(0.0, abs=1e-9)
+    # arbitrary costs: the eval reports the achievable replay, which the
+    # work-and-fill floor M(F+B) + (N-1)F bounds from below
+    B_full = Bc + Wc
+    ev = S.eval_zb_h2(M, N, F, B_full, 0.0, 1.0, 1.0)
+    sim = simulate("zb-h2", M, N, F, B_full, 0.0)
+    assert ev.minibatch_time == pytest.approx(sim.makespan, rel=1e-9)
+    assert M * (F + B_full) + (N - 1) * F <= ev.minibatch_time + 1e-9
+    # and ZB-H2's features row is the IR's peak-live replay exactly
+    from repro.core import schedplan as SP
+    assert list(ev.features_memory) == \
+        [float(c) for c in SP.build_zb_h2(M, N).peak_live()]
+
+
+@pytest.mark.parametrize("M,N,F,Bc,Wc,mem_limit", ZB_GRID)
+def test_zb_auto_unbounded_is_bubble_free(M, N, F, Bc, Wc, mem_limit):
+    """Acceptance: with an unbounded mem cap the automatic scheduler's
+    steady state is bubble-free for M >= 2N — the simulator reports ZERO
+    idle inside every device's active window (the only idle left is the
+    fill/drain ramp), and the makespan is exactly the work-and-fill
+    floor M(F+B) + (N-1)F — at the even-split design point."""
+    M = max(M, 2 * N)
+    sim = simulate("zb-auto", M, N, F, 2 * F, 0.0)
+    assert max(sim.internal_idle) == pytest.approx(0.0, abs=1e-9)
+    assert sim.makespan == pytest.approx(M * 3 * F + (N - 1) * F, rel=1e-9)
+    # eval_zb_auto reports exactly this replayed makespan + peak rows
+    ev = S.eval_zb_auto(M, N, F, 2 * F, 0.0, 1.0, 1.0)
+    assert ev.minibatch_time == pytest.approx(sim.makespan, rel=1e-9)
+    assert list(ev.features_memory) == [float(p) for p in sim.peak_live]
+
+
+@pytest.mark.parametrize("M,N,F,Bc,Wc,mem_limit", ZB_GRID)
+def test_w_plan_peak_memory_comes_from_the_ir(M, N, F, Bc, Wc, mem_limit):
+    """Satellite fix pin: for W-bearing plans the simulator's per-device
+    peak memory IS the IR's ``peak_live()`` symbolic replay (single
+    source of truth with the closed forms and the runtime's residual
+    stash), under every comm model."""
+    from repro.core import schedplan as SP
+    for name in ("zb-h1", "zb-h2", "zb-auto"):
+        plan = SP.build_schedule(name, M, N, 1)
+        for comm in ("free", "latency", "blocking"):
+            sim = simulate(name, M, N, F, Bc + Wc, 0.05, comm=comm)
+            assert sim.peak_live == plan.peak_live(), (name, comm)
+
+
+def test_zb_family_closed_form_ladder():
+    """At the design point the family's makespans tier exactly:
+    zb-auto == zb-h2 == M(F+B)+(N-1)F < zb-h1 < dapple == 1f1b,
+    with gaps (N-1)B/2 each."""
+    M, N, F = 12, 4, 1.0
+    B = 2 * F
+    auto = S.eval_zb_auto(M, N, F, B, 0.0, 1.0, 1.0).minibatch_time
+    h2 = S.eval_zb_h2(M, N, F, B, 0.0, 1.0, 1.0).minibatch_time
+    h1 = S.eval_zb_h1(M, N, F, B, 0.0, 1.0, 1.0).minibatch_time
+    fb = S.eval_1f1b_as(M, N, F, B, 0.0, 1.0, 1.0).minibatch_time
+    assert auto == pytest.approx(h2, rel=1e-12)
+    assert h2 == pytest.approx(M * (F + B) + (N - 1) * F, rel=1e-12)
+    assert h1 - h2 == pytest.approx((N - 1) * B / 2, rel=1e-9)
+    assert fb - h1 == pytest.approx((N - 1) * B / 2, rel=1e-9)
+
+
 def test_interleaved_requires_streaming_microbatches():
     """M < N cannot stream chunk passes through the ring: explicit error,
     not a deadlock."""
