@@ -99,6 +99,11 @@ class ArchConfig:
                                      # micro-batch residuals per device);
                                      # 0 = unbounded (fully bubble-free)
     fsdp: bool = False               # shard stage weights over "data" axis too
+    profile_w_frac: str = "analytic" # backward B/W split source for the
+                                     # profiler: "analytic" (weight-matmul
+                                     # flop share) | "measured" (real vjp
+                                     # timings of one representative layer,
+                                     # falling back to analytic)
 
     # ----------------------------------------------------------------------
     @property

@@ -15,11 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 from repro.configs.base import ArchConfig
 from repro.core.explorer import explore
-from repro.core.hardware import DeviceSpec, TPU_V5E, homogeneous_cluster
+from repro.core.hardware import (DeviceSpec, TPU_V5E, heterogeneous_cluster,
+                                 homogeneous_cluster)
 from repro.core.profiler import profile_arch
 
 
@@ -76,19 +77,33 @@ def _valid_factorisations(cfg: ArchConfig, model_axis: int):
 def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
               model_axis: int = 16, data_axis: int = 16,
               device: DeviceSpec = TPU_V5E,
+              devices: Optional[Sequence[DeviceSpec]] = None,
               max_microbatches: Optional[int] = None,
               mem_limit: Optional[int] = None) -> AutoPlan:
     """Pick (stages, tensor, M, schedule) minimising the predicted
     mini-batch time subject to per-chip memory.  ``mem_limit`` caps the
     ZB-AUTO candidate's peak-live row (and is carried into the runtime
-    config when that schedule wins)."""
+    config when that schedule wins).
+
+    ``devices`` plans a *heterogeneous* pod: an explicit per-stage
+    device list (paper §V's mixed-FPGA clusters) that fixes the stage
+    count to ``len(devices)`` — only tensor sizes with
+    ``s == len(devices)`` are searched, and the explorer ranks the
+    candidates by the scheduled heterogeneous makespan of the
+    per-device cost vector (uneven layer split + cost-shaped zb-auto
+    tables)."""
     prof = profile_arch(cfg, seq=seq_len)
     # per-stage workload unit = tokens per data shard
     local_batch_tokens = max(1, global_batch // data_axis) * seq_len
     best: Optional[AutoPlan] = None
     for s, t in _valid_factorisations(cfg, model_axis):
-        dev = _stage_device(device, t)
-        cluster = homogeneous_cluster(dev, s)
+        if devices is not None:
+            if s != len(devices):
+                continue
+            cluster = heterogeneous_cluster(
+                [_stage_device(d, t) for d in devices])
+        else:
+            cluster = homogeneous_cluster(_stage_device(device, t), s)
         b_loc = max(1, global_batch // data_axis)
         ms = [m for m in (1, 2, 4, 8, 16, 32) if m <= b_loc and b_loc % m == 0]
         if max_microbatches:

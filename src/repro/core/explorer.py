@@ -16,10 +16,11 @@ from repro.core.partition import (PartitionPlan, comm_bound, coarse_partition,
                                   intra_layer_refine, memory_fine_tune,
                                   stage_memory)
 from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
-from repro.core.schedules import (SCHEDULES, ScheduleEval,
+from repro.core.schedules import (HETERO_SCHEDULES, SCHEDULES, ScheduleEval,
                                   eval_1f1b_interleaved,
                                   eval_1f1b_interleaved_memlean,
-                                  eval_zb_auto, schedules_for)
+                                  eval_zb_auto, eval_zb_auto_hetero,
+                                  schedules_for)
 
 FEAT_MULT = {"1F1B-AS": 1, "FBP-AS": 2, "1F1B-SNO": 1, "1F1B-SO": 2,
              "1F1B-I": 1, "1F1B-I-ML": 1, "DAPPLE": 1, "ZB-H1": 1,
@@ -100,8 +101,26 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
             candidate_Ms: Optional[Sequence[int]] = None,
             consider_dp: bool = True,
             candidate_Vs: Sequence[int] = (2, 4),
-            mem_limit: Optional[int] = None) -> ExplorationResult:
+            mem_limit: Optional[int] = None,
+            hetero: bool = True) -> ExplorationResult:
     """Run the full BaPipe exploration and return the chosen plan.
+
+    With ``hetero`` (the default) the V=1 async candidates are ranked by
+    the *scheduled heterogeneous makespan*: the partition's per-device
+    cost vector (``PartitionPlan.cost_vector()`` — per-device F and the
+    profiled B/W backward split) feeds the ``eval_*_hetero`` forms,
+    which replay the schedule's op table under per-device durations
+    instead of collapsing ``plan.stage_costs`` to bottleneck scalars;
+    the ``ZB-AUTO`` entry's table is *shaped* by the vector (and
+    structurally never worse than the table the scalar collapse would
+    build).  Uniform vectors reduce bit-exactly to the scalar forms.
+    The vector also carries per-hop SR_n from each boundary's actual
+    link bandwidth; the ranking itself keeps the async free-comm
+    premise (as every Table-1 form does), while the SR-aware path —
+    ``build_zb_auto(costs=StageCosts)`` + ``simulate_costs`` — consumes
+    the hops directly.  ``hetero=False`` keeps the legacy scalar
+    collapse — the uniform-cost baseline the differential tests and the
+    skewed-cluster benchmark compare against.
 
     ``candidate_Vs`` are the interleave depths tried for the interleaved
     schedules (``1F1B-I`` and its memory-lean order ``1F1B-I-ML``; async
@@ -158,6 +177,9 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                     # discard the fractional shifts
                     plan = intra_layer_refine(prof, cluster, plan, mb)
                 F, B = plan.bottleneck_FB()
+                # sync/interleaved scalar forms keep the conservative
+                # worst-hop SR; the hetero path carries the per-hop
+                # SR_n vector inside plan.cost_vector() instead
                 SR = max((max(c.comm_in, c.comm_out)
                           for c in plan.stage_costs), default=0.0)
                 a = plan.max_boundary_act()
@@ -167,6 +189,13 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                                                        V=V)
                 elif V > 1:
                     ev = eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=V)
+                elif hetero and sched in HETERO_SCHEDULES:
+                    costs = plan.cost_vector()
+                    if sched == "ZB-AUTO":
+                        ev = eval_zb_auto_hetero(M, N, costs, a, w,
+                                                 mem_limit=mem_limit)
+                    else:
+                        ev = HETERO_SCHEDULES[sched](M, N, costs, a, w)
                 elif sched == "ZB-AUTO":
                     ev = eval_zb_auto(M, N, F, B, SR, a, w,
                                       mem_limit=mem_limit)

@@ -36,6 +36,9 @@ class StageCost:
     comm_out: float
     weight_bytes: float
     act_out_bytes: float     # per micro-batch boundary activation
+    bwd_w: float = 0.0       # weight-gradient share of bwd (seconds),
+                             # from the layers' profiled w_frac; 0 =>
+                             # unknown, treated as the even split
 
     def compute(self) -> float:
         return self.fwd + self.bwd
@@ -43,6 +46,13 @@ class StageCost:
     def total(self, overlap: bool) -> float:
         c = max(self.comm_in, self.comm_out)
         return max(self.compute(), 2 * c) if overlap else self.compute() + 2 * c
+
+    def bw_split(self) -> tuple[float, float]:
+        """(input-gradient, weight-gradient) split of ``bwd`` — the
+        profiled split when known, else the even split."""
+        if 0.0 < self.bwd_w < self.bwd:
+            return self.bwd - self.bwd_w, self.bwd_w
+        return self.bwd / 2.0, self.bwd / 2.0
 
 
 @dataclasses.dataclass
@@ -84,8 +94,33 @@ class PartitionPlan:
                 comm_in=max(c.comm_in for c in cs),
                 comm_out=max(c.comm_out for c in cs),
                 weight_bytes=sum(c.weight_bytes for c in cs),
-                act_out_bytes=max(c.act_out_bytes for c in cs)))
+                act_out_bytes=max(c.act_out_bytes for c in cs),
+                bwd_w=sum(c.bwd_w for c in cs)))
         return tuple(out)
+
+    def cost_vector(self):
+        """The partition's first-class per-device cost vector
+        (:class:`repro.core.schedplan.StageCosts`): per-device forward
+        time, the profiled input-/weight-gradient backward split, and
+        per-*hop* SR from each boundary's actual link bandwidth — the
+        interface the cost-shaped schedules consume instead of the
+        bottleneck scalar collapse ``(max F, max B, max SR)``."""
+        from repro.core.schedplan import StageCosts
+        cs = self.device_costs()
+        F, B, W = [], [], []
+        for c in cs:
+            b, bw = c.bw_split()
+            F.append(c.fwd)
+            B.append(b)
+            W.append(bw)
+        # degenerate stages (zero-compute profiles) get an epsilon floor
+        # so the vector stays a valid schedule-cost input
+        eps = max(max(F + B + W, default=1.0), 1.0) * 1e-12
+        return StageCosts(
+            F=tuple(max(f, eps) for f in F),
+            B=tuple(max(b, eps) for b in B),
+            W=tuple(max(w, eps) for w in W),
+            SR=tuple(cs[i].comm_out for i in range(len(cs) - 1)))
 
     def balanced_F(self) -> float:
         return max(c.fwd for c in self.device_costs())
@@ -112,15 +147,19 @@ def _range_cost(prof: NetworkProfile, cluster: ClusterSpec, n: int,
     dev = cluster.devices[n]
     fwd = sum(fwd_time(prof.layers[k], dev, mb) for k in range(s, e))
     bwd = sum(bwd_time(prof.layers[k], dev, mb) for k in range(s, e))
+    bwd_w = sum(bwd_time(prof.layers[k], dev, mb) * prof.layers[k].w_frac
+                for k in range(s, e))
     wbytes = sum(prof.layers[k].bytes_weights for k in range(s, e))
     if include_embed_head:
         if n == 0 and prof.embed is not None:
             fwd += fwd_time(prof.embed, dev, mb)
             bwd += bwd_time(prof.embed, dev, mb)
+            bwd_w += bwd_time(prof.embed, dev, mb) * prof.embed.w_frac
             wbytes += prof.embed.bytes_weights
         if n == cluster.n - 1 and prof.head is not None:
             fwd += fwd_time(prof.head, dev, mb)
             bwd += bwd_time(prof.head, dev, mb)
+            bwd_w += bwd_time(prof.head, dev, mb) * prof.head.w_frac
             wbytes += prof.head.bytes_weights
     act_in = prof.layers[s - 1].bytes_act_out * mb if s > 0 else 0.0
     act_out = prof.layers[e - 1].bytes_act_out * mb if e < prof.n_layers else 0.0
@@ -129,7 +168,8 @@ def _range_cost(prof: NetworkProfile, cluster: ClusterSpec, n: int,
     return StageCost(fwd=fwd, bwd=bwd, comm_in=ci, comm_out=co,
                      weight_bytes=wbytes,
                      act_out_bytes=prof.layers[e - 1].bytes_act_out * mb
-                     if e - 1 < prof.n_layers else 0.0)
+                     if e - 1 < prof.n_layers else 0.0,
+                     bwd_w=bwd_w)
 
 
 # ---------------------------------------------------------------------------
@@ -379,10 +419,12 @@ def intra_layer_refine(prof: NetworkProfile, cluster: ClusterSpec,
                    if plan.overlap else t + 2 * max(c.comm_in, c.comm_out)
                    for t, c in zip(times, plan.stage_costs))
     # scale each stage's (fwd, bwd) to the refined compute total so the
-    # schedule evaluator sees post-refinement bottleneck times
+    # schedule evaluator sees post-refinement bottleneck times (the B/W
+    # split scales with the bwd it was profiled from)
     new_costs = tuple(
         dataclasses.replace(c, fwd=c.fwd * (t / c.compute()),
-                            bwd=c.bwd * (t / c.compute()))
+                            bwd=c.bwd * (t / c.compute()),
+                            bwd_w=c.bwd_w * (t / c.compute()))
         if c.compute() > 0 else c
         for t, c in zip(times, plan.stage_costs))
     return dataclasses.replace(plan, frac_shift=tuple(fracs),

@@ -29,10 +29,19 @@ class LayerProfile:
     bytes_weights: float        # parameter bytes
     bytes_act_out: float        # boundary activation bytes per unit
     flops_bwd: float = 0.0      # default: 2x fwd (dL/dx and dL/dw matmuls)
+    # Fraction of the backward spent in the weight-gradient (W) half —
+    # the zero-bubble split the cost-shaped schedules consume.  0.5 is
+    # the pure-weight-matmul point (dL/dx and dL/dw are the same GEMM
+    # transposed); attention/scan work has no dL/dw, so its layers sit
+    # below 0.5.  Analytic by default; :func:`measure_w_frac` measures
+    # it from real vjp timings on a representative layer.
+    w_frac: float = 0.5
 
     def __post_init__(self):
         if self.flops_bwd == 0.0:
             object.__setattr__(self, "flops_bwd", 2.0 * self.flops_fwd)
+        if not 0.0 < self.w_frac < 1.0:
+            raise ValueError(f"w_frac must be in (0, 1), got {self.w_frac}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +85,15 @@ def bwd_time(layer: LayerProfile, dev: DeviceSpec, units: int) -> float:
     return max(compute, memory)
 
 
+def bwd_split_time(layer: LayerProfile, dev: DeviceSpec,
+                   units: int) -> tuple[float, float]:
+    """(input-gradient, weight-gradient) split of :func:`bwd_time` by
+    the layer's ``w_frac`` — the per-layer form of the zero-bubble B/W
+    durations the cost-shaped schedules consume."""
+    t = bwd_time(layer, dev, units)
+    return t * (1.0 - layer.w_frac), t * layer.w_frac
+
+
 def comm_time(act_bytes: float, link_bandwidth: float) -> float:
     return act_bytes / link_bandwidth
 
@@ -84,8 +102,11 @@ def comm_time(act_bytes: float, link_bandwidth: float) -> float:
 # Transformer-family analytic profiles (the 10 assigned architectures).
 # ---------------------------------------------------------------------------
 
-def _attn_flops(cfg: ArchConfig, seq: int, layer_idx: int) -> tuple[float, float]:
-    """(flops_per_token, weight_params) for the attention sub-block."""
+def _attn_flops(cfg: ArchConfig, seq: int,
+                layer_idx: int) -> tuple[float, float, float]:
+    """(flops_per_token, weight_params, weight_matmul_flops) for the
+    attention sub-block — the third element is the projection share
+    (flops with a dL/dw counterpart; the QK^T/PV span work has none)."""
     d = cfg.d_model
     hd = cfg.resolved_head_dim
     nh, nkv = cfg.n_heads, cfg.n_kv_heads
@@ -106,26 +127,27 @@ def _attn_flops(cfg: ArchConfig, seq: int, layer_idx: int) -> tuple[float, float
         w += nh * m.v_head_dim * d
         proj_flops = 2.0 * w
         attn_flops = 2.0 * span * nh * (qk_dim + m.v_head_dim)
-        return proj_flops + attn_flops, w
+        return proj_flops + attn_flops, w, proj_flops
     else:
         w = d * nh * hd + 2 * d * nkv * hd + nh * hd * d
         proj_flops = 2.0 * w
         attn_flops = 2.0 * span * nh * hd * 2     # QK^T and PV
-        return proj_flops + attn_flops, w
+        return proj_flops + attn_flops, w, proj_flops
 
 
-def _ffn_flops(cfg: ArchConfig, layer_idx: int) -> tuple[float, float]:
+def _ffn_flops(cfg: ArchConfig,
+               layer_idx: int) -> tuple[float, float, float]:
     d = cfg.d_model
     if cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense:
         m = cfg.moe
         w_active = (m.n_shared + m.top_k) * 3 * d * m.d_ff_expert + d * m.n_routed
         w_total = (m.n_shared + m.n_routed) * 3 * d * m.d_ff_expert + d * m.n_routed
-        return 2.0 * w_active, w_total
+        return 2.0 * w_active, w_total, 2.0 * w_active
     w = 3 * d * cfg.d_ff
-    return 2.0 * w, w
+    return 2.0 * w, w, 2.0 * w
 
 
-def _ssm_flops(cfg: ArchConfig) -> tuple[float, float]:
+def _ssm_flops(cfg: ArchConfig) -> tuple[float, float, float]:
     d = cfg.d_model
     s = cfg.ssm
     d_inner = s.expand * d
@@ -135,39 +157,62 @@ def _ssm_flops(cfg: ArchConfig) -> tuple[float, float]:
          + d_inner * d)                            # out_proj
     proj = 2.0 * w
     scan = 6.0 * d_inner * s.d_state               # state update + readout
-    return proj + scan, w
+    return proj + scan, w, proj
+
+
+def _analytic_w_frac(flops_fwd: float, flops_wgrad: float) -> float:
+    """Weight-gradient share of the backward from the analytic model:
+    the backward is 2x the forward, of which the dL/dw GEMMs redo
+    exactly the weight-matmul share of the forward (attention/scan work
+    has no weight gradient)."""
+    if flops_fwd <= 0:
+        return 0.5
+    return min(0.95, max(0.05, 0.5 * flops_wgrad / flops_fwd))
 
 
 def profile_arch(cfg: ArchConfig, seq: int = 4096) -> NetworkProfile:
-    """Analytic per-layer profile at sequence length ``seq``."""
+    """Analytic per-layer profile at sequence length ``seq``.
+
+    Each layer carries its B/W backward split (``LayerProfile.w_frac``):
+    analytic by default (weight-matmul share of the layer's flops), or —
+    when ``cfg.profile_w_frac == "measured"`` — measured from real vjp
+    timings of one representative layer (:func:`measure_w_frac`), with
+    the analytic split as the fallback when timing is unavailable."""
     bpp = 2
     d = cfg.d_model
     act_out = float(d * bpp)
+    if cfg.profile_w_frac not in ("analytic", "measured"):
+        raise ValueError(f"profile_w_frac must be 'analytic' or "
+                         f"'measured', got {cfg.profile_w_frac!r}")
+    measured = (measure_w_frac(cfg, seq=min(seq, 128))
+                if cfg.profile_w_frac == "measured" else None)
     layers = []
     for i in range(cfg.n_layers):
-        f, w = 0.0, 0.0
+        f, w, fw = 0.0, 0.0, 0.0
         is_enc = i < cfg.n_enc_layers
         if cfg.family == "ssm":
-            fs, ws = _ssm_flops(cfg)
-            f, w = f + fs, w + ws
+            fs, ws, ps = _ssm_flops(cfg)
+            f, w, fw = f + fs, w + ws, fw + ps
         else:
             if cfg.attn_kind != "none":
-                fa, wa = _attn_flops(cfg, seq, i)
-                f, w = f + fa, w + wa
+                fa, wa, pa = _attn_flops(cfg, seq, i)
+                f, w, fw = f + fa, w + wa, fw + pa
             if cfg.family == "hybrid":
-                fs, ws = _ssm_flops(cfg)
-                f, w = f + fs, w + ws
+                fs, ws, ps = _ssm_flops(cfg)
+                f, w, fw = f + fs, w + ws, fw + ps
             if cfg.n_enc_layers and not is_enc:
                 # decoder cross-attention over encoder frames
-                fa, wa = _attn_flops(cfg, seq, i)
-                f, w = f + fa, w + wa
-        ff, wf = _ffn_flops(cfg, i)
-        f, w = f + ff, w + wf
+                fa, wa, pa = _attn_flops(cfg, seq, i)
+                f, w, fw = f + fa, w + wa, fw + pa
+        ff, wf_, pf = _ffn_flops(cfg, i)
+        f, w, fw = f + ff, w + wf_, fw + pf
         # norms etc: negligible flops, tiny weights
         w += 2 * d
         layers.append(LayerProfile(
             name=f"{cfg.arch_id}.L{i}", flops_fwd=f,
-            bytes_weights=w * bpp, bytes_act_out=act_out))
+            bytes_weights=w * bpp, bytes_act_out=act_out,
+            w_frac=measured if measured is not None
+            else _analytic_w_frac(f, fw)))
     embed = LayerProfile(name="embed", flops_fwd=0.0,
                          bytes_weights=float(cfg.vocab * d * bpp),
                          bytes_act_out=act_out)
@@ -285,3 +330,62 @@ def measure_layer(fn: Callable, *args, iters: int = 5) -> float:
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2]
+
+
+def measure_w_frac(cfg: ArchConfig, seq: int = 128,
+                   iters: int = 5) -> float | None:
+    """Measure the backward's B/W split from real vjp timings on ONE
+    representative layer of ``cfg`` (reduced dims, CPU-runnable): a
+    transformer-block proxy with the config's projection/FFN GEMMs plus
+    a softmax-attention term (work with no weight gradient).  The full
+    vjp computes both cotangents; the input-only vjp (parameters closed
+    over) skips every dL/dw GEMM — the timing excess is the
+    weight-gradient share.
+
+    Returns ``w_frac`` in (0, 1), or ``None`` when timing is
+    unavailable or degenerate (no jax, or noise pushes the ratio out of
+    (0.02, 0.98)) — callers fall back to the analytic split."""
+    try:
+        import jax
+        import jax.numpy as jnp
+    except Exception:
+        return None
+    try:
+        d = max(32, min(cfg.d_model, 256))
+        ff = max(2 * d, min(cfg.d_ff or 4 * d, 4 * d))
+        seq = max(8, min(seq, 256))
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 7)
+        scale = 1.0 / math.sqrt(d)
+        p0 = {"wq": jax.random.normal(ks[0], (d, d)) * scale,
+              "wk": jax.random.normal(ks[1], (d, d)) * scale,
+              "wv": jax.random.normal(ks[2], (d, d)) * scale,
+              "wo": jax.random.normal(ks[3], (d, d)) * scale,
+              "w1": jax.random.normal(ks[4], (d, ff)) * scale,
+              "w2": jax.random.normal(ks[5], (ff, d)) * scale}
+        x = jax.random.normal(ks[6], (seq, d))
+
+        def block(p, x):
+            q, k, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
+            s = jax.nn.softmax(q @ k.T * scale, axis=-1)
+            o = (s @ v) @ p["wo"]
+            return jax.nn.silu(o @ p["w1"]) @ p["w2"]
+
+        ct = jnp.ones((seq, d))
+
+        def vjp_full(p, x, ct):
+            return jax.vjp(block, p, x)[1](ct)
+
+        def vjp_input_only(x, ct):
+            return jax.vjp(lambda xx: block(p0, xx), x)[1](ct)
+
+        t_full = measure_layer(vjp_full, p0, x, ct, iters=iters)
+        t_x = measure_layer(vjp_input_only, x, ct, iters=iters)
+        if t_full <= 0:
+            return None
+        wf = (t_full - t_x) / t_full
+        if not 0.02 < wf < 0.98:
+            return None
+        return wf
+    except Exception:
+        return None

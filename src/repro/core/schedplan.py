@@ -84,7 +84,125 @@ Two derived views:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCosts:
+    """First-class per-device cost vector — the heterogeneous
+    generalisation of the scalar ``(F, B, SR)`` interface (BaPipe's §V
+    FPGA clusters are heterogeneous; collapsing the partitioner's
+    per-stage times into bottleneck scalars before the schedule sees
+    them throws the balance information away).
+
+    ``F[n]`` / ``B[n]`` / ``W[n]`` are device n's forward,
+    input-gradient and weight-gradient times per micro-batch (the full
+    backward is ``B[n] + W[n]``; two-op schedules simply run the full
+    backward, zero-bubble schedules split it).  ``SR[k]`` is the
+    send/receive time of the boundary between devices k and k+1 —
+    per *hop*, from that boundary's actual link bandwidth, not a
+    ``max`` over the chain.
+
+    Consumers: :func:`build_zb_auto` shapes its table by the vector,
+    :func:`repro.core.simulator.simulate` replays any plan under
+    per-device durations, and the ``eval_*_hetero`` closed forms in
+    :mod:`repro.core.schedules` reduce to the uniform forms exactly
+    when :attr:`uniform` holds."""
+    F: tuple[float, ...]
+    B: tuple[float, ...]
+    W: tuple[float, ...]
+    SR: tuple[float, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "F", tuple(float(x) for x in self.F))
+        object.__setattr__(self, "B", tuple(float(x) for x in self.B))
+        object.__setattr__(self, "W", tuple(float(x) for x in self.W))
+        object.__setattr__(self, "SR", tuple(float(x) for x in self.SR))
+        n = len(self.F)
+        if not (len(self.B) == len(self.W) == n):
+            raise ValueError(f"StageCosts vectors disagree on N: "
+                             f"F={len(self.F)} B={len(self.B)} "
+                             f"W={len(self.W)}")
+        if self.SR and len(self.SR) != n - 1:
+            raise ValueError(f"StageCosts.SR needs one entry per hop "
+                             f"({n - 1}), got {len(self.SR)}")
+        if any(x <= 0 for x in self.F + self.B + self.W):
+            raise ValueError(f"StageCosts times must be positive: {self}")
+        if any(x < 0 for x in self.SR):
+            raise ValueError(f"StageCosts.SR must be >= 0: {self.SR}")
+
+    @property
+    def n(self) -> int:
+        return len(self.F)
+
+    @property
+    def B_full(self) -> tuple[float, ...]:
+        """Per-device full backward time (input-grad + weight-grad)."""
+        return tuple(b + w for b, w in zip(self.B, self.W))
+
+    @property
+    def w_frac(self) -> tuple[float, ...]:
+        """Per-device weight-gradient fraction of the full backward."""
+        return tuple(w / (b + w) for b, w in zip(self.B, self.W))
+
+    @property
+    def sr_hops(self) -> tuple[float, ...]:
+        """Per-hop SR, materialised (zeros when unspecified)."""
+        return self.SR if self.SR else (0.0,) * max(0, self.n - 1)
+
+    @property
+    def uniform(self) -> bool:
+        """All devices share one (F, B, W) and all hops one SR — the
+        regime where every hetero form must reduce to the uniform one."""
+        return (len(set(self.F)) == 1 and len(set(self.B)) == 1
+                and len(set(self.W)) == 1 and len(set(self.sr_hops)) <= 1)
+
+    @property
+    def even_split(self) -> bool:
+        """Every device's backward splits evenly (B == W) — the design
+        point the uniform zero-bubble closed forms assume."""
+        return all(b == w for b, w in zip(self.B, self.W))
+
+    def bottleneck(self) -> tuple[float, float, float]:
+        """The legacy scalar collapse ``(max F, max B_full, max SR)`` —
+        what the explorer fed the schedule formulas before costs were
+        first-class.  Kept for the uniform-scalar portfolio/baselines."""
+        return (max(self.F), max(self.B_full),
+                max(self.sr_hops, default=0.0))
+
+    def max_scalar(self) -> "StageCosts":
+        """Uniform collapse: every device pays the bottleneck device's
+        times (and every hop the worst hop) — the cost vector the old
+        scalar interface implied."""
+        return StageCosts(F=(max(self.F),) * self.n,
+                          B=(max(self.B),) * self.n,
+                          W=(max(self.W),) * self.n,
+                          SR=(max(self.sr_hops, default=0.0),)
+                          * max(0, self.n - 1))
+
+    @classmethod
+    def uniform_costs(cls, N: int, F: float, B_full: float,
+                      SR: float = 0.0, w_frac: float = 0.5
+                      ) -> "StageCosts":
+        """Lift the scalar interface into a (trivially uniform) vector."""
+        return cls(F=(float(F),) * N,
+                   B=(B_full * (1.0 - w_frac),) * N,
+                   W=(B_full * w_frac,) * N,
+                   SR=(float(SR),) * max(0, N - 1))
+
+
+CostVec = Union[float, Sequence[float]]
+
+
+def _cost_vec(x: CostVec, N: int, what: str) -> list[float]:
+    """Normalise a scalar-or-sequence cost knob to a length-N list."""
+    if isinstance(x, (int, float)):
+        return [float(x)] * N
+    xs = [float(v) for v in x]
+    if len(xs) != N:
+        raise ValueError(f"{what} needs one entry per device ({N}), "
+                         f"got {len(xs)}")
+    return xs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -340,17 +458,24 @@ def _normalize_caps(mem_limit, M: int, N: int) -> list[int]:
     return [max(1, min(M, c)) for c in caps]
 
 
-def _replay_makespan(plan: SchedPlan, F_c: float, B_c: float,
-                     W_c: float) -> float:
-    """Free-comm makespan of a fixed op table at per-op costs
+def _replay_makespan(plan: SchedPlan, F_cs: Sequence[float],
+                     B_cs: Sequence[float], W_cs: Sequence[float],
+                     sr: Optional[Sequence[float]] = None) -> float:
+    """Makespan of a fixed op table at per-device per-op costs
     (F, input-grad B, weight-grad W) — the discrete-event simulator's
-    replay, with the full backward re-expressed as its ``w_frac``
-    split.  Imported lazily: the simulator imports this module at load
-    time, but only calls back in here at run time."""
+    replay, with the full backward re-expressed as its per-device
+    ``w_frac`` split and per-hop SR under the latency model (free comm
+    when every hop is zero).  Imported lazily: the simulator imports
+    this module at load time, but only calls back in here at run
+    time."""
     from repro.core.simulator import simulate
-    B_full = B_c + W_c
-    return simulate(plan, plan.M, plan.N, F_c, B_full, 0.0,
-                    w_frac=W_c / B_full).makespan
+    B_full = [b + w for b, w in zip(B_cs, W_cs)]
+    wf = [w / bf for w, bf in zip(W_cs, B_full)]
+    if sr is not None and any(s > 0 for s in sr):
+        return simulate(plan, plan.M, plan.N, list(F_cs), B_full,
+                        list(sr), w_frac=wf, comm="latency").makespan
+    return simulate(plan, plan.M, plan.N, list(F_cs), B_full, 0.0,
+                    w_frac=wf).makespan
 
 
 def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
@@ -376,10 +501,17 @@ def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
 
     ``costs`` is ``(F, B, W)`` — forward, input-gradient and
     weight-gradient durations (the closed forms' even split is
-    ``B = W =`` half the full backward).  ``mem_limit`` is the peak-live
-    cap: ``None``/``0`` (unbounded: peak climbs to M while every bubble
-    after the fill ramp vanishes), an int (uniform), or a length-N
-    sequence.
+    ``B = W =`` half the full backward) — where each entry may be a
+    scalar (uniform devices, today's interface) or a length-N sequence
+    (heterogeneous devices), or a :class:`StageCosts` vector, whose
+    per-hop ``SR`` then also delays cross-device arrivals (latency
+    model), so the emitted table is genuinely *cost-shaped*: the greedy
+    sees each device's real F/B/W and each boundary's real transfer
+    time when it decides what fits before the next backward.  Uniform
+    vectors reproduce the scalar interface's tables exactly (pinned).
+    ``mem_limit`` is the peak-live cap: ``None``/``0`` (unbounded: peak
+    climbs to M while every bubble after the fill ramp vanishes), an
+    int (uniform), or a length-N sequence.
     The cap reproduces the hand-written tables as special cases — the
     1F1B window ``N - n`` yields exactly :func:`build_zb_h1`'s table, and
     :func:`zb_h2_mem_caps` yields ZB-H2 (:func:`build_zb_h2`) — pinned in
@@ -392,10 +524,27 @@ def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
     the special-case reproductions above are exact table equalities).
     That makes ``zb-auto <= zb-h1`` *structural* for any cap that admits
     the 1F1B window — the property the randomized differential sweep in
-    ``tests/test_simulator_vs_closed_form.py`` pins."""
-    F_c, B_c, W_c = (float(c) for c in costs)
-    if F_c <= 0 or B_c <= 0 or W_c <= 0:
+    ``tests/test_simulator_vs_closed_form.py`` pins.  For heterogeneous
+    vectors a second portfolio member is the table the *scalar collapse*
+    ``(max F, max B, max W)`` would have built, replayed at the true
+    vector costs — so ``zb-auto(vector) <= zb-auto(max-scalar)`` is
+    structural too (the cost-shaped table can only win)."""
+    if isinstance(costs, StageCosts):
+        if costs.n != N:
+            raise ValueError(f"costs are for {costs.n} devices, "
+                             f"build_zb_auto was asked for N={N}")
+        F_cs, B_cs, W_cs = list(costs.F), list(costs.B), list(costs.W)
+        sr = list(costs.sr_hops)
+    else:
+        F_c, B_c, W_c = costs
+        F_cs = _cost_vec(F_c, N, "zb-auto F costs")
+        B_cs = _cost_vec(B_c, N, "zb-auto B costs")
+        W_cs = _cost_vec(W_c, N, "zb-auto W costs")
+        sr = [0.0] * max(0, N - 1)
+    if any(c <= 0 for c in F_cs + B_cs + W_cs):
         raise ValueError(f"zb-auto op costs must be positive, got {costs}")
+    hetero = (len(set(F_cs)) > 1 or len(set(B_cs)) > 1
+              or len(set(W_cs)) > 1)
     caps = _normalize_caps(mem_limit, M, N)
     f_done = [[None] * N for _ in range(M)]
     b_done = [[None] * N for _ in range(M)]
@@ -414,7 +563,12 @@ def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
             t_b = None              # known start of the next backward
             m = nb[n]
             if m < M and f_done[m][n] is not None:
-                arr = f_done[m][n] if n == N - 1 else b_done[m][n + 1]
+                if n == N - 1:
+                    arr = f_done[m][n]
+                else:
+                    arr = b_done[m][n + 1]
+                    if arr is not None:
+                        arr += sr[n]
                 if arr is not None:
                     t_b = max(dev_free[n], arr)
                     cands.append((t_b, 0, "B"))
@@ -422,8 +576,10 @@ def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
             if m < M and live[n] < caps[n]:
                 arr = 0.0 if n == 0 else f_done[m][n - 1]
                 if arr is not None:
+                    if n > 0:
+                        arr += sr[n - 1]
                     s = max(dev_free[n], arr)
-                    if t_b is None or s + F_c <= t_b + eps:
+                    if t_b is None or s + F_cs[n] <= t_b + eps:
                         cands.append((s, 1, "F"))
             if nw[n] < nb[n]:
                 s = dev_free[n]
@@ -431,7 +587,7 @@ def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
                 # W then gates the next F admission (it releases the
                 # residual slot), so it is on the forward-supply critical
                 # path, not filler
-                if (t_b is None or s + W_c <= t_b + eps
+                if (t_b is None or s + W_cs[n] <= t_b + eps
                         or (nf[n] < M and live[n] >= caps[n])):
                     cands.append((s, 2, "W"))
             if cands:
@@ -442,18 +598,18 @@ def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
         s, _, n, kind = best
         if kind == "F":
             m = nf[n]
-            end = s + F_c
+            end = s + F_cs[n]
             f_done[m][n] = end
             nf[n] += 1
             live[n] += 1
         elif kind == "B":
             m = nb[n]
-            end = s + B_c
+            end = s + B_cs[n]
             b_done[m][n] = end
             nb[n] += 1
         else:
             m = nw[n]
-            end = s + W_c
+            end = s + W_cs[n]
             nw[n] += 1
             live[n] -= 1
         dev_free[n] = end
@@ -466,8 +622,19 @@ def build_zb_auto(M: int, N: int, costs=(1.0, 1.0, 1.0),
     # reproductions keep the greedy's table)
     h1 = build_zb_h1(M, N)
     if all(p <= c for p, c in zip(h1.peak_live(), caps)):
-        if _replay_makespan(h1, F_c, B_c, W_c) < makespan - 1e-12:
+        h1_ms = _replay_makespan(h1, F_cs, B_cs, W_cs, sr)
+        if h1_ms < makespan - 1e-12:
             plan = dataclasses.replace(h1, name=name)
+            makespan = h1_ms
+    # heterogeneous portfolio step: the table the legacy scalar collapse
+    # (max F, max B, max W) would have built, replayed at the TRUE vector
+    # costs — makes zb-auto(vector) <= zb-auto(max-scalar) structural
+    # (again strict, so uniform vectors keep the greedy's table)
+    if hetero:
+        scal = build_zb_auto(M, N, costs=(max(F_cs), max(B_cs), max(W_cs)),
+                             mem_limit=mem_limit)
+        if _replay_makespan(scal, F_cs, B_cs, W_cs, sr) < makespan - 1e-12:
+            plan = dataclasses.replace(scal, name=name)
     return plan
 
 

@@ -67,7 +67,10 @@ i = stage index 1..N.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+
+from repro.core.schedplan import StageCosts
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +221,197 @@ def eval_zb_auto(M: int, N: int, F: float, B: float, SR: float,
         bubble_fraction=1.0 - M * (F + B) / t if t else 0.0,
         features_memory=feats, weights_memory=2 * w,
         bandwidth_demand=(a / F) if F > 0 else float("inf"))
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-device cost forms (the StageCosts vector interface).
+#
+# BaPipe's §V clusters are heterogeneous; the scalar forms above see only
+# the bottleneck device.  Each ``eval_*_hetero`` takes the full
+# :class:`~repro.core.schedplan.StageCosts` vector and reports the
+# *scheduled* makespan — the discrete-event replay of the schedule's op
+# table under per-device durations, free comm (the same async-overlap
+# premise as the uniform Table-1 forms; per-hop SR is carried for the
+# SR-aware builder/simulator path).  A uniform vector delegates to the
+# scalar closed form, so the reduction is bit-exact; elsewhere the
+# analytic generalisation :func:`hetero_makespan_floor` brackets the
+# replay from below (exact again at each form's design point), the same
+# premise-plus-bracket contract as the 1F1B-I latency form.
+# ---------------------------------------------------------------------------
+
+def hetero_makespan_floor(M: int, costs: StageCosts,
+                          drain: str = "full") -> float:
+    """Generalised bottleneck lower bound for a heterogeneous chain —
+    every path is forced by device serialisation plus chain
+    dependencies, so each variant bounds its schedule's replay from
+    below at ANY cost vector and recovers the uniform closed form
+    exactly at its design point.
+
+    * ``"none"``  — work-and-fill, valid for every V=1 schedule:
+      ``max_n [ sum_{k<n} F_k + M (F_n + B_n + W_n) ]`` (micro-batch 0
+      cannot reach device n before the upstream forwards run once, and
+      the device serialises all its own work).  Uniform:
+      ``M(F+B) + (N-1)F`` — the ZB-H2 / unbounded-zb-auto form.
+    * ``"full"``  — two-op schedules (1F1B/DAPPLE): after device n's
+      last backward the error recrosses the upstream devices at the
+      FULL backward per hop:
+      ``max_n [ sum_{k<n} F_k + M (F_n + B_n + W_n) + sum_{k<n} (B_k
+      + W_k) ]``.  Uniform: ``(M+N-1)(F+B)``.
+    * ``"input"`` — the ZB-H1 drain shape: device n's last
+      input-gradient comes after M forwards, M input-gradients and
+      M-1 interleaved weight-gradients; the error then recrosses
+      upstream at the input-gradient half per hop, and stage 0 still
+      owes its final weight-gradient:
+      ``max_n [ sum_{k<n} F_k + M (F_n + B_n) + (M-1) W_n
+      + sum_{k<n} B_k + W_0 ]``.  Uniform even split:
+      ``M(F+B) + (N-1)(F + B/2)``."""
+    if drain not in ("full", "input", "none"):
+        raise ValueError(f"drain must be full|input|none, got {drain!r}")
+    F, W, Bf, Bi = costs.F, costs.W, costs.B_full, costs.B
+    best = 0.0
+    for n in range(costs.n):
+        if drain == "input":
+            t = (sum(F[:n]) + M * (F[n] + Bi[n]) + (M - 1) * W[n]
+                 + sum(Bi[:n]) + W[0])
+        else:
+            t = sum(F[:n]) + M * (F[n] + Bf[n])
+            if drain == "full":
+                t += sum(Bf[:n])
+        best = max(best, t)
+    return best
+
+
+@functools.lru_cache(maxsize=256)
+def _replay_hetero(name: str, M: int, N: int, costs: StageCosts,
+                   mem_limit=None):
+    """(plan, free-comm SimResult) of a builder's table under per-device
+    durations — the scheduled heterogeneous makespan the hetero evals
+    report.  ``zb-auto`` builds the cost-shaped table from the vector
+    (SR stripped: the ranking premise is overlapped comm).  Cached:
+    the explorer evaluates several schedules per candidate partition and
+    DAPPLE shares 1F1B's table, so identical (table, costs) replays
+    recur (StageCosts is frozen, so the key is by value)."""
+    from repro.core import schedplan as SP
+    from repro.core.simulator import simulate
+    if name == "zb-auto":
+        plan = SP.build_zb_auto(
+            M, N, costs=(list(costs.F), list(costs.B), list(costs.W)),
+            mem_limit=mem_limit)
+    else:
+        plan = SP.build_schedule(name, M, N, 1)
+    sim = simulate(plan, M, N, list(costs.F), list(costs.B_full), 0.0,
+                   w_frac=list(costs.w_frac))
+    return plan, sim
+
+
+def _hetero_eval(name: str, M: int, N: int, costs: StageCosts,
+                 a: float, w: float, sim, feats) -> ScheduleEval:
+    work = max(f + b for f, b in zip(costs.F, costs.B_full))
+    t = sim.makespan
+    return ScheduleEval(
+        name=name, minibatch_time=t,
+        bubble_fraction=1.0 - M * work / t if t else 0.0,
+        features_memory=feats, weights_memory=2 * w,
+        bandwidth_demand=(a / min(costs.F)) if min(costs.F) > 0
+        else float("inf"))
+
+
+def eval_1f1b_as_hetero(M: int, N: int, costs: StageCosts,
+                        a: float, w: float) -> ScheduleEval:
+    """1F1B-AS under a per-device cost vector: the replayed op-table
+    makespan (>= :func:`hetero_makespan_floor` with the full-backward
+    drain; equal to it for uniform vectors, where this delegates)."""
+    if costs.uniform:
+        return eval_1f1b_as(M, N, costs.F[0], costs.B_full[0],
+                            max(costs.sr_hops, default=0.0), a, w)
+    _, sim = _replay_hetero("1f1b", M, N, costs)
+    return _hetero_eval("1F1B-AS", M, N, costs, a, w, sim, _feat(1, N, a))
+
+
+def eval_fbp_as_hetero(M: int, N: int, costs: StageCosts,
+                       a: float, w: float) -> ScheduleEval:
+    """FBP-AS (doubled warm-up) under a per-device cost vector: same
+    replayed makespan story as 1F1B-AS at the 2x features row and the
+    gentler ``2a/(F+B)`` bandwidth demand."""
+    if costs.uniform:
+        return eval_fbp_as(M, N, costs.F[0], costs.B_full[0],
+                           max(costs.sr_hops, default=0.0), a, w)
+    _, sim = _replay_hetero("1f1b-2x", M, N, costs)
+    ev = _hetero_eval("FBP-AS", M, N, costs, a, w, sim, _feat(2, N, a))
+    fb = min(f + b for f, b in zip(costs.F, costs.B_full))
+    return dataclasses.replace(
+        ev, bandwidth_demand=(2 * a / fb) if fb > 0 else float("inf"))
+
+
+def eval_dapple_hetero(M: int, N: int, costs: StageCosts,
+                       a: float, w: float) -> ScheduleEval:
+    """DAPPLE == synchronous 1F1B (derived, as in the scalar forms)."""
+    return dataclasses.replace(eval_1f1b_as_hetero(M, N, costs, a, w),
+                               name="DAPPLE")
+
+
+def eval_zb_h1_hetero(M: int, N: int, costs: StageCosts,
+                      a: float, w: float) -> ScheduleEval:
+    """Zero-bubble H1 under a per-device cost vector: the split-backward
+    table replayed at each device's own (F, B, W) — errors cross hop k
+    after only ``B_k`` (not ``B_k + W_k``) of work.  Uniform even-split
+    vectors delegate to the exact ``M(F+B) + (N-1)(F + B/2)`` form."""
+    if costs.uniform and costs.even_split:
+        return eval_zb_h1(M, N, costs.F[0], costs.B_full[0],
+                          max(costs.sr_hops, default=0.0), a, w)
+    _, sim = _replay_hetero("zb-h1", M, N, costs)
+    return _hetero_eval("ZB-H1", M, N, costs, a, w, sim, _feat(1, N, a))
+
+
+def eval_zb_h2_hetero(M: int, N: int, costs: StageCosts,
+                      a: float, w: float) -> ScheduleEval:
+    """Zero-bubble H2 under a per-device cost vector: the hand-crafted
+    bubble-free table replayed at per-device durations, bracketed below
+    by the work-and-fill floor (``drain="none"``); uniform even-split
+    vectors delegate to :func:`eval_zb_h2`."""
+    if costs.uniform and costs.even_split:
+        return eval_zb_h2(M, N, costs.F[0], costs.B_full[0],
+                          max(costs.sr_hops, default=0.0), a, w)
+    from repro.core.schedplan import live_activation_counts
+    _, sim = _replay_hetero("zb-h2", M, N, costs)
+    feats = tuple(float(c) * a
+                  for c in live_activation_counts("ZB-H2", M, N))
+    return _hetero_eval("ZB-H2", M, N, costs, a, w, sim, feats)
+
+
+def eval_zb_auto_hetero(M: int, N: int, costs: StageCosts,
+                        a: float, w: float,
+                        mem_limit=None) -> ScheduleEval:
+    """The automatic zero-bubble scheduler fed the *vector*: the greedy
+    shapes its F/B/W table by each device's measured costs (and the
+    builder's scalar-collapse portfolio guarantees the result is never
+    worse than the table the old ``max``-collapsed interface would have
+    produced, replayed at the true costs).  Reports the scheduled
+    makespan plus the emitted table's peak-live row.  Uniform vectors
+    delegate to :func:`eval_zb_auto` (any per-device ``w_frac``)."""
+    if costs.uniform:
+        return eval_zb_auto(M, N, costs.F[0], costs.B_full[0],
+                            max(costs.sr_hops, default=0.0), a, w,
+                            mem_limit=mem_limit, w_frac=costs.w_frac[0])
+    if mem_limit is not None and not isinstance(mem_limit, (int, float)):
+        mem_limit = tuple(mem_limit)     # hashable for the replay cache
+    plan, sim = _replay_hetero("zb-auto", M, N, costs,
+                               mem_limit=mem_limit)
+    feats = tuple(float(c) * a for c in plan.peak_live())
+    return _hetero_eval("ZB-AUTO", M, N, costs, a, w, sim, feats)
+
+
+#: V == 1 schedules with a heterogeneous vector form (the explorer feeds
+#: these the partition's per-device StageCosts instead of the bottleneck
+#: collapse; ZB-AUTO additionally takes ``mem_limit``).
+HETERO_SCHEDULES = {
+    "1F1B-AS": eval_1f1b_as_hetero,
+    "FBP-AS": eval_fbp_as_hetero,
+    "DAPPLE": eval_dapple_hetero,
+    "ZB-H1": eval_zb_h1_hetero,
+    "ZB-H2": eval_zb_h2_hetero,
+    "ZB-AUTO": eval_zb_auto_hetero,
+}
 
 
 def eval_1f1b_interleaved(M: int, N: int, F: float, B: float, SR: float,

@@ -107,8 +107,9 @@ _DEFAULT_COMM = {
 
 def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
              F: float | Sequence[float], B: float | Sequence[float],
-             SR: float = 0.0, V: int = 1,
-             comm: str | None = None, w_frac: float = 0.5) -> SimResult:
+             SR: float | Sequence[float] = 0.0, V: int = 1,
+             comm: str | None = None,
+             w_frac: float | Sequence[float] = 0.5) -> SimResult:
     """Simulate one mini-batch of M micro-batches through N devices.
 
     ``schedule`` is a schedule name (the op table is built via
@@ -120,6 +121,12 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
     ``comm`` overrides the schedule's default communication model (used
     by the differential tests to bracket the closed forms).
 
+    Every duration knob takes a scalar or a vector: ``F``/``B`` per
+    device (length N), ``SR`` per *hop* — length ``N*V - 1``, one entry
+    per virtual-stage boundary (for V == 1 that is one entry per
+    physical link, the heterogeneous-transceiver case hardware.py
+    models) — and ``w_frac`` per device (length N).
+
     For zero-bubble plans (``zb-h1``/``zb-h2``/``zb-auto``) the ``B``
     argument is the FULL per-micro-batch backward time of a device;
     ``w_frac`` is the fraction of it spent in the weight-gradient ``W``
@@ -129,8 +136,21 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
     Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
     Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
     assert len(Fs) == len(Bs) == N
-    if not 0.0 < w_frac < 1.0:
+    wfs = (list(w_frac) if not isinstance(w_frac, (int, float))
+           else [float(w_frac)] * N)
+    if len(wfs) != N:
+        raise ValueError(f"w_frac needs one entry per device ({N}), "
+                         f"got {len(wfs)}")
+    if not all(0.0 < wf < 1.0 for wf in wfs):
         raise ValueError(f"w_frac must be in (0, 1), got {w_frac}")
+    n_hops = max(0, N * V - 1)
+    SRs = (list(SR) if not isinstance(SR, (int, float))
+           else [float(SR)] * n_hops)
+    if len(SRs) != n_hops:
+        raise ValueError(f"SR needs one entry per virtual-stage hop "
+                         f"({n_hops}), got {len(SRs)}")
+    if any(s < 0 for s in SRs):
+        raise ValueError(f"SR must be >= 0, got {SR}")
 
     if isinstance(schedule, SP.SchedPlan):
         plan = schedule
@@ -152,11 +172,13 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
         raise ValueError(comm)
 
     NS = N * V                                 # virtual stages
-    # zb: B is split into input-grad (B) and weight-grad (W) halves
-    b_frac = (1.0 - w_frac) if has_w else 1.0
+    # zb: B is split into input-grad (B) and weight-grad (W) halves,
+    # per-device fractions
     dur = {"F": [Fs[vs % N] / V for vs in range(NS)],
-           "B": [Bs[vs % N] / V * b_frac for vs in range(NS)],
-           "W": [Bs[vs % N] / V * w_frac for vs in range(NS)]}
+           "B": [Bs[vs % N] / V
+                 * ((1.0 - wfs[vs % N]) if has_w else 1.0)
+                 for vs in range(NS)],
+           "W": [Bs[vs % N] / V * wfs[vs % N] for vs in range(NS)]}
 
     # --- task state ------------------------------------------------------
     f_done = [[-1.0] * NS for _ in range(M)]   # completion time of F[m][vs]
@@ -199,17 +221,18 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
         nonlocal pending_xfer
         for (rdy, m, kind, src, dst) in sorted(pending_xfer):
             sd, dd = src % N, dst % N
+            sr = SRs[min(src, dst)]         # the hop's own link time
             if comm == "free" or sd == dd:
                 (f_ready if kind == "F" else b_ready)[m][dst] = rdy
             elif comm == "latency":
-                (f_ready if kind == "F" else b_ready)[m][dst] = rdy + SR
+                (f_ready if kind == "F" else b_ready)[m][dst] = rdy + sr
             else:                           # blocking: both devices busy SR
                 start = max(rdy, dev_free[sd], dev_free[dd])
-                dev_free[sd] = start + SR
-                dev_free[dd] = start + SR
-                busy[sd] += SR
-                busy[dd] += SR
-                (f_ready if kind == "F" else b_ready)[m][dst] = start + SR
+                dev_free[sd] = start + sr
+                dev_free[dd] = start + sr
+                busy[sd] += sr
+                busy[dd] += sr
+                (f_ready if kind == "F" else b_ready)[m][dst] = start + sr
         pending_xfer = []
 
     # --- main loop: repeatedly start the globally-earliest runnable op ----
@@ -282,3 +305,24 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
     return SimResult(makespan=makespan, peak_live=peak, idle=idle,
                      t_start=[0.0 if s is None else s for s in t_start],
                      t_end=t_end, busy=list(busy))
+
+
+def simulate_costs(schedule: str | SP.SchedPlan, M: int, N: int,
+                   costs: SP.StageCosts,
+                   comm: str | None = None) -> SimResult:
+    """Replay a (V == 1) schedule under a first-class
+    :class:`~repro.core.schedplan.StageCosts` vector: per-device F and
+    full-backward durations, per-device ``w_frac`` split, per-hop SR.
+    The default comm model is ``latency`` when any hop has a nonzero SR
+    (a dedicated comm engine paying each boundary's own transfer time),
+    ``free`` otherwise — matching the cost-shaped ``zb-auto`` builder's
+    arrival model, so a builder's internal makespan and this replay
+    agree."""
+    if costs.n != N:
+        raise ValueError(f"costs are for {costs.n} devices, "
+                         f"simulate_costs was asked for N={N}")
+    sr = list(costs.sr_hops)
+    if comm is None:
+        comm = "latency" if any(s > 0 for s in sr) else "free"
+    return simulate(schedule, M, N, list(costs.F), list(costs.B_full),
+                    sr, V=1, comm=comm, w_frac=list(costs.w_frac))

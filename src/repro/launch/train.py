@@ -64,6 +64,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--auto-plan", action="store_true",
                     help="let the BaPipe explorer pick stages/tensor/M")
+    ap.add_argument("--cluster", default="",
+                    help="comma-separated per-stage device names for "
+                         "--auto-plan on a heterogeneous pod "
+                         "(tpu_v5e|v100|vcu118|vcu129); fixes the stage "
+                         "count to the list length and ranks candidates "
+                         "by the scheduled heterogeneous makespan of the "
+                         "per-device cost vector")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -87,11 +94,23 @@ def main(argv=None):
                 ap.error(f"--mem-limit only applies to --schedule zb-auto "
                          f"(or --auto-plan); got --schedule {sched}")
         cfg = dataclasses.replace(cfg, mem_limit=args.mem_limit)
+    if args.cluster and not args.auto_plan:
+        ap.error("--cluster only applies to --auto-plan")
     if args.auto_plan:
         from repro.core.autoplan import auto_plan
+        devices = None
+        if args.cluster:
+            from repro.core.hardware import TPU_V5E, V100, VCU118, VCU129
+            catalogue = {d.name: d for d in (TPU_V5E, V100, VCU118, VCU129)}
+            try:
+                devices = [catalogue[s.strip()]
+                           for s in args.cluster.split(",")]
+            except KeyError as e:
+                ap.error(f"unknown device {e.args[0]!r} in --cluster "
+                         f"(know: {', '.join(sorted(catalogue))})")
         plan_ = auto_plan(cfg, global_batch=args.batch, seq_len=args.seq,
                           model_axis=cfg.stages * cfg.tensor,
-                          data_axis=args.data,
+                          data_axis=args.data, devices=devices,
                           mem_limit=args.mem_limit or None)
         cfg = plan_.apply(cfg)
         args.microbatches = plan_.n_microbatches
