@@ -1,0 +1,225 @@
+"""Wall-clock benchmark of the pipeline runtimes per schedule.
+
+Runs the instruction-stream runtime (``runtime='stream'``) on 8 fake CPU
+devices for each schedule, measures the per-step wall-clock, and checks
+the measured ranking against ``simulate_costs`` fed the MEASURED per-op
+durations — the planning→execution conformance claim: the simulator's
+timing model, built from what the ops actually cost on this host, must
+predict the order the runtimes realise.
+
+Per-op durations are measured on a single-device stage proxy exactly as
+the runtime executes them (structural stage-remat — every backward op
+re-runs the stage forward under ``jax.vjp``):
+
+* ``F``  — the stage forward;
+* two-op ``B``      — recompute + full vjp (params and input);
+* zero-bubble ``B`` — recompute + input-only vjp;
+* zero-bubble ``W`` — recompute + params-only vjp.
+
+So the zero-bubble family pays the recompute twice (once in B, once in
+W): on hardware where W hides in drain bubbles that is the price of a
+shorter critical path, and the simulator sees the same inflated costs —
+measured and simulated rankings must still agree.
+
+Usage::
+
+    python benchmarks/runtime_bench.py [--assert-ranking] [--csv]
+
+Prints one ``schedule,sim_makespan,measured_ms`` row per schedule plus
+the two rankings.  ``--assert-ranking`` exits nonzero when a pair the
+simulator separates by more than ``SIM_TIE`` is measured in the opposite
+order by more than ``MEAS_SLACK`` — the CI conformance gate.
+"""
+import argparse
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SCHEDULES = ("1f1b", "dapple", "zb-h1", "zb-auto")
+SIM_TIE = 0.05     # sim gap below 5% is a tie: no ordering required
+MEAS_SLACK = 1.10  # measured may violate a sim ordering by <= 10% noise
+
+
+def _stage_proxy(cfg, mesh, plan):
+    """One stage's forward as the runtime applies it, on a single
+    micro-batch — the timing unit of every schedule op."""
+    import jax
+    import jax.numpy as jnp
+    from repro.pipeline import runtime as RT
+    from repro.pipeline import stage as ST
+
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    lp = jax.tree.map(lambda a: a[0], params["layers"])  # [Lps, ...] stage 0
+    smeta = jax.tree.map(lambda a: a[0], ST.stacked_meta(cfg, plan))
+    mb, T = 1, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (mb, T, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (mb, T))
+
+    def fwd(lp_, x_):
+        y, a, _ = RT.apply_stage(cfg, lp_, smeta, x_, pos=pos, cache=None)
+        return y, a
+
+    return fwd, lp, x
+
+
+def _time(fn, *args, iters=20):
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)          # compile outside the timed region
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def measure_op_durations(cfg, mesh, plan):
+    """(t_f, t_full, t_dx, t_dw): the four op costs of the runtime's
+    structural stage-remat execution, measured on this host."""
+    import jax
+
+    fwd, lp, x = _stage_proxy(cfg, mesh, plan)
+    ones = lambda t: jax.tree.map(lambda a: a.astype(float) * 0 + 1, t)
+
+    @jax.jit
+    def f_op(lp_, x_):
+        return fwd(lp_, x_)[0]
+
+    @jax.jit
+    def b_full(lp_, x_):                # two-op backward: recompute + vjp
+        (y, a), vjp = jax.vjp(lambda l, xx: fwd(l, xx), lp_, x_)
+        return vjp((ones(y), 1.0))
+
+    @jax.jit
+    def b_dx(lp_, x_):                  # zb B: recompute + input-only vjp
+        (y, a), vjp = jax.vjp(lambda xx: fwd(lp_, xx), x_)
+        return vjp((ones(y), 1.0))
+
+    @jax.jit
+    def b_dw(lp_, x_):                  # zb W: recompute + params-only vjp
+        (y, a), vjp = jax.vjp(lambda l: fwd(l, x_), lp_)
+        return vjp((ones(y), 1.0))
+
+    return (_time(f_op, lp, x), _time(b_full, lp, x),
+            _time(b_dx, lp, x), _time(b_dw, lp, x))
+
+
+def sim_makespans(M, S, t_f, t_full, t_dx, t_dw):
+    """simulate_costs under the measured durations, per schedule."""
+    from repro.core import schedplan as SP
+    from repro.core.simulator import simulate_costs
+    out = {}
+    for sched in SCHEDULES:
+        if SP.build_schedule(sched, M, S, 1).has_w:
+            b = t_dx + t_dw
+            costs = SP.StageCosts.uniform_costs(S, t_f, b, w_frac=t_dw / b)
+        else:
+            costs = SP.StageCosts.uniform_costs(S, t_f, t_full)
+        out[sched] = simulate_costs(sched, M, S, costs).makespan
+    return out
+
+
+def measured_walltimes(cfg, mesh, plan, M, runtime="stream", steps=10):
+    """Per-schedule best wall-clock of the jitted train step."""
+    import jax
+    import numpy as np
+    from repro.pipeline import runtime as RT
+    from repro.pipeline import stage as ST
+
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    kt, kl = jax.random.split(jax.random.PRNGKey(3))
+    B, T = M, 64
+    batch = dict(tokens=jax.random.randint(kt, (B, T), 0, cfg.vocab),
+                 labels=jax.random.randint(kl, (B, T), 0, cfg.vocab))
+    out = {}
+    for sched in SCHEDULES:
+        pcfg = RT.PipelineConfig(n_microbatches=M, schedule=sched,
+                                 runtime=runtime)
+        step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+        loss, grads = step(params, batch)          # compile + sanity
+        assert np.isfinite(float(loss)), (sched, float(loss))
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                loss, grads = step(params, batch)
+            jax.block_until_ready(loss)
+            best = min(best, (time.perf_counter() - t0) / steps)
+        out[sched] = best
+    return out
+
+
+def check_ranking(sim, meas):
+    """Every pair the simulator separates by > SIM_TIE must be measured
+    in the same order (up to MEAS_SLACK noise).  Returns violations."""
+    bad = []
+    names = list(sim)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            lo, hi = (a, b) if sim[a] <= sim[b] else (b, a)
+            if sim[hi] - sim[lo] <= SIM_TIE * sim[hi]:
+                continue                           # sim tie: no constraint
+            if meas[lo] > meas[hi] * MEAS_SLACK:
+                bad.append((lo, hi, sim[lo], sim[hi], meas[lo], meas[hi]))
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stages", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--runtime", default="stream",
+                    choices=("ticks", "stream"))
+    ap.add_argument("--assert-ranking", action="store_true")
+    args = ap.parse_args(argv)
+
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.pipeline import stage as ST
+
+    S, M = args.stages, args.microbatches
+    assert jax.device_count() >= S, \
+        f"need {S} devices (XLA_FLAGS fake-device mesh), " \
+        f"have {jax.device_count()}"
+    cfg = get_config("llama3.2-1b").reduced(n_layers=args.layers,
+                                            d_model=128)
+    cfg = dataclasses.replace(cfg, stages=S, tensor=1)
+    mesh = make_mesh((1, S, 1), ("data", "stage", "tensor"))
+    plan = ST.plan_stages(cfg)
+
+    t_f, t_full, t_dx, t_dw = measure_op_durations(cfg, mesh, plan)
+    print(f"# op durations (ms): F={t_f*1e3:.3f} B_full={t_full*1e3:.3f} "
+          f"B_dx={t_dx*1e3:.3f} W_dw={t_dw*1e3:.3f}")
+    sim = sim_makespans(M, S, t_f, t_full, t_dx, t_dw)
+    meas = measured_walltimes(cfg, mesh, plan, M, runtime=args.runtime)
+
+    print("schedule,sim_makespan_ms,measured_ms")
+    for sched in SCHEDULES:
+        print(f"{sched},{sim[sched]*1e3:.3f},{meas[sched]*1e3:.3f}")
+    rank = lambda d: ",".join(sorted(d, key=d.get))
+    print(f"# sim ranking:      {rank(sim)}")
+    print(f"# measured ranking: {rank(meas)}")
+    bad = check_ranking(sim, meas)
+    for (lo, hi, slo, shi, mlo, mhi) in bad:
+        print(f"# RANKING VIOLATION: sim says {lo} < {hi} "
+              f"({slo*1e3:.2f} < {shi*1e3:.2f} ms) but measured "
+              f"{mlo*1e3:.2f} > {mhi*1e3:.2f} ms")
+    if not bad:
+        print("# RANKING OK")
+    if args.assert_ranking and bad:
+        sys.exit(1)
+    return sim, meas
+
+
+if __name__ == "__main__":
+    main()

@@ -98,6 +98,11 @@ class ArchConfig:
     mem_limit: int = 0               # zb-auto peak-live cap (resident
                                      # micro-batch residuals per device);
                                      # 0 = unbounded (fully bubble-free)
+    runtime: str = "ticks"           # training executor: "ticks" (globally
+                                     # synchronous tick grid, rings shift
+                                     # every tick) | "stream" (compiled
+                                     # instruction streams, ring collectives
+                                     # only at scheduled SEND slots)
     fsdp: bool = False               # shard stage weights over "data" axis too
     profile_w_frac: str = "analytic" # backward B/W split source for the
                                      # profiler: "analytic" (weight-matmul

@@ -18,7 +18,9 @@ from repro.core.partition import (PartitionPlan, comm_bound, coarse_partition,
 from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
 from repro.core.schedules import (HETERO_SCHEDULES, SCHEDULES, ScheduleEval,
                                   eval_1f1b_interleaved,
+                                  eval_1f1b_interleaved_hetero,
                                   eval_1f1b_interleaved_memlean,
+                                  eval_1f1b_interleaved_memlean_hetero,
                                   eval_zb_auto, eval_zb_auto_hetero,
                                   schedules_for)
 
@@ -184,13 +186,23 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                           for c in plan.stage_costs), default=0.0)
                 a = plan.max_boundary_act()
                 w = max(c.weight_bytes for c in plan.device_costs())
+                costs = plan.cost_vector() if hetero else None
                 if V > 1 and sched == "1F1B-I-ML":
-                    ev = eval_1f1b_interleaved_memlean(M, N, F, B, SR, a, w,
-                                                       V=V)
+                    # hetero V > 1 replays the chunked table at per-device
+                    # costs (used to fall through to the scalar closed form
+                    # even on skewed clusters — the routing gap this fixes)
+                    ev = (eval_1f1b_interleaved_memlean_hetero(
+                              M, N, costs, a, w, V=V) if hetero
+                          else eval_1f1b_interleaved_memlean(
+                              M, N, F, B, SR, a, w, V=V))
                 elif V > 1:
-                    ev = eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=V)
+                    ev = (eval_1f1b_interleaved_hetero(M, N, costs, a, w,
+                                                       V=V) if hetero
+                          else eval_1f1b_interleaved(M, N, F, B, SR, a, w,
+                                                     V=V))
                 elif hetero and sched in HETERO_SCHEDULES:
-                    costs = plan.cost_vector()
+                    # the sync schedules route here too now: replayed under
+                    # blocking (SNO) / latency (SO) comm with per-hop SR
                     if sched == "ZB-AUTO":
                         ev = eval_zb_auto_hetero(M, N, costs, a, w,
                                                  mem_limit=mem_limit)

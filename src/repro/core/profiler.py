@@ -170,22 +170,38 @@ def _analytic_w_frac(flops_fwd: float, flops_wgrad: float) -> float:
     return min(0.95, max(0.05, 0.5 * flops_wgrad / flops_fwd))
 
 
+def layer_kind(cfg: ArchConfig, layer_idx: int) -> str:
+    """Timing kind of layer ``layer_idx`` for the measured B/W split:
+    ``"moe"`` for expert-FFN layers (past ``first_k_dense``), ``"dense"``
+    otherwise.  SSM/hybrid trunks time as ``"dense"`` — their scan has no
+    dL/dw, same as the attention span work the dense proxy carries."""
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense:
+        return "moe"
+    return "dense"
+
+
 def profile_arch(cfg: ArchConfig, seq: int = 4096) -> NetworkProfile:
     """Analytic per-layer profile at sequence length ``seq``.
 
     Each layer carries its B/W backward split (``LayerProfile.w_frac``):
     analytic by default (weight-matmul share of the layer's flops), or —
     when ``cfg.profile_w_frac == "measured"`` — measured from real vjp
-    timings of one representative layer (:func:`measure_w_frac`), with
-    the analytic split as the fallback when timing is unavailable."""
+    timings of one representative layer PER DISTINCT LAYER KIND
+    (:func:`measure_w_frac`; a mixed dense+MoE trunk times both proxies,
+    where it used to time one block and smear its split over every
+    layer), falling back to the per-layer analytic split for any kind
+    whose timing is unavailable."""
     bpp = 2
     d = cfg.d_model
     act_out = float(d * bpp)
     if cfg.profile_w_frac not in ("analytic", "measured"):
         raise ValueError(f"profile_w_frac must be 'analytic' or "
                          f"'measured', got {cfg.profile_w_frac!r}")
-    measured = (measure_w_frac(cfg, seq=min(seq, 128))
-                if cfg.profile_w_frac == "measured" else None)
+    measured: dict[str, float | None] = {}
+    if cfg.profile_w_frac == "measured":
+        kinds = {layer_kind(cfg, i) for i in range(cfg.n_layers)}
+        measured = {k: measure_w_frac(cfg, seq=min(seq, 128), kind=k)
+                    for k in sorted(kinds)}
     layers = []
     for i in range(cfg.n_layers):
         f, w, fw = 0.0, 0.0, 0.0
@@ -208,10 +224,11 @@ def profile_arch(cfg: ArchConfig, seq: int = 4096) -> NetworkProfile:
         f, w, fw = f + ff, w + wf_, fw + pf
         # norms etc: negligible flops, tiny weights
         w += 2 * d
+        wf_meas = measured.get(layer_kind(cfg, i))
         layers.append(LayerProfile(
             name=f"{cfg.arch_id}.L{i}", flops_fwd=f,
             bytes_weights=w * bpp, bytes_act_out=act_out,
-            w_frac=measured if measured is not None
+            w_frac=wf_meas if wf_meas is not None
             else _analytic_w_frac(f, fw)))
     embed = LayerProfile(name="embed", flops_fwd=0.0,
                          bytes_weights=float(cfg.vocab * d * bpp),
@@ -332,44 +349,75 @@ def measure_layer(fn: Callable, *args, iters: int = 5) -> float:
     return ts[len(ts) // 2]
 
 
-def measure_w_frac(cfg: ArchConfig, seq: int = 128,
-                   iters: int = 5) -> float | None:
+def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
+                   kind: str = "dense") -> float | None:
     """Measure the backward's B/W split from real vjp timings on ONE
     representative layer of ``cfg`` (reduced dims, CPU-runnable): a
-    transformer-block proxy with the config's projection/FFN GEMMs plus
-    a softmax-attention term (work with no weight gradient).  The full
-    vjp computes both cotangents; the input-only vjp (parameters closed
-    over) skips every dL/dw GEMM — the timing excess is the
-    weight-gradient share.
+    transformer-block proxy with the config's projection GEMMs plus a
+    softmax-attention term (work with no weight gradient), closed by
+    the FFN of the requested ``kind`` — the dense up/down GEMMs, or
+    (``kind="moe"``) a router GEMM plus the config's shared + top-k
+    expert GEMMs run under dense routing with top-k gate masking (every
+    expert executes, gates zero the unpicked ones — the static-shape
+    timing proxy for token dropping-free MoE).  The full vjp computes
+    both cotangents; the input-only vjp (parameters closed over) skips
+    every dL/dw GEMM — the timing excess is the weight-gradient share.
 
     Returns ``w_frac`` in (0, 1), or ``None`` when timing is
-    unavailable or degenerate (no jax, or noise pushes the ratio out of
-    (0.02, 0.98)) — callers fall back to the analytic split."""
+    unavailable or degenerate (no jax, ``kind="moe"`` without an MoE
+    config, or noise pushes the ratio out of (0.02, 0.98)) — callers
+    fall back to the per-layer analytic split."""
     try:
         import jax
         import jax.numpy as jnp
     except Exception:
+        return None
+    if kind not in ("dense", "moe"):
+        raise ValueError(f"kind must be 'dense' or 'moe', got {kind!r}")
+    if kind == "moe" and cfg.moe is None:
         return None
     try:
         d = max(32, min(cfg.d_model, 256))
         ff = max(2 * d, min(cfg.d_ff or 4 * d, 4 * d))
         seq = max(8, min(seq, 256))
         key = jax.random.PRNGKey(0)
-        ks = jax.random.split(key, 7)
+        ks = jax.random.split(key, 10)
         scale = 1.0 / math.sqrt(d)
         p0 = {"wq": jax.random.normal(ks[0], (d, d)) * scale,
               "wk": jax.random.normal(ks[1], (d, d)) * scale,
               "wv": jax.random.normal(ks[2], (d, d)) * scale,
-              "wo": jax.random.normal(ks[3], (d, d)) * scale,
-              "w1": jax.random.normal(ks[4], (d, ff)) * scale,
-              "w2": jax.random.normal(ks[5], (ff, d)) * scale}
-        x = jax.random.normal(ks[6], (seq, d))
+              "wo": jax.random.normal(ks[3], (d, d)) * scale}
+        if kind == "moe":
+            m = cfg.moe
+            ne = max(2, min(4, m.n_shared + m.n_routed))
+            tk = max(1, min(m.top_k, ne))
+            fe = max(16, min(m.d_ff_expert, d))
+            p0.update(
+                wr=jax.random.normal(ks[4], (d, ne)) * scale,
+                we1=jax.random.normal(ks[5], (ne, d, fe)) * scale,
+                we2=jax.random.normal(ks[6], (ne, fe, d)) * scale)
+
+            def ffn(p, h):
+                gates = jax.nn.softmax(h @ p["wr"], axis=-1)
+                kth = jnp.sort(gates, axis=-1)[:, -tk][:, None]
+                gates = jnp.where(gates >= kth, gates, 0.0)
+                y = jax.nn.silu(jnp.einsum("sd,edf->esf", h, p["we1"]))
+                y = jnp.einsum("esf,efd->esd", y, p["we2"])
+                return jnp.einsum("se,esd->sd", gates, y)
+        else:
+            p0.update(w1=jax.random.normal(ks[4], (d, ff)) * scale,
+                      w2=jax.random.normal(ks[5], (ff, d)) * scale)
+
+            def ffn(p, h):
+                return jax.nn.silu(h @ p["w1"]) @ p["w2"]
+
+        x = jax.random.normal(ks[7], (seq, d))
 
         def block(p, x):
             q, k, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
             s = jax.nn.softmax(q @ k.T * scale, axis=-1)
             o = (s @ v) @ p["wo"]
-            return jax.nn.silu(o @ p["w1"]) @ p["w2"]
+            return ffn(p, o)
 
         ct = jnp.ones((seq, d))
 

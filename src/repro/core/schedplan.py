@@ -1168,3 +1168,171 @@ def lower_to_ticks(plan: SchedPlan) -> TickLowering:
         bsrc=frz(bsrc), br=frz(br), bpark=frz(bpark),
         cw=frz(cw), cr=frz(cr), dinj=frz(dinj),
         n_x=n_x, n_f=n_f, n_b=n_b, n_c=n_c)
+
+
+# ---------------------------------------------------------------------------
+# Instruction lowering: compile the op tables into decentralized
+# per-device instruction streams (RUN / SEND / RECV / FREE).
+# ---------------------------------------------------------------------------
+
+# instruction opcodes (the Alpa-style decentralized runtime vocabulary)
+INSTR_RUN, INSTR_SEND, INSTR_RECV, INSTR_FREE = range(4)
+
+_INSTR_NAMES = ("RUN", "SEND", "RECV", "FREE")
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One instruction of a device's stream.
+
+    * ``RUN``  — execute op ``kind`` (TICK_F/TICK_B/TICK_B_SEED/TICK_W)
+      on micro-batch ``m``, chunk ``v``.
+    * ``SEND`` — put the op's output on ``ring`` ("fwd"/"bwd"); issued
+      asynchronously (collective-start), the matching shift happens at
+      the slot boundary.
+    * ``RECV`` — take an arriving value off ``ring``: into inbox slot
+      ``idx`` (parked, consumed by a later RUN) or straight into the
+      consuming RUN (``idx == -1``, the value is used the slot it lands).
+    * ``FREE`` — release register ``idx`` of buffer ``buf`` ("x" residual
+      stash, "f"/"b" forward/backward inbox, "c" zero-bubble cotangent):
+      the allocator may now reuse it.
+
+    ``slot`` is the global program-counter value the instruction executes
+    at — devices with shorter streams simply have no instructions at
+    some slots (they neither compute nor touch a ring there).
+    """
+    op: int
+    slot: int
+    kind: int = TICK_IDLE
+    m: int = -1
+    v: int = -1
+    ring: str = ""
+    buf: str = ""
+    idx: int = -1
+
+    def __repr__(self):
+        core = f"{_INSTR_NAMES[self.op]}@{self.slot}"
+        if self.op == INSTR_RUN:
+            k = ("IDLE", "F", "B", "Bseed", "W")[self.kind]
+            return f"{core} {k}(m={self.m}, v={self.v})"
+        if self.op in (INSTR_SEND, INSTR_RECV):
+            tgt = "direct" if self.idx < 0 else f"inbox[{self.idx}]"
+            return (f"{core} {self.ring}" +
+                    (f" -> {tgt}" if self.op == INSTR_RECV else ""))
+        return f"{core} {self.buf}[{self.idx}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class InstrLowering:
+    """Decentralized per-device instruction streams plus the compiled
+    slot program the SPMD runtime executes.
+
+    ``streams[n]`` is device n's own program: RUN ops back to back with
+    explicit SEND/RECV ring touches and FREE register releases — no
+    global tick grid.  ``ticks`` is the same program compiled onto a
+    shared slot counter (the only clock a single-program ``lax.scan``
+    has): slot ``j`` of every stream executes at scan iteration ``j``,
+    and the two rings shift ONLY at slots where some device SENDs
+    (``fsend``/``bsend``) — every other slot has no collective at all,
+    so devices drift through their own op durations between comm points
+    instead of barriering twice per tick.  Buffers are inherited from
+    the tick lowering's register allocation, i.e. still sized by
+    ``peak_live()``.
+
+    ``slot_of`` maps ``(kind, m, vstage)`` (kind "F"/"B"/"W") to the
+    op's slot — the execution order the differential tests compare
+    against the discrete-event simulator's event order.
+    """
+    ticks: TickLowering
+    streams: tuple[tuple[Instr, ...], ...]
+    fsend: tuple[bool, ...]
+    bsend: tuple[bool, ...]
+    slot_of: dict
+
+    @property
+    def schedule(self) -> str:
+        return self.ticks.schedule
+
+    @property
+    def n_slots(self) -> int:
+        return self.ticks.n_ticks
+
+    @property
+    def has_w(self) -> bool:
+        return self.ticks.has_w
+
+    @property
+    def n_shifts(self) -> int:
+        """Ring shifts actually scheduled (the tick runtime pays
+        ``2 * n_ticks``)."""
+        return sum(self.fsend) + sum(self.bsend)
+
+
+def lower_to_instructions(plan: SchedPlan) -> InstrLowering:
+    """Compile the per-device F/B(/W) op tables into per-device
+    instruction streams (see :class:`InstrLowering`).
+
+    The placement reuses the tick lowering's greedy in-order assignment
+    (one-hop ring transfers, register-allocated stash/inbox slots), so
+    an op's slot equals its start time in the unit-duration
+    discrete-event replay; what changes is the executable: SENDs are
+    explicit per-slot events, and slots with no SEND anywhere run
+    communication-free.
+    """
+    ticks = lower_to_ticks(plan)
+    N, V, nT = ticks.N, ticks.V, ticks.n_ticks
+    NS = N * V
+    has_w = ticks.has_w
+    fsend = [False] * nT
+    bsend = [False] * nT
+    slot_of: dict = {}
+    streams = []
+    for n in range(N):
+        instrs: list[Instr] = []
+        for t in range(nT):
+            k = ticks.kind[n][t]
+            if ticks.fpark[n][t] >= 0:
+                instrs.append(Instr(INSTR_RECV, t, ring="fwd",
+                                    idx=ticks.fpark[n][t]))
+            if ticks.bpark[n][t] >= 0:
+                instrs.append(Instr(INSTR_RECV, t, ring="bwd",
+                                    idx=ticks.bpark[n][t]))
+            if k == TICK_IDLE:
+                continue
+            v = ticks.v[n][t]
+            vs = v * N + n
+            m = ticks.m[n][t]
+            if k == TICK_F:
+                slot_of[("F", m, vs)] = t
+                if ticks.fsrc[n][t] == 1:
+                    instrs.append(Instr(INSTR_RECV, t, ring="fwd"))
+            elif k in (TICK_B, TICK_B_SEED):
+                slot_of[("B", m, vs)] = t
+                if k == TICK_B and ticks.bsrc[n][t] == 1:
+                    instrs.append(Instr(INSTR_RECV, t, ring="bwd"))
+            else:
+                slot_of[("W", m, vs)] = t
+            instrs.append(Instr(INSTR_RUN, t, kind=k, m=m, v=v))
+            if k == TICK_F and vs < NS - 1:
+                instrs.append(Instr(INSTR_SEND, t, ring="fwd"))
+                fsend[t] = True
+            elif k in (TICK_B, TICK_B_SEED) and vs > 0:
+                instrs.append(Instr(INSTR_SEND, t, ring="bwd"))
+                bsend[t] = True
+            # register releases: the last reader frees its inputs
+            if k == TICK_F and ticks.fsrc[n][t] == 2:
+                instrs.append(Instr(INSTR_FREE, t, buf="f",
+                                    idx=ticks.fr[n][t]))
+            elif k == TICK_B and ticks.bsrc[n][t] == 2:
+                instrs.append(Instr(INSTR_FREE, t, buf="b",
+                                    idx=ticks.br[n][t]))
+            if (k in (TICK_B, TICK_B_SEED) and not has_w) or k == TICK_W:
+                instrs.append(Instr(INSTR_FREE, t, buf="x",
+                                    idx=ticks.xr[n][t]))
+            if k == TICK_W:
+                instrs.append(Instr(INSTR_FREE, t, buf="c",
+                                    idx=ticks.cr[n][t]))
+        streams.append(tuple(instrs))
+    return InstrLowering(ticks=ticks, streams=tuple(streams),
+                         fsend=tuple(fsend), bsend=tuple(bsend),
+                         slot_of=slot_of)

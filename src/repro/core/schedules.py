@@ -283,14 +283,18 @@ def hetero_makespan_floor(M: int, costs: StageCosts,
 
 @functools.lru_cache(maxsize=256)
 def _replay_hetero(name: str, M: int, N: int, costs: StageCosts,
-                   mem_limit=None):
-    """(plan, free-comm SimResult) of a builder's table under per-device
-    durations — the scheduled heterogeneous makespan the hetero evals
-    report.  ``zb-auto`` builds the cost-shaped table from the vector
-    (SR stripped: the ranking premise is overlapped comm).  Cached:
-    the explorer evaluates several schedules per candidate partition and
-    DAPPLE shares 1F1B's table, so identical (table, costs) replays
-    recur (StageCosts is frozen, so the key is by value)."""
+                   mem_limit=None, V: int = 1, comm: str | None = None):
+    """(plan, SimResult) of a builder's table under per-device durations
+    — the scheduled heterogeneous makespan the hetero evals report.
+    ``zb-auto`` builds the cost-shaped table from the vector; ``V > 1``
+    replays the interleaved builders' chunked tables; ``comm`` selects
+    the simulator's communication model (the sync forms replay under
+    ``blocking``/``latency`` with the vector's own per-hop SR; the
+    default ``None`` keeps the schedule's free-comm async premise, SR
+    stripped).  Cached: the explorer evaluates several schedules per
+    candidate partition and DAPPLE shares 1F1B's table, so identical
+    (table, costs) replays recur (StageCosts is frozen, so the key is
+    by value)."""
     from repro.core import schedplan as SP
     from repro.core.simulator import simulate
     if name == "zb-auto":
@@ -298,9 +302,11 @@ def _replay_hetero(name: str, M: int, N: int, costs: StageCosts,
             M, N, costs=(list(costs.F), list(costs.B), list(costs.W)),
             mem_limit=mem_limit)
     else:
-        plan = SP.build_schedule(name, M, N, 1)
-    sim = simulate(plan, M, N, list(costs.F), list(costs.B_full), 0.0,
-                   w_frac=list(costs.w_frac))
+        plan = SP.build_schedule(name, M, N, V)
+    SR = (list(costs.sr_hops) if comm in ("latency", "blocking")
+          else 0.0)
+    sim = simulate(plan, M, N, list(costs.F), list(costs.B_full), SR,
+                   V=V, comm=comm, w_frac=list(costs.w_frac))
     return plan, sim
 
 
@@ -399,19 +405,6 @@ def eval_zb_auto_hetero(M: int, N: int, costs: StageCosts,
                                mem_limit=mem_limit)
     feats = tuple(float(c) * a for c in plan.peak_live())
     return _hetero_eval("ZB-AUTO", M, N, costs, a, w, sim, feats)
-
-
-#: V == 1 schedules with a heterogeneous vector form (the explorer feeds
-#: these the partition's per-device StageCosts instead of the bottleneck
-#: collapse; ZB-AUTO additionally takes ``mem_limit``).
-HETERO_SCHEDULES = {
-    "1F1B-AS": eval_1f1b_as_hetero,
-    "FBP-AS": eval_fbp_as_hetero,
-    "DAPPLE": eval_dapple_hetero,
-    "ZB-H1": eval_zb_h1_hetero,
-    "ZB-H2": eval_zb_h2_hetero,
-    "ZB-AUTO": eval_zb_auto_hetero,
-}
 
 
 def eval_1f1b_interleaved(M: int, N: int, F: float, B: float, SR: float,
@@ -521,6 +514,198 @@ def eval_1f1b_interleaved_latency(M: int, N: int, F: float, B: float,
     return dataclasses.replace(
         ev, minibatch_time=t,
         bubble_fraction=1.0 - M * V * (F + B) / V / t if t else 0.0)
+
+
+def blocking_stall_1f1b_interleaved(M: int, N: int) -> float:
+    """Rendezvous stalls on the 1F1B-I (V = 1) critical path under the
+    ``blocking`` comm model, in units of the op cost ``c`` at the
+    ``F == B == c`` design point.
+
+    A blocking send has no transfer engine: the producer WAITS until its
+    consumer posts the matching recv, so even as ``SR -> 0`` the warm-up
+    wavefront serializes device by device and the steady-state zigzag
+    collects one extra rendezvous per micro-batch.  Fitted and then
+    differentially pinned per-M (dense sweeps over ``N <= 8``,
+    ``M <= 5N``), the stall count is affine in M with a
+    triangular-number offset::
+
+        g(M, N) = M + N(N - 1)/2 - 2        (N >= 2, N != 3)
+        g(M, 3) = 2M - 2                    (the depth-3 anomaly)
+        g(M, N <= 1) = 0
+
+    At N == 3 the ring is short enough that BOTH neighbours of the
+    middle device rendezvous with it every cycle — the stall count
+    doubles its M slope instead of gaining the triangular offset."""
+    if N <= 1:
+        return 0.0
+    if N == 3:
+        return 2.0 * M - 2.0
+    return float(M + N * (N - 1) // 2 - 2)
+
+
+def blocking_hops_1f1b_interleaved(M: int, N: int) -> int:
+    """Number of SR-latency hops on the 1F1B-I (V = 1) critical path
+    under the ``blocking`` comm model — the coefficient of SR in the
+    affine makespan, companion to :func:`blocking_stall_1f1b_interleaved`::
+
+        h(M, N) = 2M + (N + 1)(N + 2)/2 - 6     (N >= 2, N != 3)
+        h(M, 3) = 3M + 1
+        h(M, N <= 1) = 0
+
+    Blocking transfers put MORE hops on the path than the latency
+    model's :func:`latency_hops_1f1b_interleaved` (compare ``~2M + N^2/2``
+    against ``~2(M + N)``): with no engine to overlap into, every
+    rendezvous the stall count ``g`` serializes also pays its wire time."""
+    if N <= 1:
+        return 0
+    if N == 3:
+        return 3 * M + 1
+    return 2 * M + (N + 1) * (N + 2) // 2 - 6
+
+
+def blockable_sr_1f1b_interleaved(M: int, N: int, F: float,
+                                  B: float) -> float:
+    """Largest per-hop SR for which :func:`eval_1f1b_interleaved_blocking`
+    is exact (the blocking twin of :func:`hideable_sr_1f1b_interleaved`).
+    The affine region's breakpoint was binary-searched per (M, N): depth
+    1-2 rings are affine for ALL SR, depth 3 up to ``min(F, B)``, and
+    deeper rings shrink like 1/M — ``min(F, B)/(M - 2)`` at N == 4 and
+    ``min(F, B)/(2M - 6)`` for N >= 5 (exact integer reciprocals at
+    every probed (M, N); past them a second rendezvous chain overtakes
+    the pinned one and the makespan leaves the affine piece)."""
+    if N <= 2:
+        return float("inf")
+    if N == 3:
+        return min(F, B)
+    if N == 4:
+        return min(F, B) / (M - 2)
+    return min(F, B) / (2 * M - 6)
+
+
+def eval_1f1b_interleaved_blocking(M: int, N: int, F: float, B: float,
+                                   SR: float, a: float,
+                                   w: float) -> ScheduleEval:
+    """1F1B-I under the ``blocking`` comm model (V = 1): the free-comm
+    makespan plus ``g`` rendezvous stalls of ``min(F, B)`` each
+    (:func:`blocking_stall_1f1b_interleaved`) plus ``SR`` per
+    critical-path hop (:func:`blocking_hops_1f1b_interleaved`).
+
+    Exact at the ``F == B`` design point for
+    ``SR <= blockable_sr_1f1b_interleaved(M, N, F, B)`` —
+    differentially pinned over randomized (M, N, c, SR) sweeps up to
+    N = 10 — and a lower bound beyond the SR premise.  Off the
+    ``F == B`` point the stall pattern is irregular; the value remains
+    a lower bound for N != 3 (the depth-3 anomaly can overshoot)."""
+    ev = eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=1)
+    t = (ev.minibatch_time
+         + blocking_stall_1f1b_interleaved(M, N) * min(F, B)
+         + blocking_hops_1f1b_interleaved(M, N) * SR)
+    return dataclasses.replace(
+        ev, minibatch_time=t,
+        bubble_fraction=1.0 - M * (F + B) / t if t else 0.0)
+
+
+def eval_1f1b_interleaved_hetero(M: int, N: int, costs: StageCosts,
+                                 a: float, w: float,
+                                 V: int = 2) -> ScheduleEval:
+    """Interleaved 1F1B under a per-device cost vector: the V-chunk op
+    table replayed at each device's own whole-device (F, B) — every
+    chunk op costs 1/V of its device's row, so a slow device stretches
+    all V of its passes and the stall surfaces in the scheduled
+    makespan instead of vanishing into the bottleneck collapse (the
+    bug this form fixes: the explorer used to feed V > 1 candidates
+    the scalar closed form even on heterogeneous clusters).  Uniform
+    vectors delegate to the exact :func:`eval_1f1b_interleaved`."""
+    if costs.uniform:
+        return eval_1f1b_interleaved(M, N, costs.F[0], costs.B_full[0],
+                                     max(costs.sr_hops, default=0.0),
+                                     a, w, V=V)
+    _, sim = _replay_hetero("1f1b-interleaved", M, N, costs, V=V)
+    feats = tuple(float(min(M * V, (V - 1) * M + (N - i + 1))) * a
+                  for i in range(1, N + 1))
+    ev = _hetero_eval("1F1B-I", M, N, costs, a, w, sim, feats)
+    return dataclasses.replace(
+        ev, V=V, bandwidth_demand=(V * a / min(costs.F))
+        if min(costs.F) > 0 else float("inf"))
+
+
+def eval_1f1b_interleaved_memlean_hetero(M: int, N: int,
+                                         costs: StageCosts,
+                                         a: float, w: float,
+                                         V: int = 2) -> ScheduleEval:
+    """Memory-lean interleaved 1F1B under a per-device cost vector:
+    Megatron's grouped op table replayed at per-device durations, with
+    the memlean ``min(M*V, 2(N-i) + (V-1)N + 1)`` features row.  Same
+    preconditions as the scalar form (``M % N == 0``); uniform vectors
+    delegate to :func:`eval_1f1b_interleaved_memlean`."""
+    if costs.uniform:
+        return eval_1f1b_interleaved_memlean(
+            M, N, costs.F[0], costs.B_full[0],
+            max(costs.sr_hops, default=0.0), a, w, V=V)
+    if M < N or M % N != 0:
+        raise ValueError(
+            f"1F1B-I-ML needs M % N == 0 (micro-batch groups of the "
+            f"pipeline depth), got M={M}, N={N}")
+    from repro.core.schedplan import live_activation_counts
+    _, sim = _replay_hetero("1f1b-interleaved-memlean", M, N, costs, V=V)
+    feats = tuple(float(c) * a for c in
+                  live_activation_counts("1F1B-I-ML", M, N, V))
+    ev = _hetero_eval("1F1B-I-ML", M, N, costs, a, w, sim, feats)
+    return dataclasses.replace(
+        ev, V=V, bandwidth_demand=(V * a / min(costs.F))
+        if min(costs.F) > 0 else float("inf"))
+
+
+def eval_1f1b_sno_hetero(M: int, N: int, costs: StageCosts,
+                         a: float, w: float) -> ScheduleEval:
+    """Synchronous no-overlap 1F1B under a per-device cost vector: the
+    1F1B table replayed under the ``blocking`` comm model with each
+    hop's OWN SR — every transfer occupies both endpoint devices, as on
+    sync-only hardware without a comm engine.  This replaces the old
+    routing bug where heterogeneous sync candidates fell through to the
+    scalar closed form at the worst-hop SR (double-counting the slow
+    link on every hop).  Uniform vectors delegate to the exact
+    :func:`eval_1f1b_sno` closed form."""
+    if costs.uniform:
+        return eval_1f1b_sno(M, N, costs.F[0], costs.B_full[0],
+                             max(costs.sr_hops, default=0.0), a, w)
+    _, sim = _replay_hetero("1f1b", M, N, costs, comm="blocking")
+    return _hetero_eval("1F1B-SNO", M, N, costs, a, w, sim,
+                        _feat(1, N, a))
+
+
+def eval_1f1b_so_hetero(M: int, N: int, costs: StageCosts,
+                        a: float, w: float) -> ScheduleEval:
+    """Synchronous overlapped 1F1B under a per-device cost vector: the
+    1F1B table replayed under the ``latency`` comm model (dedicated
+    comm engine, each hop paying its own SR on the wire but off the
+    devices), keeping the scalar form's doubled features row (overlap
+    needs the send buffer double-buffered).  Uniform vectors delegate
+    to the exact :func:`eval_1f1b_so` closed form."""
+    if costs.uniform:
+        return eval_1f1b_so(M, N, costs.F[0], costs.B_full[0],
+                            max(costs.sr_hops, default=0.0), a, w)
+    _, sim = _replay_hetero("1f1b", M, N, costs, comm="latency")
+    return _hetero_eval("1F1B-SO", M, N, costs, a, w, sim,
+                        _feat(2, N, a))
+
+
+#: Schedules with a heterogeneous vector form (the explorer feeds these
+#: the partition's per-device StageCosts instead of the bottleneck
+#: collapse; ZB-AUTO additionally takes ``mem_limit``, the interleaved
+#: forms ``V``).
+HETERO_SCHEDULES = {
+    "1F1B-AS": eval_1f1b_as_hetero,
+    "FBP-AS": eval_fbp_as_hetero,
+    "1F1B-SNO": eval_1f1b_sno_hetero,
+    "1F1B-SO": eval_1f1b_so_hetero,
+    "1F1B-I": eval_1f1b_interleaved_hetero,
+    "1F1B-I-ML": eval_1f1b_interleaved_memlean_hetero,
+    "DAPPLE": eval_dapple_hetero,
+    "ZB-H1": eval_zb_h1_hetero,
+    "ZB-H2": eval_zb_h2_hetero,
+    "ZB-AUTO": eval_zb_auto_hetero,
+}
 
 
 SCHEDULES = {

@@ -55,6 +55,10 @@ class SimResult:
     t_start: list[float] = dataclasses.field(default_factory=list)
     t_end: list[float] = dataclasses.field(default_factory=list)
     busy: list[float] = dataclasses.field(default_factory=list)
+    # per-op event log, one ``(start, end, kind, m, vstage)`` tuple per
+    # compute op in start order — the trace the instruction-stream
+    # runtime's slot assignment is differentially checked against
+    events: list[tuple] = dataclasses.field(default_factory=list)
 
     def bubble_fraction(self, stage: int = 0) -> float:
         return self.idle[stage] / self.makespan if self.makespan else 0.0
@@ -103,6 +107,22 @@ _DEFAULT_COMM = {
     "zb_auto": "free",
     "ZB-AUTO": "free",
 }
+
+
+def op_durations(N: int, V: int, Fs: Sequence[float], Bs: Sequence[float],
+                 wfs: Sequence[float], has_w: bool) -> dict:
+    """Per-virtual-stage op durations — the single duration model shared
+    by the discrete-event simulator, the instruction-stream runtime's
+    timing expectations and the benchmarks.  For W-bearing plans the
+    full backward ``Bs`` splits into an input-gradient ``B`` op
+    (``1 - w_frac``) and a weight-gradient ``W`` op (``w_frac``); V > 1
+    divides device time evenly across the device's chunks."""
+    NS = N * V
+    return {"F": [Fs[vs % N] / V for vs in range(NS)],
+            "B": [Bs[vs % N] / V
+                  * ((1.0 - wfs[vs % N]) if has_w else 1.0)
+                  for vs in range(NS)],
+            "W": [Bs[vs % N] / V * wfs[vs % N] for vs in range(NS)]}
 
 
 def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
@@ -172,13 +192,7 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
         raise ValueError(comm)
 
     NS = N * V                                 # virtual stages
-    # zb: B is split into input-grad (B) and weight-grad (W) halves,
-    # per-device fractions
-    dur = {"F": [Fs[vs % N] / V for vs in range(NS)],
-           "B": [Bs[vs % N] / V
-                 * ((1.0 - wfs[vs % N]) if has_w else 1.0)
-                 for vs in range(NS)],
-           "W": [Bs[vs % N] / V * wfs[vs % N] for vs in range(NS)]}
+    dur = op_durations(N, V, Fs, Bs, wfs, has_w)
 
     # --- task state ------------------------------------------------------
     f_done = [[-1.0] * NS for _ in range(M)]   # completion time of F[m][vs]
@@ -195,6 +209,7 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
     ptr = [0] * N                              # next op index
     n_done = 0
     total_ops = sum(len(o) for o in orders)
+    event_log: list[tuple] = []
 
     def deliver(kind: str, m: int, vs_from: int, t_prod: float):
         """Schedule the transfer of an activation/error to the neighbour."""
@@ -257,6 +272,7 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
         s, n, kind, m, vs = best
         d = dur[kind][vs]
         end = s + d
+        event_log.append((s, end, kind, m, vs))
         dev_free[n] = end
         busy[n] += d
         if t_start[n] is None:
@@ -304,7 +320,7 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
     idle = [makespan - busy[n] for n in range(N)]
     return SimResult(makespan=makespan, peak_live=peak, idle=idle,
                      t_start=[0.0 if s is None else s for s in t_start],
-                     t_end=t_end, busy=list(busy))
+                     t_end=t_end, busy=list(busy), events=event_log)
 
 
 def simulate_costs(schedule: str | SP.SchedPlan, M: int, N: int,

@@ -47,6 +47,12 @@ def main(argv=None):
                          " 1f1b-interleaved-memlean (memlean needs"
                          " --microbatches %% stages == 0); backward order"
                          " is executed as first-class ticks")
+    ap.add_argument("--runtime", default="", choices=("", "ticks", "stream"),
+                    help="training executor: ticks (synchronous tick grid,"
+                         " both rings shift every tick) | stream (compiled"
+                         " instruction streams — ring collectives only at"
+                         " scheduled SEND slots, so W/idle slots overlap"
+                         " compute with no barrier)")
     ap.add_argument("--mem-limit", type=int, default=0,
                     help="zb-auto only: peak-live cap (resident micro-batch"
                          " residuals per device). 0 = unbounded, the fully"
@@ -85,6 +91,8 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, virtual=args.virtual)
     if args.schedule:
         cfg = dataclasses.replace(cfg, schedule=args.schedule)
+    if args.runtime:
+        cfg = dataclasses.replace(cfg, runtime=args.runtime)
     if args.mem_limit:
         if not args.auto_plan:
             from repro.core.schedplan import canonical_name
@@ -137,7 +145,7 @@ def main(argv=None):
     opt_state = opt.init(params)
     pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
                              schedule=cfg.schedule, remat=args.remat,
-                             mem_limit=cfg.mem_limit)
+                             mem_limit=cfg.mem_limit, runtime=cfg.runtime)
     step_fn, specs = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,

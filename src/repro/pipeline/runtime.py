@@ -98,6 +98,17 @@ class PipelineConfig:
                                     # (MoE all_to_alls DO re-run in the
                                     # B-tick recompute); 'full' adds
                                     # per-layer remat inside it
+    runtime: str = "ticks"          # ticks | stream.  'ticks' replays the
+                                    # tick grid with both rings shifting
+                                    # every tick (two full-pytree ppermutes
+                                    # per tick, even on idle/W ticks);
+                                    # 'stream' executes the compiled
+                                    # instruction streams
+                                    # (schedplan.lower_to_instructions):
+                                    # ring collectives fire ONLY at slots
+                                    # where some device SENDs, so ops take
+                                    # their actual durations and W/idle
+                                    # slots run communication-free
     pod_role: str = "data"          # data | stage  (stage = pipeline over DCN)
     unroll: bool = False            # fully unroll ALL scans (roofline mode)
     gate_ticks: bool = False        # serve: lax.cond-skip invalid ticks so
@@ -255,6 +266,17 @@ def _tick_tables(lo: SP.TickLowering) -> dict:
         cw=flat(lo.cw), cr=flat(lo.cr), dinj=flat(lo.dinj, bool))
 
 
+def _stream_tables(instr: SP.InstrLowering) -> dict:
+    """The instruction lowering's tables: the tick tables plus the two
+    global per-slot comm gates — ``fsend[t]``/``bsend[t]`` is True iff
+    some device SENDs on that ring at slot ``t``.  Both are functions of
+    the slot counter alone (identical on every device), so the gated
+    ring collectives stay uniform across the mesh."""
+    return dict(_tick_tables(instr.ticks),
+                fsend=jnp.asarray(instr.fsend, bool),
+                bsend=jnp.asarray(instr.bsend, bool))
+
+
 def _buf_read(buf, slot):
     """Read pytree slot ``buf[slot]`` of a leading-dim buffer pytree."""
     return jax.tree.map(
@@ -275,40 +297,104 @@ def _at(table: jnp.ndarray, idx):
     return lax.dynamic_index_in_dim(table, idx, 0, keepdims=False)
 
 
+def _shard_retbuf(cfg: ArchConfig, S: int, stage_ax) -> bool:
+    """The stage-0 return buffer can be feature-sharded over the stage
+    axis: requires a single plain axis name (pod_role='stage' fuses two
+    axes — psum_scatter's tiled layout wants one) and a feature dim that
+    splits evenly.  Every injected leaf's last dim is ``d_model``."""
+    return isinstance(stage_ax, str) and S > 1 and cfg.d_model % S == 0
+
+
+def _retbuf_init(inj, S: int, sharded: bool):
+    """Zero-initialised stage-0 return buffer matching ``inj``'s [M, ...]
+    layout.  Unsharded it is a FULL copy of ``inj`` on every device (the
+    scan carry is SPMD-uniform, so write-masking to stage 0 does not
+    shrink it); sharded each device holds 1/S of the feature dim and the
+    buffer is reassembled by ``all_gather`` only at the ticks stage 0
+    actually reads a parked return."""
+    if not sharded:
+        return jax.tree.map(jnp.zeros_like, inj)
+    return jax.tree.map(
+        lambda q: jnp.zeros(q.shape[:-1] + (q.shape[-1] // S,), q.dtype),
+        inj)
+
+
 def _ring_ingest(tab: dict, MV: int, S: int, stage_idx, t, inj, x_cur,
-                 retbuf):
+                 retbuf, *, stage_ax=None, sharded: bool = False):
     """Stage-0 ring ingestion for one tick of the compiled schedule: park
     the arriving ring return (when the schedule buffers; stage 0 only),
     then select this tick's stage-0 source — fresh injection (chunk-0
     pass), the ring return straight off the ppermute carry (``direct``),
     or the parked return.  ``retbuf`` is None for schedules that consume
-    every return the tick it arrives.  Returns (retbuf, x_in)."""
+    every return the tick it arrives.
+
+    When ``sharded``, the return buffer holds 1/S of every feature dim
+    per device: parking scatters stage 0's arrival over the stage axis
+    (``psum_scatter`` of a stage-0-masked contribution), reading gathers
+    it back.  Both collectives are gated by predicates that depend on
+    the tick alone — uniform across the mesh, so the branches are safe
+    (cf. ``gate_ticks``) and non-park ticks pay nothing.
+    Returns (retbuf, x_in)."""
     if retbuf is not None:
         e_arr = t - S
         eacl = jnp.clip(e_arr, 0, MV - 1)
-        do_park = ((e_arr >= 0) & _at(tab["park"], eacl)
-                   & (stage_idx == 0))
+        want_park = (e_arr >= 0) & _at(tab["park"], eacl)
         slot = _at(tab["m"], eacl)
+        if sharded:
+            def park_scatter(rb):
+                def park1(rb_l, c):
+                    contrib = jnp.where(stage_idx == 0, c,
+                                        jnp.zeros_like(c))
+                    sh = lax.psum_scatter(contrib, stage_ax,
+                                          scatter_dimension=c.ndim - 1,
+                                          tiled=True)
+                    return lax.dynamic_update_index_in_dim(rb_l, sh,
+                                                           slot, 0)
+                return jax.tree.map(park1, rb, x_cur)
 
-        def park(rb, c):
-            old = lax.dynamic_index_in_dim(rb, slot, 0, keepdims=False)
-            return lax.dynamic_update_index_in_dim(
-                rb, jnp.where(do_park, c, old), slot, 0)
+            retbuf = lax.cond(want_park, park_scatter, lambda rb: rb,
+                              retbuf)
+        else:
+            do_park = want_park & (stage_idx == 0)
 
-        retbuf = jax.tree.map(park, retbuf, x_cur)
+            def park(rb, c):
+                old = lax.dynamic_index_in_dim(rb, slot, 0, keepdims=False)
+                return lax.dynamic_update_index_in_dim(
+                    rb, jnp.where(do_park, c, old), slot, 0)
+
+            retbuf = jax.tree.map(park, retbuf, x_cur)
     e0 = jnp.clip(t, 0, MV - 1)
     m0 = _at(tab["m"], e0)
     is_fresh = _at(tab["fresh"], e0)
     if retbuf is not None:
         take_direct = _at(tab["direct"], e0)
-        src = jax.tree.map(
-            lambda q, rb, c: jnp.where(
-                is_fresh,
-                lax.dynamic_index_in_dim(q, m0, 0, keepdims=False),
-                jnp.where(take_direct, c,
-                          lax.dynamic_index_in_dim(rb, m0, 0,
-                                                   keepdims=False))),
-            inj, retbuf, x_cur)
+        if sharded:
+            def read_gather(rb):
+                def gather1(rb_l):
+                    sl = lax.dynamic_index_in_dim(rb_l, m0, 0,
+                                                  keepdims=False)
+                    return lax.all_gather(sl, stage_ax, axis=sl.ndim - 1,
+                                          tiled=True)
+                return jax.tree.map(gather1, rb)
+
+            parked = lax.cond(
+                ~is_fresh & ~take_direct, read_gather,
+                lambda rb: jax.tree.map(jnp.zeros_like, x_cur), retbuf)
+            src = jax.tree.map(
+                lambda q, pk, c: jnp.where(
+                    is_fresh,
+                    lax.dynamic_index_in_dim(q, m0, 0, keepdims=False),
+                    jnp.where(take_direct, c, pk)),
+                inj, parked, x_cur)
+        else:
+            src = jax.tree.map(
+                lambda q, rb, c: jnp.where(
+                    is_fresh,
+                    lax.dynamic_index_in_dim(q, m0, 0, keepdims=False),
+                    jnp.where(take_direct, c,
+                              lax.dynamic_index_in_dim(rb, m0, 0,
+                                                       keepdims=False))),
+                inj, retbuf, x_cur)
     else:
         src = jax.tree.map(
             lambda q, c: jnp.where(
@@ -353,8 +439,13 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     # ticks, executed by the same scan as the forwards
     sched = SP.resolve_ring_schedule(pcfg.schedule, V)
     ml = (pcfg.mem_limit or None) if sched == "zb-auto" else None
-    lowering = SP.lower_to_ticks(SP.build_schedule(sched, M_, S, V,
-                                                   mem_limit=ml))
+    plan_ir = SP.build_schedule(sched, M_, S, V, mem_limit=ml)
+    if pcfg.runtime not in ("ticks", "stream"):
+        raise ValueError(f"unknown runtime {pcfg.runtime!r}: "
+                         f"expected ticks | stream")
+    instr = (SP.lower_to_instructions(plan_ir)
+             if pcfg.runtime == "stream" else None)
+    lowering = instr.ticks if instr else SP.lower_to_ticks(plan_ir)
     has_w = lowering.has_w
     if pcfg.remat not in ("none", "stage", "stage_save_moe", "full"):
         raise ValueError(
@@ -405,7 +496,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         labels_mb = batch["labels"].reshape(M_, mb, -1)
         fn_p = params["final_norm"]
         head_p = params.get("head", params["embed"])
-        tab = _tick_tables(lowering)
+        tab = _stream_tables(instr) if instr else _tick_tables(lowering)
         nT = lowering.n_ticks
         # d(global loss)/d(per-micro-batch ce) == d/d(per-op aux): the
         # seed every B tick's vjp is driven by
@@ -583,15 +674,31 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                 branches.append(w_fn)
             carry = lax.switch(jnp.clip(g("kind"), 0, len(branches) - 1),
                                branches, carry)
-            # shift both rings (forward +1, backward -1) every tick
             perm_f = [(i, (i + 1) % S) for i in range(S)]
             perm_b = [(i, (i - 1) % S) for i in range(S)]
-            return dict(
-                carry,
-                fwd=jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm_f),
-                                 carry["fwd"]),
-                bwd=jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm_b),
-                                 carry["bwd"])), None
+            shift_f = lambda tr: jax.tree.map(
+                lambda a: lax.ppermute(a, stage_ax, perm_f), tr)
+            shift_b = lambda tr: jax.tree.map(
+                lambda a: lax.ppermute(a, stage_ax, perm_b), tr)
+            if instr is not None:
+                # stream runtime: a ring shifts ONLY at slots where some
+                # device SENDs on it.  Every value travels exactly one hop
+                # at its producer's slot (arrival is always the next slot
+                # in the compiled tables), so slots without a scheduled
+                # SEND carry only dead data — skipping the collective is
+                # exact, and W/idle slots run with no barrier at all.
+                # The gate is a function of the slot counter alone
+                # (uniform across devices), so the collective inside the
+                # cond is safe (cf. the gate_ticks serve path).
+                fwd = lax.cond(_at(tab["fsend"], t), shift_f,
+                               lambda tr: tr, carry["fwd"])
+                bwd = lax.cond(_at(tab["bsend"], t), shift_b,
+                               lambda tr: tr, carry["bwd"])
+            else:
+                # tick runtime: both rings shift every tick
+                fwd = shift_f(carry["fwd"])
+                bwd = shift_b(carry["bwd"])
+            return dict(carry, fwd=fwd, bwd=bwd), None
 
         out, _ = lax.scan(tick, carry0, jnp.arange(nT),
                           unroll=pcfg.tick_scan_unroll)
@@ -764,6 +871,7 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     tab = _ring_tables(lowering)
     MV = M_ * V
     use_retbuf = lowering.needs_retbuf
+    retbuf_sharded = use_retbuf and _shard_retbuf(cfg, S, stage_ax)
 
     def sharded_decode(params, cache, batch):
         stage_idx = lax.axis_index(stage_ax)
@@ -803,7 +911,9 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                 x_cur, cache_l, outbuf = carry
                 retbuf = None
             retbuf, x_in = _ring_ingest(tab, MV, S, stage_idx, t,
-                                        inj, x_cur, retbuf)
+                                        inj, x_cur, retbuf,
+                                        stage_ax=stage_ax,
+                                        sharded=retbuf_sharded)
             # element (micro-batch, chunk) this stage works on at tick t
             e_idx = t - stage_idx
             valid = (e_idx >= 0) & (e_idx < MV)
@@ -884,7 +994,7 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         outbuf0 = jnp.zeros((M_, mb, 1, cfg.d_model), x_all.dtype)
         carry0 = (x0, cache_local, outbuf0)
         if use_retbuf:
-            carry0 = carry0 + (jax.tree.map(jnp.zeros_like, inj),)
+            carry0 = carry0 + (_retbuf_init(inj, S, retbuf_sharded),)
         carry_out, _ = lax.scan(
             tick, carry0, jnp.arange(lowering.n_ticks),
             unroll=pcfg.tick_scan_unroll)

@@ -255,6 +255,58 @@ def schedule_equivalence(arch="llama3.2-1b", stages=2, tensor=2,
     print("OK " + " ".join(f"{k}={v:.2e}" for k, v in worsts.items()))
 
 
+def stream_equivalence(arch="llama3.2-1b", stages=2, tensor=1,
+                       microbatches=4, *schedules):
+    """runtime='stream' (gated instruction-stream rings) must produce
+    loss/grads BIT-EQUAL to runtime='ticks' — the compiled op sequence
+    and every data path are identical; the gated rings skip only slots
+    whose carries are dead — and grad-equal to the single-device
+    reference, for every ring builder."""
+    import dataclasses as _dc
+    schedules = schedules or ("gpipe", "1f1b", "dapple", "zb-h1", "zb-h2",
+                              "zb-auto", "1f1b-interleaved",
+                              "1f1b-interleaved-memlean")
+    data = 8 // (stages * tensor) or 1
+    mesh = _mesh(data, stages, tensor)
+    worsts = {}
+    for sched in schedules:
+        V = 2 if "interleaved" in str(sched) else 1
+        cfg = get_config(arch).reduced(n_layers=max(4, stages * V),
+                                       d_model=128)
+        cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=V)
+        plan = ST.plan_stages(cfg)
+        params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+        batch = _batch(cfg, 8, 32)
+        rp = _ref_params(cfg, params, plan)
+        ref_loss = float(M.loss_fn(cfg, rp, batch))
+        ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+        gr = jax.tree.map(np.asarray, ref_grads["layers"])
+        outs = {}
+        for runtime in ("ticks", "stream"):
+            pcfg = RT.PipelineConfig(n_microbatches=microbatches,
+                                     schedule=str(sched), runtime=runtime)
+            step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+            loss, grads = step(params, batch)
+            assert abs(float(loss) - ref_loss) < 1e-4, \
+                (sched, runtime, float(loss), ref_loss)
+            outs[runtime] = (float(loss), jax.tree.map(np.asarray, grads))
+        lt, gt = outs["ticks"]
+        ls, gs = outs["stream"]
+        assert ls == lt, (sched, ls, lt)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                     gs, gt)
+        gp = jax.tree.map(
+            lambda a: np.asarray(ST.unstack_chunks(a, plan))[:cfg.n_layers],
+            gs["layers"])
+        errs = jax.tree.map(
+            lambda a, b: float(np.max(np.abs(a - b))
+                               / (np.max(np.abs(b)) + 1e-9)), gp, gr)
+        worst = max(jax.tree.leaves(errs))
+        assert worst < 1e-4, (sched, worst)
+        worsts[str(sched)] = worst
+    print("OK " + " ".join(f"{k}={v:.2e}" for k, v in worsts.items()))
+
+
 def pos3_ring(arch="qwen2-vl-7b", stages=4, tensor=1, virtual=1,
               microbatches=4, schedule="auto"):
     """Regression for the latent pos3 defect: per-micro-batch DISTINCT
@@ -409,6 +461,7 @@ if __name__ == "__main__":
      "gated_serve": gated_serve,
      "interleaved_equivalence": interleaved_equivalence,
      "schedule_equivalence": schedule_equivalence,
+     "stream_equivalence": stream_equivalence,
      "pos3_ring": pos3_ring,
      "prefill_equivalence": prefill_equivalence,
      }[mode](*args)

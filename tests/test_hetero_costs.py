@@ -290,6 +290,51 @@ def test_profiler_w_frac_analytic_and_measured():
         LayerProfile("bad", 1.0, 1.0, 1.0, w_frac=1.5)
 
 
+def test_measured_w_frac_per_layer_kind(monkeypatch):
+    """Bugfix pin: a mixed attention+MoE trunk no longer smears ONE
+    measured proxy timing over every layer — ``profile_arch`` measures
+    once per distinct layer kind and each row inherits its own kind's
+    split, falling back analytically per layer for kinds that fail to
+    time."""
+    from repro.configs import get_config
+    from repro.core import profiler as P
+    cfg = get_config("deepseek-v2-lite-16b").reduced(d_model=64)
+    # 2 reduced layers, first_k_dense=1 -> layer 0 dense, layer 1 moe
+    cfg = dataclasses.replace(
+        cfg, profile_w_frac="measured",
+        moe=dataclasses.replace(cfg.moe, first_k_dense=1))
+    assert [P.layer_kind(cfg, i) for i in range(cfg.n_layers)] == \
+        ["dense", "moe"]
+    real_measure = P.measure_w_frac
+    fakes = {"dense": 0.21, "moe": 0.47}
+    calls = []
+    monkeypatch.setattr(
+        P, "measure_w_frac",
+        lambda c, seq=128, iters=5, kind="dense":
+        calls.append(kind) or fakes[kind])
+    prof = P.profile_arch(cfg, seq=64)
+    assert sorted(calls) == ["dense", "moe"]     # once per kind, not per layer
+    assert prof.layers[0].w_frac == pytest.approx(0.21)
+    assert prof.layers[1].w_frac == pytest.approx(0.47)
+    assert prof.layers[0].w_frac != prof.layers[1].w_frac
+    # a kind whose timing is unavailable falls back analytically PER LAYER
+    monkeypatch.setattr(
+        P, "measure_w_frac",
+        lambda c, seq=128, iters=5, kind="dense":
+        0.21 if kind == "dense" else None)
+    prof2 = P.profile_arch(cfg, seq=64)
+    assert prof2.layers[0].w_frac == pytest.approx(0.21)
+    assert prof2.layers[1].w_frac == pytest.approx(
+        P.profile_arch(dataclasses.replace(cfg, profile_w_frac="analytic"),
+                       seq=64).layers[1].w_frac)
+    # the real MoE proxy: a timed fraction in (0, 1) or a clean fallback
+    wf = real_measure(cfg, seq=16, iters=1, kind="moe")
+    assert wf is None or 0.0 < wf < 1.0
+    assert real_measure(get_config("llama3.2-1b"), kind="moe") is None
+    with pytest.raises(ValueError, match="kind"):
+        real_measure(cfg, kind="ssm")
+
+
 # ---------------------------------------------------------------------------
 # Acceptance: skewed 4-device cluster, cost-shaped beats uniform-scalar.
 # ---------------------------------------------------------------------------
@@ -374,6 +419,139 @@ def test_skewed_cluster_autoplan_heterogeneous_devices():
     assert p.stages == 4
     assert p.stages * p.tensor == 16
     assert p.predicted_step_time > 0
+
+
+# ---------------------------------------------------------------------------
+# V > 1 and sync candidates route through the scheduled replay (the old
+# code fell through to the scalar closed forms even on skewed clusters).
+# ---------------------------------------------------------------------------
+
+def test_new_hetero_forms_uniform_delegation():
+    """The interleaved and sync hetero forms delegate bit-exactly to
+    their scalar closed forms on uniform vectors (SR included — the
+    sync forms put SR on the critical path)."""
+    M, N, F, B, SR, a, w = 8, 4, 1.3, 2.6, 0.2, 4.0, 10.0
+    costs = SP.StageCosts.uniform_costs(N, F, B, SR=SR)
+    pairs = [
+        (S.eval_1f1b_sno_hetero(M, N, costs, a, w),
+         S.eval_1f1b_sno(M, N, F, B, SR, a, w)),
+        (S.eval_1f1b_so_hetero(M, N, costs, a, w),
+         S.eval_1f1b_so(M, N, F, B, SR, a, w)),
+        (S.eval_1f1b_interleaved_hetero(M, N, costs, a, w, V=2),
+         S.eval_1f1b_interleaved(M, N, F, B, SR, a, w, V=2)),
+        (S.eval_1f1b_interleaved_memlean_hetero(M, N, costs, a, w, V=2),
+         S.eval_1f1b_interleaved_memlean(M, N, F, B, SR, a, w, V=2)),
+    ]
+    for het, uni in pairs:
+        assert het == uni, (het.name, het, uni)
+
+
+def test_hetero_sync_and_interleaved_differential_vs_simulate_costs():
+    """On the ``table_hetero`` skew (balanced 7-layer chain over a
+    fast/slow/fast/slow cluster — granularity the partitioner cannot
+    even out) the new forms report exactly the simulator's scheduled
+    makespan: SNO under ``blocking``, SO under ``latency`` (each hop
+    its OWN SR), interleaved V>1 the free-comm replay of the V-chunk
+    table.  The sync replays sit at or below the worst-hop closed form
+    the old fallthrough reported."""
+    prof, cl = _skewed_fixture()
+    # a slow middle link so the per-hop SR vector is genuinely uneven
+    devs = [dataclasses.replace(d, link_bandwidth=10e9 if i == 1 else
+                                d.link_bandwidth)
+            for i, d in enumerate(cl.devices)]
+    cl = heterogeneous_cluster(devs)
+    M = 8
+    r = explore(prof, cl, M, candidate_Ms=[M], consider_dp=False,
+                candidate_Vs=())
+    costs = r.plan.cost_vector()
+    N = costs.n
+    assert not costs.uniform and len(set(costs.sr_hops)) > 1
+    a, w = 1.0, 1.0
+
+    sno = S.eval_1f1b_sno_hetero(M, N, costs, a, w)
+    assert sno.minibatch_time == pytest.approx(
+        simulate_costs("1f1b", M, N, costs, comm="blocking").makespan,
+        rel=1e-12)
+    so = S.eval_1f1b_so_hetero(M, N, costs, a, w)
+    assert so.minibatch_time == pytest.approx(
+        simulate_costs("1f1b", M, N, costs, comm="latency").makespan,
+        rel=1e-12)
+    assert so.minibatch_time <= sno.minibatch_time + 1e-9
+
+    # the old fallthrough reported the scalar closed form at bottleneck
+    # (F, B) and the WORST-hop SR on every hop — on this skew it
+    # under-counts the scheduled stalls the replay surfaces, the
+    # observable the routing fix changes
+    F, B = r.plan.bottleneck_FB()
+    worst = max(costs.sr_hops)
+    old = S.eval_1f1b_sno(M, N, F, B, worst, a, w)
+    assert abs(sno.minibatch_time - old.minibatch_time) > 1e-6 * \
+        old.minibatch_time
+
+    for V in (2, 4):
+        ev = S.eval_1f1b_interleaved_hetero(M, N, costs, a, w, V=V)
+        ref = simulate("1f1b-interleaved", M, N, list(costs.F),
+                       list(costs.B_full), 0.0, V=V, comm="free",
+                       w_frac=list(costs.w_frac)).makespan
+        assert ev.minibatch_time == pytest.approx(ref, rel=1e-12)
+        assert ev.V == V
+    ml = S.eval_1f1b_interleaved_memlean_hetero(M, N, costs, a, w, V=2)
+    refml = simulate("1f1b-interleaved-memlean", M, N, list(costs.F),
+                     list(costs.B_full), 0.0, V=2, comm="free",
+                     w_frac=list(costs.w_frac)).makespan
+    assert ml.minibatch_time == pytest.approx(refml, rel=1e-12)
+    with pytest.raises(ValueError, match="M % N"):
+        S.eval_1f1b_interleaved_memlean_hetero(M + 1, N, costs, a, w)
+
+
+def test_explorer_routes_sync_candidates_through_replay():
+    """A sync-only (GPU-like) skewed cluster: the explorer's reported
+    time for its sync pick IS the per-hop comm-model replay of the
+    1F1B table, not the worst-hop scalar closed form."""
+    prof, cl = _skewed_fixture()
+    devs = [dataclasses.replace(d, async_capable=False,
+                                link_bandwidth=10e9 if i == 1 else
+                                d.link_bandwidth)
+            for i, d in enumerate(cl.devices)]
+    cl = heterogeneous_cluster(devs)
+    M = 8
+    r = explore(prof, cl, M, candidate_Ms=[M], consider_dp=False,
+                candidate_Vs=())
+    assert r.schedule in ("1F1B-SNO", "1F1B-SO")
+    costs = r.plan.cost_vector()
+    assert not costs.uniform
+    comm = "blocking" if r.schedule == "1F1B-SNO" else "latency"
+    ref = simulate_costs("1f1b", M, costs.n, costs, comm=comm).makespan
+    assert r.minibatch_time == pytest.approx(ref, rel=1e-12)
+
+
+def test_explorer_routes_interleaved_candidates_through_replay():
+    """An 8-layer skewed async cluster admits V=2 interleave over N=4:
+    whatever the explorer picks, every V>1 candidate it evaluated must
+    carry the scheduled (replayed) makespan — pinned by recomputing the
+    pick's eval from its own partition vector when the pick is
+    interleaved, and by checking the hetero form is what the explorer's
+    routing produces for a forced V>1 evaluation either way."""
+    fast = DeviceSpec("fast", 100e12, 1e12, 1e15, 1e15,
+                      async_capable=True, efficiency=1.0)
+    slow = dataclasses.replace(fast, name="slow", peak_flops=50e12)
+    prof = NetworkProfile("balanced8", tuple(
+        LayerProfile(name=f"l{i}", flops_fwd=1e12, bytes_weights=1e6,
+                     bytes_act_out=1e9) for i in range(8)), unit="sample")
+    cl = heterogeneous_cluster([fast, slow, fast, slow])
+    M = 8
+    r = explore(prof, cl, M, candidate_Ms=[M], consider_dp=False,
+                candidate_Vs=(2,))
+    if r.V > 1:
+        costs = r.plan.cost_vector()
+        fn = (S.eval_1f1b_interleaved_memlean_hetero
+              if r.schedule == "1F1B-I-ML"
+              else S.eval_1f1b_interleaved_hetero)
+        a = r.plan.max_boundary_act()
+        w = max(c.weight_bytes for c in r.plan.device_costs())
+        ev = fn(M, costs.n, costs, a, w, V=r.V)
+        assert r.sched_eval.minibatch_time == pytest.approx(
+            ev.minibatch_time, rel=1e-12)
 
 
 def test_explorer_hetero_false_reproduces_scalar_collapse():

@@ -116,6 +116,25 @@ def test_backward_tick_schedules_grad_equivalence(stages, tensor,
              str(microbatches), *schedules, timeout=540)
 
 
+@pytest.mark.parametrize("stages,tensor,microbatches,schedules", [
+    (2, 2, 4, ("gpipe", "1f1b", "dapple")),            # two-op family
+    (2, 2, 4, ("zb-h1", "zb-h2", "zb-auto")),          # zero-bubble family
+    (2, 2, 4, ("1f1b-interleaved",
+               "1f1b-interleaved-memlean")),           # V=2 ring returns
+    (4, 1, 4, ("1f1b", "zb-h1", "zb-auto")),           # deep ring
+    (4, 1, 4, ("gpipe", "1f1b-interleaved",
+               "1f1b-interleaved-memlean")),           # deep ring, V=2
+])
+def test_stream_runtime_grad_equivalence(stages, tensor, microbatches,
+                                         schedules):
+    """Instruction-stream runtime (runtime='stream'): loss/grads must be
+    bit-equal to the tick runtime (identical compiled op sequence — the
+    gated rings skip only dead transfers) and grad-equal to the
+    single-device reference, for every ring builder at 2 and 4 stages."""
+    run_case("stream_equivalence", "llama3.2-1b", str(stages), str(tensor),
+             str(microbatches), *schedules, timeout=540)
+
+
 @pytest.mark.parametrize("virtual", ["1", "2"])
 def test_pos3_rides_the_ppermute_ring(virtual):
     """Regression (pre-seed defect): per-micro-batch DISTINCT M-RoPE

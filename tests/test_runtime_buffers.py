@@ -1,0 +1,54 @@
+"""Serve-runtime buffer regressions (single device).
+
+The streaming 1F1B-I return buffer (stage-0 parked ring returns) used to
+be allocated FULL-SIZE on every device: the scan carry is SPMD-uniform,
+so write-masking the parks to stage 0 never shrank the allocation.  It
+is now feature-sharded over the stage axis — ``psum_scatter`` on park,
+``all_gather`` on read, both gated to the scheduled park/read ticks —
+so each device holds 1/S of it.  These tests pin the S-fold per-device
+byte drop and the engagement predicate; the numerics are covered by the
+multi-device prefill/serve equivalence suites.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.pipeline import runtime as RT
+
+
+def _bytes(tree):
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def test_retbuf_sharded_bytes_drop_by_stage_count():
+    M_, mb, T, d = 8, 2, 32, 128
+    inj = jnp.zeros((M_, mb, T, d))
+    for S in (2, 4, 8):
+        full = jax.eval_shape(lambda q: RT._retbuf_init(q, S, False), inj)
+        shard = jax.eval_shape(lambda q: RT._retbuf_init(q, S, True), inj)
+        assert _bytes(full) == S * _bytes(shard), S
+        assert jax.tree.leaves(shard)[0].shape == (M_, mb, T, d // S)
+        assert jax.tree.leaves(full)[0].shape == (M_, mb, T, d)
+
+
+def test_retbuf_shard_predicate():
+    cfg = get_config("llama3.2-1b").reduced(d_model=128)
+    assert RT._shard_retbuf(cfg, 4, "stage")
+    assert not RT._shard_retbuf(cfg, 1, "stage")            # no pipeline
+    assert not RT._shard_retbuf(cfg, 4, ("pod", "stage"))   # fused DCN axis
+    odd = dataclasses.replace(cfg, d_model=130)
+    assert not RT._shard_retbuf(odd, 4, "stage")            # 130 % 4 != 0
+    assert RT._shard_retbuf(odd, 2, "stage")
+
+
+def test_retbuf_dict_injection_shards_every_leaf():
+    # audio-family injection is a dict; every leaf's feature dim shards
+    inj = dict(h_dec=jnp.zeros((4, 2, 16, 128)),
+               h_enc=jnp.zeros((4, 2, 8, 128)))
+    shard = jax.eval_shape(lambda q: RT._retbuf_init(q, 4, True), inj)
+    assert shard["h_dec"].shape == (4, 2, 16, 32)
+    assert shard["h_enc"].shape == (4, 2, 8, 32)
+    full = jax.eval_shape(lambda q: RT._retbuf_init(q, 4, False), inj)
+    assert _bytes(full) == 4 * _bytes(shard)

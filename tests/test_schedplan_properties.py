@@ -102,6 +102,40 @@ def test_tick_lowering_no_deadlock_and_matches_simulator(name, N, mmult, V):
 
 
 @pytest.mark.parametrize("name", SP.BUILDER_NAMES)
+@settings(max_examples=12)
+@given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
+def test_instruction_stream_matches_simulator_event_order(name, N, mmult, V):
+    """The instruction lowering's slot assignment IS the discrete-event
+    schedule: at unit per-op durations under free comm, every op's slot
+    equals its simulated start time — so the stream runtime's
+    op-completion order is exactly the simulator's event order — and the
+    ring gates (``fsend``/``bsend``) fire exactly at the slots where some
+    device produces a value that travels."""
+    M, v = _shape(name, N, mmult, V)
+    plan = SP.build_schedule(name, M, N, v)
+    lo = SP.lower_to_instructions(plan)
+    res = simulate(plan, M, N, float(v),
+                   float(v) * (2 if plan.has_w else 1), 0.0, V=v,
+                   comm="free")
+    assert len(res.events) == len(lo.slot_of), (name, M, N, v)
+    for (s, _e, kind, m, vs) in res.events:
+        assert lo.slot_of[(kind, m, vs)] == pytest.approx(s), \
+            (name, M, N, v, kind, m, vs)
+    assert res.makespan == pytest.approx(lo.n_slots)
+    # gates: a ring shifts at slot t iff some device SENDs on it there
+    NS = N * v
+    f_prod = {t for (k, _m, vs), t in lo.slot_of.items()
+              if k == "F" and vs < NS - 1}
+    b_prod = {t for (k, _m, vs), t in lo.slot_of.items()
+              if k == "B" and vs > 0}
+    assert {t for t, g in enumerate(lo.fsend) if g} == f_prod
+    assert {t for t, g in enumerate(lo.bsend) if g} == b_prod
+    # the point of the exercise: strictly fewer collectives than the
+    # tick runtime's 2 * n_ticks (any schedule with an idle or W slot)
+    assert lo.n_shifts <= 2 * lo.n_slots
+
+
+@pytest.mark.parametrize("name", SP.BUILDER_NAMES)
 @settings(max_examples=15)
 @given(N=st.integers(1, 6), mmult=st.integers(1, 4), V=st.integers(1, 4))
 def test_peak_live_replay_matches_algebraic_rows(name, N, mmult, V):

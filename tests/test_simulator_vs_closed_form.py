@@ -74,7 +74,9 @@ def test_sync_schedules_still_bracketed(M, N, V, F, B, SR):
 @pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
 def test_interleaved_all_comm_models_no_deadlock(M, N, V, F, B, SR):
     """1F1B-I completes (no deadlock) under all three comm models and the
-    makespans are ordered free <= latency <= blocking."""
+    makespans are ordered free <= latency <= blocking.  (The bracket is
+    the V > 1 story; at V == 1 the latency AND blocking ends are pinned
+    EXACTLY by the two closed-form tests below.)"""
     free = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="free").makespan
     lat = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="latency").makespan
     blk = simulate("1F1B-I", M, N, F, B, SR, V=V, comm="blocking").makespan
@@ -101,6 +103,46 @@ def test_interleaved_latency_exact_closed_form(M, N, V, F, B, SR):
                         comm="latency").makespan
     ev_full = S.eval_1f1b_interleaved_latency(M, N, F, B, SR, 1.0, 1.0, V=V)
     assert ev_full.minibatch_time <= lat_full + 1e-9
+
+
+@pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
+def test_interleaved_blocking_exact_closed_form(M, N, V, F, B, SR):
+    """The 1F1B-I blocking-model closed form is EXACT (replacing the old
+    ``lat <= blk`` bracket) at its premise — V = 1, ``F == B == c``,
+    ``SR <= blockable_sr_1f1b_interleaved``: the free makespan plus
+    ``g(M, N)`` rendezvous stalls of ``c`` each plus ``h(M, N)`` wire
+    hops of SR each, including the depth-3 anomaly row (g = 2M - 2,
+    h = 3M + 1).  SR is clamped to the premise exactly as the latency
+    pin clamps to ``hideable_sr``.  The clamp also steps off low-order
+    rational c/SR ratios (e.g. 455/2): when event times k*c + m*SR
+    collide EXACTLY in float, the DES tie-break can legally pick a
+    shorter rendezvous order than the generic (tie-free) one the
+    closed form describes."""
+    c = F
+    SR_b = min(SR, 0.95 * S.blockable_sr_1f1b_interleaved(M, N, c, c))
+    SR_b *= 0.9973137  # tie-avoiding: no low-order rational ratio to c
+    blk = simulate("1F1B-I", M, N, c, c, SR_b, V=1, comm="blocking").makespan
+    ev = S.eval_1f1b_interleaved_blocking(M, N, c, c, SR_b, 1.0, 1.0)
+    assert blk == pytest.approx(ev.minibatch_time, rel=1e-9)
+    # the stall + hop counts are the whole overhead over free comm
+    free = simulate("1F1B-I", M, N, c, c, 0.0, V=1, comm="free").makespan
+    g = S.blocking_stall_1f1b_interleaved(M, N)
+    h = S.blocking_hops_1f1b_interleaved(M, N)
+    assert blk - free == pytest.approx(g * c + h * SR_b,
+                                       abs=1e-9 + 1e-9 * blk)
+    # depth 1-2 rings never leave the affine piece: exact at ANY SR
+    if N <= 2:
+        big = simulate("1F1B-I", M, N, c, c, 7.3 * c, V=1,
+                       comm="blocking").makespan
+        assert big - free == pytest.approx(g * c + h * 7.3 * c, rel=1e-9)
+    # beyond the SR premise the closed form is still a lower bound
+    # (tie-stepped for the same reason: an exact float tie can legally
+    # undercut the generic makespan the closed form lower-bounds)
+    SR_f = SR * 0.9973137
+    blk_full = simulate("1F1B-I", M, N, c, c, SR_f, V=1,
+                        comm="blocking").makespan
+    ev_full = S.eval_1f1b_interleaved_blocking(M, N, c, c, SR_f, 1.0, 1.0)
+    assert ev_full.minibatch_time <= blk_full + 1e-9
 
 
 @pytest.mark.parametrize("M,N,V,F,B,SR", GRID)
