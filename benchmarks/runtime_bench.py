@@ -23,12 +23,22 @@ measured and simulated rankings must still agree.
 
 Usage::
 
-    python benchmarks/runtime_bench.py [--assert-ranking] [--csv]
+    python benchmarks/runtime_bench.py [--assert-ranking] [--data D]
 
 Prints one ``schedule,sim_makespan,measured_ms`` row per schedule plus
 the two rankings.  ``--assert-ranking`` exits nonzero when a pair the
 simulator separates by more than ``SIM_TIE`` is measured in the opposite
 order by more than ``MEAS_SLACK`` — the CI conformance gate.
+
+``--data D`` (D > 1) switches to the grad-sync report: a (D data x S
+stage) mesh, each schedule stepped under ``grad_sync='end'`` and
+``'overlap'`` on the stream runtime, one row per schedule with the
+measured wall-clock of both paths next to the simulator's predicted
+exposed/hidden sync split (``simulate_costs`` fed the measured per-op
+durations and the measured data-fabric AR cost).  The ranking gate then
+compares the OVERLAPPED measurements against the overlapped sim
+makespans, and flags any schedule whose overlap path measures slower
+than its own sync-at-end path beyond noise.
 """
 import argparse
 import os
@@ -42,6 +52,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 SCHEDULES = ("1f1b", "dapple", "zb-h1", "zb-auto")
 SIM_TIE = 0.05     # sim gap below 5% is a tie: no ordering required
 MEAS_SLACK = 1.10  # measured may violate a sim ordering by <= 10% noise
+# overlap-vs-end is a gross-regression gate only: on fake CPU devices
+# the AR bucket is a memcpy (nothing to hide) while the per-slot gate
+# costs real dispatch overhead, so small measured losses are expected —
+# the gate exists to catch the overlap path recompiling or serializing
+OVERLAP_SLACK = 1.25
 
 
 def _stage_proxy(cfg, mesh, plan):
@@ -111,22 +126,64 @@ def measure_op_durations(cfg, mesh, plan):
             _time(b_dx, lp, x), _time(b_dw, lp, x))
 
 
+def _measured_costs(M, S, sched, t_f, t_full, t_dx, t_dw):
+    from repro.core import schedplan as SP
+    if SP.build_schedule(sched, M, S, 1).has_w:
+        b = t_dx + t_dw
+        return SP.StageCosts.uniform_costs(S, t_f, b, w_frac=t_dw / b)
+    return SP.StageCosts.uniform_costs(S, t_f, t_full)
+
+
 def sim_makespans(M, S, t_f, t_full, t_dx, t_dw):
     """simulate_costs under the measured durations, per schedule."""
-    from repro.core import schedplan as SP
     from repro.core.simulator import simulate_costs
     out = {}
     for sched in SCHEDULES:
-        if SP.build_schedule(sched, M, S, 1).has_w:
-            b = t_dx + t_dw
-            costs = SP.StageCosts.uniform_costs(S, t_f, b, w_frac=t_dw / b)
-        else:
-            costs = SP.StageCosts.uniform_costs(S, t_f, t_full)
+        costs = _measured_costs(M, S, sched, t_f, t_full, t_dx, t_dw)
         out[sched] = simulate_costs(sched, M, S, costs).makespan
     return out
 
 
-def measured_walltimes(cfg, mesh, plan, M, runtime="stream", steps=10):
+def sim_grad_sync(M, S, t_f, t_full, t_dx, t_dw, ar):
+    """Per schedule: (base, overlapped, sequential) makespans under the
+    measured op durations and the measured AR bucket cost — the
+    simulator replaying the AR-op plan on the shared data fabric."""
+    from repro.core.simulator import simulate_costs
+    out = {}
+    for sched in SCHEDULES:
+        costs = _measured_costs(M, S, sched, t_f, t_full, t_dx, t_dw)
+        base = simulate_costs(sched, M, S, costs).makespan
+        ov = simulate_costs(sched, M, S, costs, ar=ar,
+                            grad_sync=True).makespan
+        out[sched] = (base, ov, base + S * ar)
+    return out
+
+
+def measure_ar_duration(mesh, n_elems, dp):
+    """Measured cost of one AR bucket on the data fabric: the chunked
+    ``psum_scatter`` + ``all_gather`` exactly as the stream runtime
+    executes an AR slot, over a flat bucket of ``n_elems`` floats."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    x = jnp.zeros((n_elems + (-n_elems) % dp,), jnp.float32)
+
+    def rs_ag(v):
+        red = lax.psum_scatter(v, "data", scatter_dimension=0, tiled=True)
+        return lax.all_gather(red, "data", axis=0, tiled=True)
+
+    # RS+AG leaves the value replicated over data, but the rep checker
+    # can't infer that through psum_scatter — disable it
+    f = jax.jit(shard_map(rs_ag, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_rep=False))
+    return _time(f, x)
+
+
+def measured_walltimes(cfg, mesh, plan, M, runtime="stream", steps=10,
+                       dp=1, grad_sync="auto"):
     """Per-schedule best wall-clock of the jitted train step."""
     import jax
     import numpy as np
@@ -135,13 +192,13 @@ def measured_walltimes(cfg, mesh, plan, M, runtime="stream", steps=10):
 
     params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
     kt, kl = jax.random.split(jax.random.PRNGKey(3))
-    B, T = M, 64
+    B, T = M * dp, 64
     batch = dict(tokens=jax.random.randint(kt, (B, T), 0, cfg.vocab),
                  labels=jax.random.randint(kl, (B, T), 0, cfg.vocab))
     out = {}
     for sched in SCHEDULES:
         pcfg = RT.PipelineConfig(n_microbatches=M, schedule=sched,
-                                 runtime=runtime)
+                                 runtime=runtime, grad_sync=grad_sync)
         step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
         loss, grads = step(params, batch)          # compile + sanity
         assert np.isfinite(float(loss)), (sched, float(loss))
@@ -171,6 +228,59 @@ def check_ranking(sim, meas):
     return bad
 
 
+def grad_sync_report(args, cfg, mesh, plan, M, S, dp,
+                     t_f, t_full, t_dx, t_dw):
+    """The ``--data`` mode: measured 'end' vs 'overlap' wall-clock per
+    schedule next to the simulator's exposed/hidden sync split."""
+    import jax
+    import numpy as np
+    from repro.pipeline import stage as ST
+
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    n_elems = sum(int(np.prod(a.shape[1:]))
+                  for a in jax.tree.leaves(params["layers"]))
+    ar = measure_ar_duration(mesh, n_elems, dp)
+    print(f"# AR bucket ({n_elems} floats, dp={dp}): {ar*1e3:.3f} ms")
+
+    sim = sim_grad_sync(M, S, t_f, t_full, t_dx, t_dw, ar)
+    end = measured_walltimes(cfg, mesh, plan, M, dp=dp, grad_sync="end")
+    ov = measured_walltimes(cfg, mesh, plan, M, dp=dp, grad_sync="overlap")
+
+    print("schedule,sim_exposed_ms,sim_hidden_ms,"
+          "end_ms,overlap_ms,measured_saved_ms")
+    for sched in SCHEDULES:
+        base, sov, seq = sim[sched]
+        exposed, hidden = sov - base, seq - sov
+        print(f"{sched},{exposed*1e3:.3f},{hidden*1e3:.3f},"
+              f"{end[sched]*1e3:.3f},{ov[sched]*1e3:.3f},"
+              f"{(end[sched] - ov[sched])*1e3:.3f}")
+
+    sim_ov = {s: v[1] for s, v in sim.items()}
+    rank = lambda d: ",".join(sorted(d, key=d.get))
+    print(f"# sim ranking (overlapped):      {rank(sim_ov)}")
+    print(f"# measured ranking (overlapped): {rank(ov)}")
+    bad = check_ranking(sim_ov, ov)
+    for (lo, hi, slo, shi, mlo, mhi) in bad:
+        print(f"# RANKING VIOLATION: sim says {lo} < {hi} "
+              f"({slo*1e3:.2f} < {shi*1e3:.2f} ms) but measured "
+              f"{mlo*1e3:.2f} > {mhi*1e3:.2f} ms")
+    # the overlap path must never cost GROSSLY more than its own
+    # sync-at-end path (see OVERLAP_SLACK: fake-device collectives are
+    # free, so we gate on gross regression, not on realized savings)
+    for sched in SCHEDULES:
+        if ov[sched] > end[sched] * OVERLAP_SLACK:
+            bad.append((sched, "end", sim_ov[sched], sim[sched][2],
+                        ov[sched], end[sched]))
+            print(f"# OVERLAP REGRESSION: {sched} overlap "
+                  f"{ov[sched]*1e3:.2f} ms > end "
+                  f"{end[sched]*1e3:.2f} ms * {OVERLAP_SLACK}")
+    if not bad:
+        print("# RANKING OK")
+    if args.assert_ranking and bad:
+        sys.exit(1)
+    return sim, ov
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--stages", type=int, default=8)
@@ -178,6 +288,10 @@ def main(argv=None):
     ap.add_argument("--layers", type=int, default=8)
     ap.add_argument("--runtime", default="stream",
                     choices=("ticks", "stream"))
+    ap.add_argument("--data", type=int, default=1,
+                    help="data-parallel degree; > 1 switches to the "
+                         "grad_sync 'end' vs 'overlap' exposed-sync "
+                         "report (stream runtime only)")
     ap.add_argument("--assert-ranking", action="store_true")
     args = ap.parse_args(argv)
 
@@ -187,19 +301,26 @@ def main(argv=None):
     from repro.launch.mesh import make_mesh
     from repro.pipeline import stage as ST
 
-    S, M = args.stages, args.microbatches
-    assert jax.device_count() >= S, \
-        f"need {S} devices (XLA_FLAGS fake-device mesh), " \
+    S, M, dp = args.stages, args.microbatches, args.data
+    assert jax.device_count() >= dp * S, \
+        f"need {dp * S} devices (XLA_FLAGS fake-device mesh), " \
         f"have {jax.device_count()}"
+    assert dp == 1 or args.runtime == "stream", \
+        "--data > 1 overlaps the sync in-schedule: stream runtime only"
     cfg = get_config("llama3.2-1b").reduced(n_layers=args.layers,
                                             d_model=128)
     cfg = dataclasses.replace(cfg, stages=S, tensor=1)
-    mesh = make_mesh((1, S, 1), ("data", "stage", "tensor"))
+    mesh = make_mesh((dp, S, 1), ("data", "stage", "tensor"))
     plan = ST.plan_stages(cfg)
 
     t_f, t_full, t_dx, t_dw = measure_op_durations(cfg, mesh, plan)
     print(f"# op durations (ms): F={t_f*1e3:.3f} B_full={t_full*1e3:.3f} "
           f"B_dx={t_dx*1e3:.3f} W_dw={t_dw*1e3:.3f}")
+
+    if dp > 1:
+        return grad_sync_report(args, cfg, mesh, plan, M, S, dp,
+                                t_f, t_full, t_dx, t_dw)
+
     sim = sim_makespans(M, S, t_f, t_full, t_dx, t_dw)
     meas = measured_walltimes(cfg, mesh, plan, M, runtime=args.runtime)
 

@@ -34,6 +34,11 @@ class AutoPlan:
     predicted_speedup_over_dp: float
     virtual: int = 1                 # 1F1B-I interleave depth (V)
     mem_limit: int = 0               # zb-auto peak-live cap (0 = unbounded)
+    data_axis: int = 1               # DP degree the prediction assumed
+    # non-hidden gradient-sync time inside predicted_step_time: the
+    # part of the data-axis all-reduce the drain bubble could NOT
+    # absorb (0.0 when data_axis == 1 or fully hidden)
+    predicted_sync_exposed: float = 0.0
 
     def apply(self, cfg: ArchConfig) -> ArchConfig:
         from repro.core.schedplan import canonical_name
@@ -91,7 +96,13 @@ def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
     ``s == len(devices)`` are searched, and the explorer ranks the
     candidates by the scheduled heterogeneous makespan of the
     per-device cost vector (uneven layer split + cost-shaped zb-auto
-    tables)."""
+    tables).
+
+    With ``data_axis > 1`` candidates are ranked by the *overlapped*
+    makespan: compute plus only the exposed (non-bubble-hidden) part
+    of the data-parallel gradient sync, per-stage buckets scheduled
+    into the drain the way the AR-op runtime executes them
+    (``predicted_sync_exposed`` reports that part)."""
     prof = profile_arch(cfg, seq=seq_len)
     # per-stage workload unit = tokens per data shard
     local_batch_tokens = max(1, global_batch // data_axis) * seq_len
@@ -110,14 +121,18 @@ def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
             ms = [m for m in ms if m <= max_microbatches] or ms[:1]
         r = explore(prof, cluster, local_batch_tokens,
                     candidate_Ms=[m for m in ms], consider_dp=False,
-                    mem_limit=mem_limit)
+                    mem_limit=mem_limit, dp_degree=data_axis)
         if r.plan is None:
             continue
         cand = AutoPlan(stages=s, tensor=t, n_microbatches=max(1, r.M),
                         schedule=r.schedule or "1F1B-AS",
                         predicted_step_time=r.minibatch_time,
                         predicted_speedup_over_dp=r.speedup_over_dp,
-                        virtual=r.V, mem_limit=mem_limit or 0)
+                        virtual=r.V, mem_limit=mem_limit or 0,
+                        data_axis=data_axis,
+                        predicted_sync_exposed=(
+                            r.grad_sync_eval.exposed
+                            if r.grad_sync_eval else 0.0))
         if best is None or cand.predicted_step_time < best.predicted_step_time:
             best = cand
     if best is None:

@@ -16,11 +16,12 @@ from repro.core.partition import (PartitionPlan, comm_bound, coarse_partition,
                                   intra_layer_refine, memory_fine_tune,
                                   stage_memory)
 from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
-from repro.core.schedules import (HETERO_SCHEDULES, SCHEDULES, ScheduleEval,
-                                  eval_1f1b_interleaved,
+from repro.core.schedules import (GradSyncEval, HETERO_SCHEDULES, SCHEDULES,
+                                  ScheduleEval, eval_1f1b_interleaved,
                                   eval_1f1b_interleaved_hetero,
                                   eval_1f1b_interleaved_memlean,
                                   eval_1f1b_interleaved_memlean_hetero,
+                                  eval_grad_sync, eval_grad_sync_costs,
                                   eval_zb_auto, eval_zb_auto_hetero,
                                   schedules_for)
 
@@ -45,6 +46,10 @@ class ExplorationResult:
     dp_time: float = float("inf")
     dp_feasible: bool = False
     V: int = 1                      # virtual-stage interleave depth (1F1B-I)
+    dp_degree: int = 1              # data replicas of the candidate mesh
+    # overlap-aware gradient-sync cost of the winning candidate (dp > 1
+    # only): minibatch_time already includes ``grad_sync_eval.exposed``
+    grad_sync_eval: Optional[GradSyncEval] = None
 
     @property
     def speedup_over_dp(self) -> float:
@@ -73,7 +78,9 @@ def dp_time_and_memory(prof: NetworkProfile, cluster: ClusterSpec,
         wbytes += prof.embed.bytes_weights
     if prof.head is not None:
         wbytes += prof.head.bytes_weights
-    link = min(d.link_bandwidth for d in cluster.devices)
+    # the gradient buckets ride the data-axis links, not the pipeline
+    # boundary (per-axis bandwidth table in hardware.py)
+    link = cluster.axis_bandwidth("data")
     allreduce = 2.0 * (N - 1) / N * wbytes / link if N > 1 else 0.0
     t_total = slowest + allreduce
     act = sum(l.bytes_act_out for l in prof.layers) * per_dev
@@ -104,7 +111,8 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
             consider_dp: bool = True,
             candidate_Vs: Sequence[int] = (2, 4),
             mem_limit: Optional[int] = None,
-            hetero: bool = True) -> ExplorationResult:
+            hetero: bool = True,
+            dp_degree: int = 1) -> ExplorationResult:
     """Run the full BaPipe exploration and return the chosen plan.
 
     With ``hetero`` (the default) the V=1 async candidates are ranked by
@@ -139,8 +147,20 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
     ZB-H1 halves the drain term at exactly 1F1B's window — so the
     explorer lands on the fastest entry whose features row fits the
     devices.
+
+    ``dp_degree`` is the number of data replicas of the candidate mesh
+    (``minibatch`` stays per-replica).  With ``dp_degree > 1`` every
+    candidate additionally pays its gradient synchronisation over the
+    ``data`` axis — but only the *exposed* part: the per-stage buckets
+    are scheduled into the drain bubble (:func:`eval_grad_sync` /
+    :func:`eval_grad_sync_costs`, the AR op model the simulator
+    replays), so a bubbled schedule hides most of its sync and the DP
+    degree enters the ranking honestly instead of as a flat
+    ``sum(ar)`` tax.
     """
     N = cluster.n
+    if dp_degree < 1:
+        raise ValueError(f"dp_degree must be >= 1, got {dp_degree}")
     dp_t, dp_mem, dp_ok = dp_time_and_memory(prof, cluster, minibatch)
     async_ok = all(d.async_capable for d in cluster.devices)
     scheds = schedules_for(async_ok)
@@ -226,11 +246,28 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
                     spill = max(m - d.memory_capacity
                                 for m, d in zip(mem, cluster.devices))
                     t += M * spill / spill_bw
+                gs = None
+                if dp_degree > 1:
+                    # per-stage bucket time: ring RS+AG of the stage's
+                    # gradient bytes over the data-axis links
+                    data_bw = cluster.axis_bandwidth("data")
+                    ar_vec = [2.0 * (dp_degree - 1) / dp_degree
+                              * c.weight_bytes / data_bw
+                              for c in plan.device_costs()]
+                    ml = mem_limit if sched == "ZB-AUTO" else None
+                    if hetero and V == 1 and costs is not None:
+                        gs = eval_grad_sync_costs(sched, M, N, costs,
+                                                  ar_vec, mem_limit=ml)
+                    else:
+                        gs = eval_grad_sync(sched, M, N, F, B, ar_vec,
+                                            V=V, mem_limit=ml)
+                    t += gs.exposed
                 cand = ExplorationResult(
                     mode="pipeline", schedule=sched, M=M, microbatch=mb,
                     plan=plan, minibatch_time=t,
                     per_stage_memory=mem, feasible=True, sched_eval=ev,
-                    dp_time=dp_t, dp_feasible=dp_ok, V=V)
+                    dp_time=dp_t, dp_feasible=dp_ok, V=V,
+                    dp_degree=dp_degree, grad_sync_eval=gs)
                 if best is None or cand.minibatch_time < best.minibatch_time \
                         * 0.999:
                     best = cand

@@ -34,10 +34,30 @@ class DeviceSpec:
     efficiency: float = 0.5
     # Second-tier memory for weight spill (FPGA DDR).  0 => hard limit.
     spill_bandwidth: float = 0.0
+    # Per-mesh-axis link bandwidths, bytes/s (0.0 = fall back to the
+    # scalar ``link_bandwidth``).  The three axes carry different
+    # traffic: ``stage`` the pipeline boundary activations/errors,
+    # ``data`` the gradient all-reduce buckets, ``tensor`` the
+    # per-layer collective ops.  On real topologies they are different
+    # links (e.g. intra-host ICI/NVLink for tensor, inter-host DCN for
+    # data), so the explorer's AR cost must not read the stage link.
+    data_bandwidth: float = 0.0
+    stage_bandwidth: float = 0.0
+    tensor_bandwidth: float = 0.0
 
     @property
     def effective_flops(self) -> float:
         return self.peak_flops * self.efficiency
+
+    def axis_bandwidth(self, axis: str) -> float:
+        """Link bandwidth of one mesh axis (``data``/``stage``/
+        ``tensor``), falling back to the scalar ``link_bandwidth``
+        when the per-axis entry is unset."""
+        try:
+            bw = getattr(self, f"{axis}_bandwidth")
+        except AttributeError:
+            raise ValueError(f"unknown mesh axis {axis!r}") from None
+        return bw if bw > 0.0 else self.link_bandwidth
 
 
 # ---------------------------------------------------------------------------
@@ -53,6 +73,11 @@ TPU_V5E = DeviceSpec(
     link_bandwidth=50 * GBps,   # per ICI link
     async_capable=True,         # XLA async collectives overlap with compute
     efficiency=0.55,
+    # stage/tensor neighbours sit on the intra-pod ICI torus; the data
+    # (DP replica) axis typically crosses pods over DCN at half the rate
+    data_bandwidth=25 * GBps,
+    stage_bandwidth=50 * GBps,
+    tensor_bandwidth=50 * GBps,
 )
 
 # NVIDIA V100 16GB (paper's GPU cluster), PCIe Gen3 x16 interconnect.
@@ -64,6 +89,11 @@ V100 = DeviceSpec(
     link_bandwidth=13 * GBps,   # PCIe gen3 x16 effective
     async_capable=False,        # paper: GPUs compute/communicate synchronously
     efficiency=0.35,
+    # DP replicas of a V100 cluster talk across hosts (paper's setup):
+    # the gradient buckets ride the NIC, not the intra-host PCIe switch
+    data_bandwidth=12.5 * GBps,
+    stage_bandwidth=13 * GBps,
+    tensor_bandwidth=13 * GBps,
 )
 
 def _fpga(name: str, dsp: int, onchip_mb: float, ddr_gbps: float,
@@ -109,6 +139,12 @@ class ClusterSpec:
         """Bandwidth of the link between stage i and stage i+1 (min of ends)."""
         return min(self.devices[i].link_bandwidth,
                    self.devices[i + 1].link_bandwidth)
+
+    def axis_bandwidth(self, axis: str) -> float:
+        """Cluster-wide bandwidth of one mesh axis: the slowest
+        device's entry bounds the collective (ring all-reduce moves at
+        the slowest link)."""
+        return min(d.axis_bandwidth(axis) for d in self.devices)
 
 
 def homogeneous_cluster(dev: DeviceSpec, n: int) -> ClusterSpec:

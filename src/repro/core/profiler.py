@@ -172,11 +172,15 @@ def _analytic_w_frac(flops_fwd: float, flops_wgrad: float) -> float:
 
 def layer_kind(cfg: ArchConfig, layer_idx: int) -> str:
     """Timing kind of layer ``layer_idx`` for the measured B/W split:
-    ``"moe"`` for expert-FFN layers (past ``first_k_dense``), ``"dense"``
-    otherwise.  SSM/hybrid trunks time as ``"dense"`` — their scan has no
-    dL/dw, same as the attention span work the dense proxy carries."""
+    ``"moe"`` for expert-FFN layers (past ``first_k_dense``), ``"ssm"``
+    for pure state-space trunks (associative-scan recurrence in place of
+    attention), ``"dense"`` otherwise.  Hybrid trunks time as
+    ``"dense"`` — their attention dominates the no-dL/dw share and the
+    dense proxy's softmax term stands in for the scan."""
     if cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense:
         return "moe"
+    if cfg.family == "ssm":
+        return "ssm"
     return "dense"
 
 
@@ -359,22 +363,32 @@ def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
     (``kind="moe"``) a router GEMM plus the config's shared + top-k
     expert GEMMs run under dense routing with top-k gate masking (every
     expert executes, gates zero the unpicked ones — the static-shape
-    timing proxy for token dropping-free MoE).  The full vjp computes
-    both cotangents; the input-only vjp (parameters closed over) skips
-    every dL/dw GEMM — the timing excess is the weight-gradient share.
+    timing proxy for token dropping-free MoE).  ``kind="ssm"`` swaps
+    the attention for the state-space mixer: in/out projection GEMMs
+    around a gated linear recurrence run as a
+    ``jax.lax.associative_scan`` — the scan combine holds no
+    parameters, so like the softmax span work its vjp has no dL/dw and
+    only the projections contribute to the W half.  The full vjp
+    computes both cotangents; the input-only vjp (parameters closed
+    over) skips every dL/dw GEMM — the timing excess is the
+    weight-gradient share.
 
     Returns ``w_frac`` in (0, 1), or ``None`` when timing is
     unavailable or degenerate (no jax, ``kind="moe"`` without an MoE
-    config, or noise pushes the ratio out of (0.02, 0.98)) — callers
-    fall back to the per-layer analytic split."""
+    config, ``kind="ssm"`` without an SSM config, or noise pushes the
+    ratio out of (0.02, 0.98)) — callers fall back to the per-layer
+    analytic split."""
     try:
         import jax
         import jax.numpy as jnp
     except Exception:
         return None
-    if kind not in ("dense", "moe"):
-        raise ValueError(f"kind must be 'dense' or 'moe', got {kind!r}")
+    if kind not in ("dense", "moe", "ssm"):
+        raise ValueError(f"kind must be 'dense', 'moe' or 'ssm', "
+                         f"got {kind!r}")
     if kind == "moe" and cfg.moe is None:
+        return None
+    if kind == "ssm" and cfg.ssm is None:
         return None
     try:
         d = max(32, min(cfg.d_model, 256))
@@ -383,10 +397,34 @@ def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
         key = jax.random.PRNGKey(0)
         ks = jax.random.split(key, 10)
         scale = 1.0 / math.sqrt(d)
-        p0 = {"wq": jax.random.normal(ks[0], (d, d)) * scale,
-              "wk": jax.random.normal(ks[1], (d, d)) * scale,
-              "wv": jax.random.normal(ks[2], (d, d)) * scale,
-              "wo": jax.random.normal(ks[3], (d, d)) * scale}
+        if kind == "ssm":
+            s_ = cfg.ssm
+            di = max(d, min(s_.expand * d, 2 * d))
+            p0 = {"w_in": jax.random.normal(ks[0], (d, 3 * di)) * scale,
+                  "w_out": jax.random.normal(ks[3], (di, d)) * scale}
+
+            def mix(p, x):
+                xi, a_raw, z = jnp.split(x @ p["w_in"], 3, axis=-1)
+                a = jax.nn.sigmoid(a_raw)      # decay in (0, 1)
+
+                def comb(l, r):
+                    # h_t = a_t * h_{t-1} + x_t as a monoid over
+                    # (decay, state) pairs — parameter-free, so its
+                    # vjp contributes only to the B (input-grad) half
+                    return (l[0] * r[0], r[0] * l[1] + r[1])
+
+                _, h = jax.lax.associative_scan(comb, (a, xi), axis=0)
+                return (h * jax.nn.silu(z)) @ p["w_out"]
+        else:
+            p0 = {"wq": jax.random.normal(ks[0], (d, d)) * scale,
+                  "wk": jax.random.normal(ks[1], (d, d)) * scale,
+                  "wv": jax.random.normal(ks[2], (d, d)) * scale,
+                  "wo": jax.random.normal(ks[3], (d, d)) * scale}
+
+            def mix(p, x):
+                q, k, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
+                s = jax.nn.softmax(q @ k.T * scale, axis=-1)
+                return (s @ v) @ p["wo"]
         if kind == "moe":
             m = cfg.moe
             ne = max(2, min(4, m.n_shared + m.n_routed))
@@ -404,6 +442,10 @@ def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
                 y = jax.nn.silu(jnp.einsum("sd,edf->esf", h, p["we1"]))
                 y = jnp.einsum("esf,efd->esd", y, p["we2"])
                 return jnp.einsum("se,esd->sd", gates, y)
+        elif kind == "ssm" and not cfg.d_ff:
+            # pure-Mamba blocks are mixer-only (no FFN)
+            def ffn(p, h):
+                return h
         else:
             p0.update(w1=jax.random.normal(ks[4], (d, ff)) * scale,
                       w2=jax.random.normal(ks[5], (ff, d)) * scale)
@@ -414,10 +456,7 @@ def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
         x = jax.random.normal(ks[7], (seq, d))
 
         def block(p, x):
-            q, k, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
-            s = jax.nn.softmax(q @ k.T * scale, axis=-1)
-            o = (s @ v) @ p["wo"]
-            return ffn(p, o)
+            return ffn(p, mix(p, x))
 
         ct = jnp.ones((seq, d))
 

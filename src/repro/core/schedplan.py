@@ -212,8 +212,16 @@ class Op:
     ``v`` of a device.  ``vstage`` is the global virtual-stage index; the
     send/recv edges are the stage-boundary transfers the op participates
     in (``None`` at the chain ends; ``W`` never transfers — it only
-    consumes the residual and cotangent its ``B`` left behind)."""
-    kind: str                       # "F" | "B" | "W"
+    consumes the residual and cotangent its ``B`` left behind).
+
+    ``AR`` is the data-parallel gradient synchronisation of one
+    parameter bucket (chunk ``v``'s stage-layer group): a bucketed
+    reduce-scatter/all-gather over the ``data`` mesh axis, ready as soon
+    as the device's last B/W for the bucket has retired (``m`` is always
+    0 — the bucket sums over micro-batches).  AR never touches the
+    stage-boundary rings; it rides the shared data-axis fabric instead,
+    so ``send_to``/``recv_from`` are None."""
+    kind: str                       # "F" | "B" | "W" | "AR"
     m: int                          # micro-batch index
     v: int                          # chunk index on this device (0..V-1)
     device: int                     # physical device n (0..N-1)
@@ -229,7 +237,7 @@ class Op:
         """Virtual stage this op's output is sent to (forward: activation
         to vstage+1; backward: error to vstage-1)."""
         last = self.n_stages * self.n_chunks - 1
-        if self.kind == "W":
+        if self.kind in ("W", "AR"):
             return None
         if self.kind == "F":
             return self.vstage + 1 if self.vstage < last else None
@@ -239,7 +247,7 @@ class Op:
     def recv_from(self) -> Optional[int]:
         """Virtual stage this op's input arrives from."""
         last = self.n_stages * self.n_chunks - 1
-        if self.kind == "W":
+        if self.kind in ("W", "AR"):
             return None
         if self.kind == "F":
             return self.vstage - 1 if self.vstage > 0 else None
@@ -262,12 +270,21 @@ class SchedPlan:
         input-gradient (B) and weight-gradient (W) ops."""
         return any(op.kind == "W" for op in self.device_ops[0])
 
+    @property
+    def has_grad_sync(self) -> bool:
+        """True when the plan schedules the data-parallel gradient sync
+        as explicit AR ops (see :func:`add_grad_sync`)."""
+        return any(op.kind == "AR"
+                   for ops in self.device_ops for op in ops)
+
     def validate(self) -> "SchedPlan":
         """Every (m, chunk) F and B — and W, for zero-bubble plans —
         appears exactly once per device, and the per-(m, v) order is
-        F before B before W."""
+        F before B before W.  AR ops (grad-sync plans) are one per
+        (device, chunk), each after the bucket's last B/W."""
         has_w = self.has_w
         per_mv = (3 if has_w else 2)
+        release = "W" if has_w else "B"
         for n, ops in enumerate(self.device_ops):
             seen: dict[tuple[str, int, int], int] = {}
             for i, op in enumerate(ops):
@@ -276,10 +293,24 @@ class SchedPlan:
                     raise ValueError(f"{self.name}: duplicate {key} on "
                                      f"device {n}")
                 seen[key] = i
-            if len(ops) != per_mv * self.M * self.V:
+            n_ar = sum(1 for op in ops if op.kind == "AR")
+            if n_ar not in (0, self.V):
                 raise ValueError(
-                    f"{self.name}: device {n} has {len(ops)} ops, expected "
-                    f"{per_mv * self.M * self.V}")
+                    f"{self.name}: device {n} has {n_ar} AR ops, expected "
+                    f"0 or one per chunk ({self.V})")
+            if n_ar:
+                last_release = {
+                    op.v: i for i, op in enumerate(ops)
+                    if op.kind == release}
+                for i, op in enumerate(ops):
+                    if op.kind == "AR" and i < last_release.get(op.v, -1):
+                        raise ValueError(
+                            f"{self.name}: AR(v={op.v}) on device {n} "
+                            f"before the bucket's last {release}")
+            if len(ops) - n_ar != per_mv * self.M * self.V:
+                raise ValueError(
+                    f"{self.name}: device {n} has {len(ops) - n_ar} "
+                    f"compute ops, expected {per_mv * self.M * self.V}")
             for (kind, m, v), i in seen.items():
                 if kind == "B" and seen[("F", m, v)] > i:
                     raise ValueError(f"{self.name}: B({m},{v}) before its F "
@@ -736,13 +767,40 @@ def canonical_name(name: str) -> str:
     return _ALIASES[name][0]
 
 
+def add_grad_sync(plan: SchedPlan) -> SchedPlan:
+    """Append the data-parallel gradient-sync AR ops to a compute plan:
+    one AR per (device, chunk) parameter bucket, issued after the
+    device's compute drains, earliest-retired bucket first.  The bucket
+    for chunk v is ready the moment its last B/W retires — per-stage
+    readiness, so stage N-1 (whose backward chain finishes first) syncs
+    earliest and stage 0 last; the tick assignment then packs the AR
+    slots into the remaining drain ticks, one bucket in flight at a
+    time on the shared data-axis fabric (see ``_assign_ticks``)."""
+    if plan.has_grad_sync:
+        return plan
+    release = "W" if plan.has_w else "B"
+    device_ops = []
+    for n, ops in enumerate(plan.device_ops):
+        last_release = {}
+        for i, op in enumerate(ops):
+            if op.kind == release:
+                last_release[op.v] = i
+        order = sorted(last_release, key=last_release.get)
+        ars = tuple(Op("AR", 0, v, n, plan.N, plan.V) for v in order)
+        device_ops.append(tuple(ops) + ars)
+    return dataclasses.replace(
+        plan, device_ops=tuple(device_ops)).validate()
+
+
 def build_schedule(name: str, M: int, N: int, V: int = 1,
-                   mem_limit=None) -> SchedPlan:
+                   mem_limit=None, grad_sync: bool = False) -> SchedPlan:
     """Build the op table for a schedule by canonical or legacy name.
     ``mem_limit`` is the automatic zero-bubble scheduler's peak-live cap
     (``zb-auto`` only: None = unbounded, int = uniform, sequence =
     per-device); other schedules' memory behaviour is fixed by their
-    table and the knob is rejected."""
+    table and the knob is rejected.  ``grad_sync=True`` appends the
+    data-parallel gradient-sync AR ops (:func:`add_grad_sync`) so the
+    sync is scheduled into the drain instead of paid after it."""
     builder, kw = _ALIASES.get(name, (None, None))
     if builder is None:
         raise ValueError(name)
@@ -754,7 +812,8 @@ def build_schedule(name: str, M: int, N: int, V: int = 1,
             raise ValueError(f"mem_limit only applies to zb-auto "
                              f"(got {name})")
         kw = dict(kw, mem_limit=mem_limit)
-    return _BUILDERS[builder](M, N, V, **kw)
+    plan = _BUILDERS[builder](M, N, V, **kw)
+    return add_grad_sync(plan) if grad_sync else plan
 
 
 def resolve_ring_schedule(schedule: str, V: int) -> str:
@@ -916,8 +975,10 @@ def lower_to_ring(plan: SchedPlan) -> RingLowering:
 # runtime's per-device per-tick lookup arrays.
 # ---------------------------------------------------------------------------
 
-# op-kind codes of the tick tables (the runtime's lax.switch branch index)
-TICK_IDLE, TICK_F, TICK_B, TICK_B_SEED, TICK_W = range(5)
+# op-kind codes of the tick tables (the runtime's lax.switch branch index;
+# TICK_AR is not a switch branch — the stream runtime runs the bucket
+# reduce-scatter/all-gather outside the switch, gated per slot)
+TICK_IDLE, TICK_F, TICK_B, TICK_B_SEED, TICK_W, TICK_AR = range(6)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -936,9 +997,12 @@ class TickLowering:
 
     Tables (each ``[N][n_ticks]``; -1 = not applicable this tick):
 
-    * ``kind``  — TICK_IDLE / TICK_F / TICK_B / TICK_B_SEED / TICK_W.
-      TICK_B_SEED sits on the last virtual stage: its cotangent is
-      seeded by the per-micro-batch loss head, not the ring.
+    * ``kind``  — TICK_IDLE / TICK_F / TICK_B / TICK_B_SEED / TICK_W /
+      TICK_AR.  TICK_B_SEED sits on the last virtual stage: its
+      cotangent is seeded by the per-micro-batch loss head, not the
+      ring.  TICK_AR (grad-sync plans only) marks the tick a device's
+      chunk-``v`` gradient bucket crosses the data-axis fabric; it is
+      not a compute branch — ``m`` is 0 and ``v`` is the bucket.
     * ``m`` / ``v`` — micro-batch and chunk of the tick's op.
     * ``xw`` — residual-stash slot an F writes its stage input to.
     * ``xr`` — residual-stash slot a B/W reads (released by the last
@@ -988,18 +1052,30 @@ def _assign_ticks(plan: SchedPlan):
     """Greedy in-order synchronous scheduling: at each tick every device
     runs its next op if the op's inputs were produced at a strictly
     earlier tick (one-tick neighbour hops), else stalls.  Returns
-    (f_tick, b_tick, w_tick, n_ticks) keyed by (m, vstage)."""
+    (f_tick, b_tick, w_tick, ar_tick, n_ticks) keyed by (m, vstage).
+
+    AR (gradient-sync) ops ride the shared data-axis fabric: at most
+    one bucket is in flight per tick across ALL devices (every stage
+    group's all-reduce crosses the same data-axis links — DAPPLE's
+    contention argument), so a ready AR stalls while another device's
+    bucket occupies the fabric.  Devices are scanned highest-first so
+    stage N-1 — whose backward chain drains first — wins fabric ties;
+    the scan order cannot change F/B/W placement because an op placed
+    at tick t never enables another op at the same tick (all readiness
+    tests are against strictly earlier ticks)."""
     M, N, NS = plan.M, plan.N, plan.N * plan.V
     f_tick: dict = {}
     b_tick: dict = {}
     w_tick: dict = {}
+    ar_tick: dict = {}
     ptr = [0] * N
     total = sum(len(ops) for ops in plan.device_ops)
     placed = 0
     t = 0
     while placed < total:
         progressed = False
-        for n in range(N):
+        fabric_used = False
+        for n in reversed(range(N)):
             if ptr[n] >= len(plan.device_ops[n]):
                 continue
             op = plan.device_ops[n][ptr[n]]
@@ -1015,10 +1091,16 @@ def _assign_ticks(plan: SchedPlan):
                     ok = (key in f_tick
                           and (op.m, op.vstage + 1) in b_tick
                           and b_tick[(op.m, op.vstage + 1)] + 1 <= t)
-            else:                       # W: any time after its own B
+            elif op.kind == "W":        # W: any time after its own B
                 ok = key in b_tick and b_tick[key] + 1 <= t
+            else:                       # AR: bucket retired (in-order
+                ok = not fabric_used    # ptr) + data fabric free
             if ok:
-                {"F": f_tick, "B": b_tick, "W": w_tick}[op.kind][key] = t
+                tick_of = {"F": f_tick, "B": b_tick,
+                           "W": w_tick, "AR": ar_tick}[op.kind]
+                tick_of[key] = t
+                if op.kind == "AR":
+                    fabric_used = True
                 ptr[n] += 1
                 placed += 1
                 progressed = True
@@ -1028,7 +1110,7 @@ def _assign_ticks(plan: SchedPlan):
                 f"{total - placed} ops unplaced (pointers {ptr}) — the op "
                 f"table has a cyclic cross-device dependency")
         t += 1
-    return f_tick, b_tick, w_tick, t
+    return f_tick, b_tick, w_tick, ar_tick, t
 
 
 def _alloc_slots(intervals):
@@ -1056,7 +1138,7 @@ def lower_to_ticks(plan: SchedPlan) -> TickLowering:
     M, N, V = plan.M, plan.N, plan.V
     NS = N * V
     has_w = plan.has_w
-    f_tick, b_tick, w_tick, n_ticks = _assign_ticks(plan)
+    f_tick, b_tick, w_tick, ar_tick, n_ticks = _assign_ticks(plan)
     release = w_tick if has_w else b_tick
 
     def dev_of(vs: int) -> int:
@@ -1159,6 +1241,11 @@ def lower_to_ticks(plan: SchedPlan) -> TickLowering:
         v_t[n][t] = vs // N
         xr[n][t] = xslot[(m, vs)]
         cr[n][t] = cslot[(m, vs)]
+    for (m, vs), t in ar_tick.items():
+        n = dev_of(vs)
+        kind[n][t] = TICK_AR
+        m_t[n][t] = m
+        v_t[n][t] = vs // N
 
     frz = lambda rows: tuple(tuple(r) for r in rows)
     return TickLowering(
@@ -1175,10 +1262,11 @@ def lower_to_ticks(plan: SchedPlan) -> TickLowering:
 # per-device instruction streams (RUN / SEND / RECV / FREE).
 # ---------------------------------------------------------------------------
 
-# instruction opcodes (the Alpa-style decentralized runtime vocabulary)
-INSTR_RUN, INSTR_SEND, INSTR_RECV, INSTR_FREE = range(4)
+# instruction opcodes (the Alpa-style decentralized runtime vocabulary);
+# ARSYNC is the bucketed data-parallel gradient reduce-scatter/all-gather
+INSTR_RUN, INSTR_SEND, INSTR_RECV, INSTR_FREE, INSTR_AR = range(5)
 
-_INSTR_NAMES = ("RUN", "SEND", "RECV", "FREE")
+_INSTR_NAMES = ("RUN", "SEND", "RECV", "FREE", "ARSYNC")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1196,6 +1284,9 @@ class Instr:
     * ``FREE`` — release register ``idx`` of buffer ``buf`` ("x" residual
       stash, "f"/"b" forward/backward inbox, "c" zero-bubble cotangent):
       the allocator may now reuse it.
+    * ``ARSYNC`` — reduce-scatter + all-gather chunk ``v``'s gradient
+      bucket over the ``data`` mesh axis (grad-sync plans only); one
+      bucket in flight per slot across all devices.
 
     ``slot`` is the global program-counter value the instruction executes
     at — devices with shorter streams simply have no instructions at
@@ -1213,8 +1304,10 @@ class Instr:
     def __repr__(self):
         core = f"{_INSTR_NAMES[self.op]}@{self.slot}"
         if self.op == INSTR_RUN:
-            k = ("IDLE", "F", "B", "Bseed", "W")[self.kind]
+            k = ("IDLE", "F", "B", "Bseed", "W", "AR")[self.kind]
             return f"{core} {k}(m={self.m}, v={self.v})"
+        if self.op == INSTR_AR:
+            return f"{core} bucket(v={self.v})"
         if self.op in (INSTR_SEND, INSTR_RECV):
             tgt = "direct" if self.idx < 0 else f"inbox[{self.idx}]"
             return (f"{core} {self.ring}" +
@@ -1239,15 +1332,21 @@ class InstrLowering:
     the tick lowering's register allocation, i.e. still sized by
     ``peak_live()``.
 
-    ``slot_of`` maps ``(kind, m, vstage)`` (kind "F"/"B"/"W") to the
-    op's slot — the execution order the differential tests compare
+    ``slot_of`` maps ``(kind, m, vstage)`` (kind "F"/"B"/"W"/"AR") to
+    the op's slot — the execution order the differential tests compare
     against the discrete-event simulator's event order.
+
+    ``arsync[j]`` is True when ANY device runs an ARSYNC at slot j (at
+    most one does — the shared-fabric rule): the runtime's per-slot
+    gate on the gradient-bucket collective, uniform across the mesh
+    like ``fsend``/``bsend``.
     """
     ticks: TickLowering
     streams: tuple[tuple[Instr, ...], ...]
     fsend: tuple[bool, ...]
     bsend: tuple[bool, ...]
     slot_of: dict
+    arsync: tuple[bool, ...] = ()
 
     @property
     def schedule(self) -> str:
@@ -1285,6 +1384,7 @@ def lower_to_instructions(plan: SchedPlan) -> InstrLowering:
     has_w = ticks.has_w
     fsend = [False] * nT
     bsend = [False] * nT
+    arsync = [False] * nT
     slot_of: dict = {}
     streams = []
     for n in range(N):
@@ -1302,6 +1402,11 @@ def lower_to_instructions(plan: SchedPlan) -> InstrLowering:
             v = ticks.v[n][t]
             vs = v * N + n
             m = ticks.m[n][t]
+            if k == TICK_AR:
+                slot_of[("AR", m, vs)] = t
+                instrs.append(Instr(INSTR_AR, t, kind=k, m=m, v=v))
+                arsync[t] = True
+                continue
             if k == TICK_F:
                 slot_of[("F", m, vs)] = t
                 if ticks.fsrc[n][t] == 1:
@@ -1335,4 +1440,4 @@ def lower_to_instructions(plan: SchedPlan) -> InstrLowering:
         streams.append(tuple(instrs))
     return InstrLowering(ticks=ticks, streams=tuple(streams),
                          fsend=tuple(fsend), bsend=tuple(bsend),
-                         slot_of=slot_of)
+                         slot_of=slot_of, arsync=tuple(arsync))

@@ -733,3 +733,147 @@ def schedules_for(async_capable: bool) -> tuple[str, ...]:
     V-times-denser boundary traffic, so they are offered to async-capable
     clusters only."""
     return ASYNC_SCHEDULES if async_capable else SYNC_SCHEDULES
+
+
+# ---------------------------------------------------------------------------
+# Overlapped data-parallel gradient synchronisation (the AR op kind).
+#
+# With pipeline x data parallelism every stage group runs its own
+# gradient all-reduce over the data axis, and all of them cross the SAME
+# data-axis links — DAPPLE's contention argument — so the fabric is one
+# shared serial resource.  The sync-at-end baseline (the monolithic
+# trailing psum) releases every device's bucket at the drain barrier:
+#
+#     sequential = T + sum_n ar_n,        T = max_n T_n
+#
+# where T_n is device n's compute end and ar_n its bucket's fabric time.
+# Scheduling each AR at its own release T_n instead (the schedule-plan
+# AR ops) makes the sync a single-machine schedule with release times,
+# whose makespan has a closed form: sort the ends ascending,
+#
+#     overlapped = max_j ( T_(j) + sum_{k >= j} ar_(k) )
+#
+# (any work-conserving grant order gives the same value).  Since every
+# release is <= T, overlapped <= sequential ALWAYS, with equality
+# exactly when every device drains at the same instant (zero tail
+# stagger) — any bubbled builder's staggered drain strictly wins, and
+# the schedules that already erased their bubble (the zero-bubble
+# family) have the least stagger left to hide the sync in.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GradSyncEval:
+    """Overlap-aware gradient-sync cost of one (schedule, ar) pair.
+    ``exposed`` is the non-hidden sync time the mini-batch actually
+    pays beyond the compute makespan; ``hidden`` is what the bubble
+    absorbed versus the sync-at-end baseline."""
+    name: str
+    compute_makespan: float        # T: drain end without any sync
+    overlapped: float              # makespan with scheduled AR ops
+    sequential: float              # sync-at-end baseline: T + sum(ar)
+    t_ends: tuple[float, ...]      # per-device compute end times
+    ars: tuple[float, ...]         # per-device bucket fabric times
+
+    @property
+    def exposed(self) -> float:
+        return self.overlapped - self.compute_makespan
+
+    @property
+    def hidden(self) -> float:
+        return self.sequential - self.overlapped
+
+
+def grad_sync_fifo(t_ends, ars) -> float:
+    """Makespan of the per-stage gradient buckets on the shared
+    data-axis fabric: bucket n is released at its device's compute end
+    ``t_ends[n]`` and occupies the fabric for ``ars[n]``.  Serves in
+    release order (highest device first on ties, matching the tick
+    lowering); the makespan is grant-order independent for any
+    work-conserving order, and equals the closed form
+    ``max_j (T_(j) + sum_{k>=j} ar_(k))`` over ascending-sorted ends."""
+    busy = 0.0
+    for end, _, a in sorted(
+            (e, -n, a) for n, (e, a) in enumerate(zip(t_ends, ars))):
+        busy = max(busy, end) + a
+    return busy
+
+
+def _uniform_drain_ends(name: str, M: int, N: int, F: float, B: float,
+                        w_frac: float) -> tuple[float, ...] | None:
+    """Closed-form per-device compute end times under uniform costs.
+
+    The last op of device n in every early-backward V=1 schedule is the
+    tail of micro-batch M-1's backward chain, which recrosses the
+    stages at the full backward per hop (gpipe/1f1b/dapple) or at the
+    input-gradient half per hop with the final W tucked right behind
+    it (zb-h1), so the drain is staggered: ``T_n = T - n * stagger``.  Returns None
+    for schedules whose drain has no simple uniform form (the zb-h2 /
+    zb-auto banked-W tables, interleaved chunk passes) — callers fall
+    back to the discrete-event replay."""
+    from repro.core.schedplan import canonical_name
+    cname = canonical_name(name)
+    if cname in ("gpipe", "1f1b", "dapple"):
+        T = (M + N - 1) * (F + B)
+        return tuple(T - n * B for n in range(N))
+    if cname == "zb-h1":
+        Bx = B * (1.0 - w_frac)    # input-gradient half: the drain hop
+        T = M * (F + B) + (N - 1) * (F + Bx)
+        return tuple(T - n * Bx for n in range(N))
+    return None
+
+
+def eval_grad_sync(name: str, M: int, N: int, F: float, B: float,
+                   ar, w_frac: float = 0.5, V: int = 1,
+                   mem_limit=None) -> GradSyncEval:
+    """Overlap-aware closed form for the exposed gradient-sync time of
+    a schedule under uniform per-device costs.  ``ar`` is the
+    per-device bucket fabric time (scalar or length-N).  Uses the
+    analytic drain ends where the uniform form exists
+    (:func:`_uniform_drain_ends`) and the discrete-event replay
+    otherwise; the two agree for every builder (differentially
+    tested)."""
+    ars = tuple([float(ar)] * N if isinstance(ar, (int, float))
+                else [float(a) for a in ar])
+    if len(ars) != N:
+        raise ValueError(f"ar needs one entry per device ({N}), "
+                         f"got {len(ars)}")
+    ends = _uniform_drain_ends(name, M, N, F, B, w_frac) if V == 1 else None
+    if ends is None:
+        from repro.core.schedplan import build_schedule
+        from repro.core.simulator import simulate
+        plan = build_schedule(name, M, N, V, mem_limit=mem_limit)
+        sim = simulate(plan, M, N, F, B, 0.0, V=V, w_frac=w_frac)
+        ends = tuple(sim.t_end)
+    T = max(ends)
+    return GradSyncEval(
+        name=name, compute_makespan=T,
+        overlapped=grad_sync_fifo(ends, ars),
+        sequential=T + sum(ars), t_ends=ends, ars=ars)
+
+
+def eval_grad_sync_costs(name: str, M: int, N: int, costs: StageCosts,
+                         ar, mem_limit=None) -> GradSyncEval:
+    """Heterogeneous form of :func:`eval_grad_sync`: per-device drain
+    ends from the cost-shaped replay (:func:`_replay_hetero`), so the
+    exposed sync the explorer ranks by matches what the simulator pins
+    on skewed clusters."""
+    ars = tuple([float(ar)] * N if isinstance(ar, (int, float))
+                else [float(a) for a in ar])
+    if len(ars) != N:
+        raise ValueError(f"ar needs one entry per device ({N}), "
+                         f"got {len(ars)}")
+    _, sim = _replay_hetero(canonical_replay_name(name), M, N, costs,
+                            mem_limit=mem_limit)
+    ends = tuple(sim.t_end)
+    T = max(ends)
+    return GradSyncEval(
+        name=name, compute_makespan=T,
+        overlapped=grad_sync_fifo(ends, ars),
+        sequential=T + sum(ars), t_ends=ends, ars=ars)
+
+
+def canonical_replay_name(name: str) -> str:
+    """Builder name for a schedule-table name (the grad-sync evals
+    accept both the Table-1 names and the canonical builder names)."""
+    from repro.core.schedplan import canonical_name
+    return canonical_name(name)

@@ -31,6 +31,17 @@ design point) and ``zb-auto`` the automatic scheduler's table;
 cost-/cap-parameterised auto tables are replayed by passing the prebuilt
 :class:`~repro.core.schedplan.SchedPlan` as ``schedule``.
 
+Gradient synchronisation is replayable too: ``grad_sync=True`` appends
+the schedule-plan AR ops (one bucketed data-parallel reduce-scatter/
+all-gather per device chunk, ready when the bucket's last B/W retires)
+and ``ar`` gives the per-device bucket duration.  AR ops serialize on a
+single shared data-axis fabric — DAPPLE's contention argument: every
+stage group's all-reduce crosses the same data-axis links — so the
+overlapped makespan is the single-resource schedule with per-device
+release times, never worse than the sync-at-end baseline
+``makespan + sum(ar)`` and strictly better whenever the drain is
+staggered (any bubbled builder).
+
 The simulator also tracks the peak number of live micro-batch activations
 per device — the paper's "features memory" column; for W-bearing
 (zero-bubble) plans this is read off the IR's ``peak_live()`` symbolic
@@ -110,26 +121,35 @@ _DEFAULT_COMM = {
 
 
 def op_durations(N: int, V: int, Fs: Sequence[float], Bs: Sequence[float],
-                 wfs: Sequence[float], has_w: bool) -> dict:
+                 wfs: Sequence[float], has_w: bool,
+                 ars: Sequence[float] | None = None) -> dict:
     """Per-virtual-stage op durations — the single duration model shared
     by the discrete-event simulator, the instruction-stream runtime's
     timing expectations and the benchmarks.  For W-bearing plans the
     full backward ``Bs`` splits into an input-gradient ``B`` op
     (``1 - w_frac``) and a weight-gradient ``W`` op (``w_frac``); V > 1
-    divides device time evenly across the device's chunks."""
+    divides device time evenly across the device's chunks.  ``ars`` is
+    the per-device gradient-sync time (the device's whole stage bucket
+    crossing the data-axis fabric); each of the V chunk buckets costs
+    an even 1/V share."""
     NS = N * V
-    return {"F": [Fs[vs % N] / V for vs in range(NS)],
-            "B": [Bs[vs % N] / V
-                  * ((1.0 - wfs[vs % N]) if has_w else 1.0)
-                  for vs in range(NS)],
-            "W": [Bs[vs % N] / V * wfs[vs % N] for vs in range(NS)]}
+    dur = {"F": [Fs[vs % N] / V for vs in range(NS)],
+           "B": [Bs[vs % N] / V
+                 * ((1.0 - wfs[vs % N]) if has_w else 1.0)
+                 for vs in range(NS)],
+           "W": [Bs[vs % N] / V * wfs[vs % N] for vs in range(NS)]}
+    if ars is not None:
+        dur["AR"] = [ars[vs % N] / V for vs in range(NS)]
+    return dur
 
 
 def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
              F: float | Sequence[float], B: float | Sequence[float],
              SR: float | Sequence[float] = 0.0, V: int = 1,
              comm: str | None = None,
-             w_frac: float | Sequence[float] = 0.5) -> SimResult:
+             w_frac: float | Sequence[float] = 0.5,
+             ar: float | Sequence[float] | None = None,
+             grad_sync: bool = False) -> SimResult:
     """Simulate one mini-batch of M micro-batches through N devices.
 
     ``schedule`` is a schedule name (the op table is built via
@@ -152,6 +172,15 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
     ``w_frac`` is the fraction of it spent in the weight-gradient ``W``
     op (default the even split the closed forms assume), the rest in the
     input-gradient ``B`` op.
+
+    ``grad_sync=True`` appends the data-parallel gradient-sync AR ops
+    (:func:`repro.core.schedplan.add_grad_sync`) before replay; ``ar``
+    is the per-device sync duration — the device's stage gradient
+    bucket crossing the shared data-axis fabric (scalar or length-N,
+    default 0).  AR ops serialize on one fabric resource (at most one
+    bucket in flight, ready buckets granted highest-device-first) and
+    are unaffected by the stage-boundary ``comm`` model — the data
+    axis is a different set of links than the stage rings.
     """
     Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
     Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
@@ -171,6 +200,15 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
                          f"({n_hops}), got {len(SRs)}")
     if any(s < 0 for s in SRs):
         raise ValueError(f"SR must be >= 0, got {SR}")
+    ars = None
+    if ar is not None:
+        ars = (list(ar) if not isinstance(ar, (int, float))
+               else [float(ar)] * N)
+        if len(ars) != N:
+            raise ValueError(f"ar needs one entry per device ({N}), "
+                             f"got {len(ars)}")
+        if any(a < 0 for a in ars):
+            raise ValueError(f"ar must be >= 0, got {ar}")
 
     if isinstance(schedule, SP.SchedPlan):
         plan = schedule
@@ -178,12 +216,16 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
             raise ValueError(
                 f"plan {plan.name!r} is (M={plan.M}, N={plan.N}, "
                 f"V={plan.V}); simulate() was asked for ({M}, {N}, {V})")
+        if grad_sync:
+            plan = SP.add_grad_sync(plan)
         default_comm = _DEFAULT_COMM.get(plan.name, "free")
     else:
         default_comm = _DEFAULT_COMM.get(schedule)
         if default_comm is None:
             raise ValueError(schedule)
-        plan = SP.build_schedule(schedule, M, N, V)
+        plan = SP.build_schedule(schedule, M, N, V, grad_sync=grad_sync)
+    if plan.has_grad_sync and ars is None:
+        ars = [0.0] * N
     has_w = plan.has_w
     orders = [[(op.kind, op.m, op.vstage) for op in ops]
               for ops in plan.device_ops]
@@ -192,7 +234,7 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
         raise ValueError(comm)
 
     NS = N * V                                 # virtual stages
-    dur = op_durations(N, V, Fs, Bs, wfs, has_w)
+    dur = op_durations(N, V, Fs, Bs, wfs, has_w, ars)
 
     # --- task state ------------------------------------------------------
     f_done = [[-1.0] * NS for _ in range(M)]   # completion time of F[m][vs]
@@ -213,8 +255,8 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
 
     def deliver(kind: str, m: int, vs_from: int, t_prod: float):
         """Schedule the transfer of an activation/error to the neighbour."""
-        if kind == "W":
-            return None                        # weight grads stay local
+        if kind in ("W", "AR"):
+            return None                        # no stage-boundary transfer
         if kind == "F":
             if vs_from == NS - 1:
                 b_ready[m][NS - 1] = t_prod    # loss: error available locally
@@ -251,9 +293,17 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
         pending_xfer = []
 
     # --- main loop: repeatedly start the globally-earliest runnable op ----
+    # AR ops share one data-axis fabric: at most one gradient bucket in
+    # flight at a time; among equally-ready buckets the highest device
+    # (deepest stage, first to drain) goes first — matching the tick
+    # lowering's greedy grant.  Any work-conserving grant order gives
+    # the same single-resource makespan; the tie-break only pins the
+    # event order the conformance tests compare against ``slot_of``.
+    fabric_free = 0.0
+    ar_end = 0.0
     while n_done < total_ops:
         try_transfers()
-        best = None                            # (start, n, kind, m, vs)
+        best = None                            # (key, n, kind, m, vs)
         for n in range(N):
             if ptr[n] >= len(orders[n]):
                 continue
@@ -264,12 +314,15 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
                 s = max(dev_free[n], b_ready[m][vs], f_done[m][vs])
             elif kind == "W" and b_done[m][vs] >= 0:
                 s = max(dev_free[n], b_done[m][vs])
+            elif kind == "AR":
+                s = max(dev_free[n], fabric_free)
             else:
                 continue
-            if best is None or s < best[0]:
-                best = (s, n, kind, m, vs)
+            key = (s, -n if kind == "AR" else 0)
+            if best is None or key < best[0]:
+                best = (key, n, kind, m, vs)
         assert best is not None, "pipeline deadlock (bad op order)"
-        s, n, kind, m, vs = best
+        (s, _), n, kind, m, vs = best
         d = dur[kind][vs]
         end = s + d
         event_log.append((s, end, kind, m, vs))
@@ -282,8 +335,11 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
             f_done[m][vs] = end
         elif kind == "B":
             b_done[m][vs] = end
-        else:
+        elif kind == "W":
             w_done[m][vs] = end
+        else:
+            fabric_free = end
+            ar_end = max(ar_end, end)
         ptr[n] += 1
         tgt = deliver(kind, m, vs, end)
         if tgt is not None:
@@ -293,7 +349,7 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
 
     try_transfers()
     done_rows = w_done if has_w else b_done
-    makespan = max(max(r) for r in done_rows)
+    makespan = max(ar_end, max(max(r) for r in done_rows))
 
     # peak live activations per device.  W-bearing plans take the row
     # straight from the IR's symbolic replay — the schedule-plan table is
@@ -325,7 +381,9 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
 
 def simulate_costs(schedule: str | SP.SchedPlan, M: int, N: int,
                    costs: SP.StageCosts,
-                   comm: str | None = None) -> SimResult:
+                   comm: str | None = None,
+                   ar: float | Sequence[float] | None = None,
+                   grad_sync: bool = False) -> SimResult:
     """Replay a (V == 1) schedule under a first-class
     :class:`~repro.core.schedplan.StageCosts` vector: per-device F and
     full-backward durations, per-device ``w_frac`` split, per-hop SR.
@@ -341,4 +399,5 @@ def simulate_costs(schedule: str | SP.SchedPlan, M: int, N: int,
     if comm is None:
         comm = "latency" if any(s > 0 for s in sr) else "free"
     return simulate(schedule, M, N, list(costs.F), list(costs.B_full),
-                    sr, V=1, comm=comm, w_frac=list(costs.w_frac))
+                    sr, V=1, comm=comm, w_frac=list(costs.w_frac),
+                    ar=ar, grad_sync=grad_sync)

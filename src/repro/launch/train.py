@@ -53,6 +53,14 @@ def main(argv=None):
                          " instruction streams — ring collectives only at"
                          " scheduled SEND slots, so W/idle slots overlap"
                          " compute with no barrier)")
+    ap.add_argument("--grad-sync", default="",
+                    choices=("", "auto", "end", "overlap"),
+                    help="data-parallel gradient sync placement: end"
+                         " (trailing full-pytree psum) | overlap (AR"
+                         " bucket ops scheduled into the pipeline drain,"
+                         " executed inside the tick scan; needs"
+                         " --runtime stream) | auto (overlap iff the"
+                         " stream runtime is active)")
     ap.add_argument("--mem-limit", type=int, default=0,
                     help="zb-auto only: peak-live cap (resident micro-batch"
                          " residuals per device). 0 = unbounded, the fully"
@@ -145,7 +153,8 @@ def main(argv=None):
     opt_state = opt.init(params)
     pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
                              schedule=cfg.schedule, remat=args.remat,
-                             mem_limit=cfg.mem_limit, runtime=cfg.runtime)
+                             mem_limit=cfg.mem_limit, runtime=cfg.runtime,
+                             grad_sync=args.grad_sync or "auto")
     step_fn, specs = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,

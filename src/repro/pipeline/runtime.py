@@ -34,7 +34,17 @@ Execution model (per device, SPMD):
   summed into the same global scalar as before and ``psum``-broadcast;
 * gradients are then ``psum``'d over exactly the axes each leaf is
   replicated on (data/pod for everything; +stage for embed/head/norm) —
-  the paper's "orthogonal to data parallelism", literally.
+  the paper's "orthogonal to data parallelism", literally.  Under
+  ``runtime='stream'`` the DATA-axis share of that sync is instead
+  compiled INTO the schedule (``PipelineConfig.grad_sync``): the plan
+  carries one AR op per (device, chunk) gradient bucket, scheduled into
+  the drain right after the bucket's last B/W tick (stage N-1 retires
+  first and syncs earliest, stage 0 last), and the scan executes each AR
+  slot as a chunked ``psum_scatter`` + ``all_gather`` over ``data`` —
+  retired buckets sync while later micro-batches are still in B/W, so
+  the all-reduce hides in the pipeline bubble.  The trailing psum then
+  skips ``data`` for the layer grads; embed/head/norm grads and
+  fsdp-sharded leaves keep the full trailing sync.
 
 ``PipelineConfig.schedule`` selects the executed order — ``gpipe``,
 ``1f1b`` / ``dapple`` (early backward), ``zb-h1`` (zero-bubble split
@@ -109,6 +119,15 @@ class PipelineConfig:
                                     # where some device SENDs, so ops take
                                     # their actual durations and W/idle
                                     # slots run communication-free
+    grad_sync: str = "auto"         # auto | end | overlap.  'overlap'
+                                    # compiles the data-axis gradient
+                                    # all-reduce into the schedule as AR
+                                    # bucket ops executed inside the tick
+                                    # scan (stream runtime only — the AR
+                                    # slots ride the instruction stream);
+                                    # 'end' keeps the trailing
+                                    # full-pytree psum; 'auto' overlaps
+                                    # iff runtime='stream'
     pod_role: str = "data"          # data | stage  (stage = pipeline over DCN)
     unroll: bool = False            # fully unroll ALL scans (roofline mode)
     gate_ticks: bool = False        # serve: lax.cond-skip invalid ticks so
@@ -274,7 +293,8 @@ def _stream_tables(instr: SP.InstrLowering) -> dict:
     ring collectives stay uniform across the mesh."""
     return dict(_tick_tables(instr.ticks),
                 fsend=jnp.asarray(instr.fsend, bool),
-                bsend=jnp.asarray(instr.bsend, bool))
+                bsend=jnp.asarray(instr.bsend, bool),
+                aron=jnp.asarray(instr.arsync, bool))
 
 
 def _buf_read(buf, slot):
@@ -437,12 +457,30 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     # compile the schedule's FULL mixed F/B(/W) op table and lower it to
     # per-device per-tick lookup arrays: backward ops are first-class
     # ticks, executed by the same scan as the forwards
-    sched = SP.resolve_ring_schedule(pcfg.schedule, V)
-    ml = (pcfg.mem_limit or None) if sched == "zb-auto" else None
-    plan_ir = SP.build_schedule(sched, M_, S, V, mem_limit=ml)
     if pcfg.runtime not in ("ticks", "stream"):
         raise ValueError(f"unknown runtime {pcfg.runtime!r}: "
                          f"expected ticks | stream")
+    if pcfg.grad_sync not in ("auto", "end", "overlap"):
+        raise ValueError(f"unknown grad_sync {pcfg.grad_sync!r}: "
+                         f"expected auto | end | overlap")
+    if pcfg.grad_sync == "overlap" and pcfg.runtime != "stream":
+        raise ValueError("grad_sync='overlap' requires runtime='stream' "
+                         "(the tick replay has no AR slots)")
+    dp_size = mesh.shape.get("data", 1)
+    # layer-grad leaves the in-scan AR covers: replicated over data
+    # (fsdp-sharded leaves keep the trailing sync)
+    ar_mask = jax.tree.map(
+        lambda s: "data" in ST.grad_sync_axes(s, mesh_axes),
+        specs["layers"])
+    overlap_sync = (pcfg.grad_sync == "overlap"
+                    or (pcfg.grad_sync == "auto"
+                        and pcfg.runtime == "stream"))
+    overlap_sync = (overlap_sync and dp_size > 1
+                    and any(jax.tree.leaves(ar_mask)))
+    sched = SP.resolve_ring_schedule(pcfg.schedule, V)
+    ml = (pcfg.mem_limit or None) if sched == "zb-auto" else None
+    plan_ir = SP.build_schedule(sched, M_, S, V, mem_limit=ml,
+                                grad_sync=overlap_sync)
     instr = (SP.lower_to_instructions(plan_ir)
              if pcfg.runtime == "stream" else None)
     lowering = instr.ticks if instr else SP.lower_to_ticks(plan_ir)
@@ -672,8 +710,68 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             branches = [idle_fn, f_fn, b_ring_fn, b_seed_fn]
             if has_w:
                 branches.append(w_fn)
-            carry = lax.switch(jnp.clip(g("kind"), 0, len(branches) - 1),
+            kind_t = g("kind")
+            if plan_ir.has_grad_sync:
+                # AR slots execute below, outside the switch; the
+                # compute branch for them is idle
+                kind_t = jnp.where(kind_t == SP.TICK_AR, SP.TICK_IDLE,
+                                   kind_t)
+            carry = lax.switch(jnp.clip(kind_t, 0, len(branches) - 1),
                                branches, carry)
+            if plan_ir.has_grad_sync:
+                def ar_fn(c):
+                    """One AR slot: reduce-scatter + all-gather this
+                    device's retired chunk-``v_t`` layer-grad bucket over
+                    ``data``.  The gate (``aron[t]``) depends on the slot
+                    counter alone, so every device enters the cond;
+                    within one data group all members share a stage ->
+                    identical tables -> they sync the same bucket
+                    together.  Groups whose device holds no AR here
+                    compute a discarded sum (masked write-back)."""
+                    arw = g("kind") == SP.TICK_AR
+                    dlp_leaves, treedef = jax.tree.flatten(c["dlp"])
+                    masks = jax.tree.leaves(ar_mask)
+                    slices = [
+                        (i, lax.dynamic_index_in_dim(a, v_t, 0,
+                                                     keepdims=False)
+                            if V > 1 else a)
+                        for i, (a, el) in enumerate(zip(dlp_leaves,
+                                                        masks)) if el]
+                    # pack per dtype (concat cannot mix), one RS+AG over
+                    # data per dtype, unpack; dp=2's single addition per
+                    # element keeps the result bit-equal to the trailing
+                    # psum it replaces
+                    by_dt: dict = {}
+                    for i, sl in slices:
+                        by_dt.setdefault(sl.dtype, []).append((i, sl))
+                    out = dict(enumerate(dlp_leaves))
+                    for dt, group in by_dt.items():
+                        flat = jnp.concatenate(
+                            [sl.reshape(-1) for _, sl in group])
+                        pad = (-flat.size) % dp_size
+                        if pad:
+                            flat = jnp.concatenate(
+                                [flat, jnp.zeros((pad,), dt)])
+                        red = lax.psum_scatter(flat, "data",
+                                               scatter_dimension=0,
+                                               tiled=True)
+                        full = lax.all_gather(red, "data", axis=0,
+                                              tiled=True)
+                        off = 0
+                        for i, sl in group:
+                            new = full[off:off + sl.size].reshape(
+                                sl.shape)
+                            off += sl.size
+                            new = jnp.where(arw, new, sl)
+                            out[i] = (lax.dynamic_update_index_in_dim(
+                                dlp_leaves[i], new, v_t, 0)
+                                if V > 1 else new)
+                    return dict(c, dlp=jax.tree.unflatten(
+                        treedef, [out[i]
+                                  for i in range(len(dlp_leaves))]))
+
+                carry = lax.cond(_at(tab["aron"], t), ar_fn,
+                                 lambda c: c, carry)
             perm_f = [(i, (i + 1) % S) for i in range(S)]
             perm_b = [(i, (i - 1) % S) for i in range(S)]
             shift_f = lambda tr: jax.tree.map(
@@ -719,10 +817,26 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     def sharded_step(params, batch):
         local, grads = global_loss_and_grads(params, batch)
         loss = lax.psum(local, mesh_axes)
-        grads = jax.tree.map(
-            lambda g, s: lax.psum(g, axes)
-            if (axes := ST.grad_sync_axes(s, mesh_axes)) else g,
-            grads, specs)
+
+        def sync(g, s, layer):
+            axes = ST.grad_sync_axes(s, mesh_axes)
+            if "data" in axes:
+                # the data-axis sync is its own reduction, split from
+                # the other replication axes: the AR-op schedule
+                # replaces exactly this psum (for layer grads) with the
+                # in-scan bucket collectives, and performing the data
+                # sum separately for EVERY leaf in BOTH paths keeps the
+                # two programs' collective structure — and hence the
+                # reduction order of the remaining axes — identical
+                if not (layer and plan_ir.has_grad_sync):
+                    g = lax.psum(g, "data")
+                axes = tuple(a for a in axes if a != "data")
+            return lax.psum(g, axes) if axes else g
+
+        grads = {
+            k: jax.tree.map(functools.partial(sync, layer=(k == "layers")),
+                            grads[k], specs[k])
+            for k in grads}
         return loss, grads
 
     _built: dict = {}

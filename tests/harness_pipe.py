@@ -10,6 +10,14 @@ import sys
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
+if "--xla_cpu_multi_thread_eigen" not in os.environ["XLA_FLAGS"]:
+    # The bit-equality gates here compare gradients across differently
+    # structured programs (ticks vs stream, grad_sync end vs overlap).
+    # XLA:CPU's multi-threaded Eigen backend picks reduction split
+    # points per module, so an unrelated program difference (e.g. the
+    # set of trailing all-reduces) can reassociate backward sums at the
+    # ulp level; single-threaded contractions make the comparison sound.
+    os.environ["XLA_FLAGS"] += " --xla_cpu_multi_thread_eigen=false"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import dataclasses
@@ -307,6 +315,62 @@ def stream_equivalence(arch="llama3.2-1b", stages=2, tensor=1,
     print("OK " + " ".join(f"{k}={v:.2e}" for k, v in worsts.items()))
 
 
+def dp_overlap(arch="llama3.2-1b", stages=4, tensor=1,
+               microbatches=4, *schedules):
+    """Bubble-filling gradient sync: under ``runtime='stream'`` with
+    DP>1, ``grad_sync='overlap'`` (AR bucket ops scheduled into the
+    pipeline drain, executed inside the tick scan) must produce
+    loss/grads BIT-EQUAL to ``grad_sync='end'`` (the trailing
+    full-pytree psum it replaces) — the data-axis sum is the same
+    single reduction, only its placement moves — and grad-equal to the
+    single-device reference, for every ring builder."""
+    import dataclasses as _dc
+    schedules = schedules or ("gpipe", "1f1b", "dapple", "zb-h1", "zb-h2",
+                              "zb-auto", "1f1b-interleaved",
+                              "1f1b-interleaved-memlean")
+    data = 8 // (stages * tensor) or 1
+    assert data > 1, "dp_overlap needs a data axis: use stages*tensor <= 4"
+    mesh = _mesh(data, stages, tensor)
+    worsts = {}
+    for sched in schedules:
+        V = 2 if "interleaved" in str(sched) else 1
+        cfg = get_config(arch).reduced(n_layers=max(4, stages * V),
+                                       d_model=128)
+        cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=V)
+        plan = ST.plan_stages(cfg)
+        params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+        batch = _batch(cfg, 8, 32)
+        rp = _ref_params(cfg, params, plan)
+        ref_loss = float(M.loss_fn(cfg, rp, batch))
+        ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+        gr = jax.tree.map(np.asarray, ref_grads["layers"])
+        outs = {}
+        for gsync in ("end", "overlap"):
+            pcfg = RT.PipelineConfig(n_microbatches=microbatches,
+                                     schedule=str(sched), runtime="stream",
+                                     grad_sync=gsync)
+            step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+            loss, grads = step(params, batch)
+            assert abs(float(loss) - ref_loss) < 1e-4, \
+                (sched, gsync, float(loss), ref_loss)
+            outs[gsync] = (float(loss), jax.tree.map(np.asarray, grads))
+        le, ge = outs["end"]
+        lo, go = outs["overlap"]
+        assert lo == le, (sched, lo, le)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                     go, ge)
+        gp = jax.tree.map(
+            lambda a: np.asarray(ST.unstack_chunks(a, plan))[:cfg.n_layers],
+            go["layers"])
+        errs = jax.tree.map(
+            lambda a, b: float(np.max(np.abs(a - b))
+                               / (np.max(np.abs(b)) + 1e-9)), gp, gr)
+        worst = max(jax.tree.leaves(errs))
+        assert worst < 1e-4, (sched, worst)
+        worsts[str(sched)] = worst
+    print("OK " + " ".join(f"{k}={v:.2e}" for k, v in worsts.items()))
+
+
 def pos3_ring(arch="qwen2-vl-7b", stages=4, tensor=1, virtual=1,
               microbatches=4, schedule="auto"):
     """Regression for the latent pos3 defect: per-micro-batch DISTINCT
@@ -462,6 +526,7 @@ if __name__ == "__main__":
      "interleaved_equivalence": interleaved_equivalence,
      "schedule_equivalence": schedule_equivalence,
      "stream_equivalence": stream_equivalence,
+     "dp_overlap": dp_overlap,
      "pos3_ring": pos3_ring,
      "prefill_equivalence": prefill_equivalence,
      }[mode](*args)

@@ -135,6 +135,20 @@ def test_stream_runtime_grad_equivalence(stages, tensor, microbatches,
              str(microbatches), *schedules, timeout=540)
 
 
+@pytest.mark.parametrize("schedules", [
+    ("gpipe", "1f1b", "dapple"),                       # two-op family
+    ("zb-h1", "zb-h2", "zb-auto"),                     # zero-bubble family
+    ("1f1b-interleaved", "1f1b-interleaved-memlean"),  # V=2 ring
+])
+def test_dp_overlap_grad_sync_bit_equality(schedules):
+    """Bubble-filling gradient sync (grad_sync='overlap'): the AR
+    bucket ops the builder schedules into the drain must leave
+    loss/grads bit-equal to the trailing sync-at-end psum they replace,
+    on a 2(data) x 4(stage) mesh, for every ring builder."""
+    run_case("dp_overlap", "llama3.2-1b", "4", "1", "4", *schedules,
+             timeout=540)
+
+
 @pytest.mark.parametrize("virtual", ["1", "2"])
 def test_pos3_rides_the_ppermute_ring(virtual):
     """Regression (pre-seed defect): per-micro-batch DISTINCT M-RoPE
