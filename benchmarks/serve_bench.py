@@ -1,0 +1,231 @@
+"""Continuous-batching serving benchmark: open-loop arrivals vs baselines.
+
+Drives a synthetic open-loop arrival process (requests arrive at fixed
+engine-step gaps with mixed prompt lengths) through three policies over
+the SAME compiled pipelined serve step:
+
+* ``continuous``  — the `ContinuousEngine`: arrivals admitted into free
+  cache slots as they land, chunked prefill interleaved with running
+  decodes in one mixed op table per step;
+* ``sequential``  — batch-1 semantics: one request in flight at a time,
+  each run to completion before the next is admitted (the no-batching
+  baseline; also the per-request *reference tokens* for the bit-identity
+  check);
+* ``one-shot``    — static batching: wait for every request to arrive,
+  then run them all together (throughput-friendly, latency-hostile).
+
+Reports p50/p99 request latency (engine steps and wall ms, measured from
+each request's arrival) and aggregate generated tokens/sec, and verifies
+the continuous run's tokens are bit-identical per request to the
+sequential (single-request) reference.
+
+CPU quickstart / CI gate:
+
+    python benchmarks/serve_bench.py --dry-run
+"""
+import argparse
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config
+from repro.core import serve_sched as SS
+from repro.pipeline import runtime as RT
+from repro.pipeline import stage as ST
+
+
+def build(args):
+    cfg = get_config(args.arch).reduced(n_layers=args.layers,
+                                        d_model=args.d_model)
+    cfg = dataclasses.replace(cfg, stages=args.stages, tensor=args.tensor)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((args.data, args.stages, args.tensor),
+                     ("data", "stage", "tensor"))
+    plan = ST.plan_stages(cfg, virtual=1)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(args.seed), plan)
+    pcfg = RT.PipelineConfig(n_microbatches=args.microbatches)
+    step, _, cspecs, _ = RT.make_serve_step(
+        cfg, mesh, plan, pcfg, max_len=args.max_len,
+        global_batch=args.slots, q_len=args.chunk)
+
+    def fresh_cache():
+        return jax.jit(
+            lambda: RT.init_pipeline_cache(cfg, plan, args.slots,
+                                           args.max_len),
+            out_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                       cspecs))()
+
+    return cfg, mesh, plan, params, step, fresh_cache
+
+
+def make_requests(cfg, args):
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(args.prompt_min, args.prompt_max + 1))
+        reqs.append(SS.Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, size=plen).tolist(),
+            max_new=args.gen, arrival=i * args.arrival_gap))
+    return reqs
+
+
+def timed_engine(cfg, step, params, cache, n_slots, chunk):
+    """Engine whose step is fenced and wall-clock stamped per step."""
+    stamps = []
+
+    def fenced(p, c, b):
+        lg, c2 = step(p, c, b)
+        jax.block_until_ready(lg)
+        stamps.append(time.perf_counter())
+        return lg, c2
+
+    eng = SS.ContinuousEngine(cfg, fenced, params, cache, n_slots, chunk)
+    return eng, stamps
+
+
+def run_policy(policy, cfg, step, params, fresh_cache, reqs, args):
+    """Run one admission policy; returns (retired, steps, wall_s, lat_ms)."""
+    import copy
+    true_arrival = {r.rid: r.arrival for r in reqs}
+    reqs = copy.deepcopy(reqs)
+    if policy == "one-shot":
+        # static batching: collect the whole batch first, then launch
+        t_batch = max(r.arrival for r in reqs)
+        for r in reqs:
+            r.arrival = t_batch
+    eng, stamps = timed_engine(cfg, step, params, fresh_cache(),
+                               args.slots, args.chunk)
+    t0 = time.perf_counter()
+    if policy == "sequential":
+        done = []
+        for r in sorted(reqs, key=lambda q: q.arrival):
+            r.arrival = eng.steps_run  # admit strictly after the previous
+            done += eng.run([r])
+    else:
+        done = eng.run(reqs)
+    wall = time.perf_counter() - t0
+
+    def step_wall(i):  # wall time at which engine step i finished
+        return stamps[min(i, len(stamps) - 1)] - t0
+
+    # per-request latency from TRUE arrival step to completion step
+    lat_steps, lat_ms = {}, {}
+    for r in done:
+        a = true_arrival[r.rid]
+        lat_steps[r.rid] = r.t_done - a + 1
+        start = step_wall(a - 1) if a > 0 else 0.0
+        lat_ms[r.rid] = (step_wall(r.t_done) - start) * 1e3
+    return done, eng.steps_run, wall, lat_steps, lat_ms
+
+
+def summarize(policy, done, steps, wall, lat_steps, lat_ms, args):
+    toks = sum(len(r.generated) for r in done)
+    ls = np.array(sorted(lat_steps.values()))
+    lm = np.array(sorted(lat_ms.values()))
+    tput = toks / max(wall, 1e-9)
+    print(f"{policy:>11}: {steps:3d} steps  {wall*1e3:8.1f}ms  "
+          f"{tput:7.1f} tok/s  "
+          f"latency p50={np.percentile(ls, 50):.0f} steps "
+          f"({np.percentile(lm, 50):.0f}ms)  "
+          f"p99={np.percentile(ls, 99):.0f} steps "
+          f"({np.percentile(lm, 99):.0f}ms)")
+    return tput
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--tensor", type=int, default=2)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-min", type=int, default=8)
+    ap.add_argument("--prompt-max", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--arrival-gap", type=int, default=2,
+                    help="engine steps between arrivals (open loop)")
+    ap.add_argument("--mem-limit-mb", type=float, default=0.0,
+                    help="gate the slot count by per-stage cache memory "
+                         "(0 = ungated)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small config, assert wins + bit-identity (CI)")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        args.layers, args.d_model = 2, 64
+        args.requests, args.gen = 4, 4
+        args.chunk, args.slots, args.max_len = 4, 8, 48
+        args.prompt_min, args.prompt_max = 4, 10
+
+    if args.mem_limit_mb:
+        # budget the SAME reduced config build() instantiates; slots are
+        # sharded over data AND split into microbatches, so quantise to
+        # a multiple of both
+        rcfg = get_config(args.arch).reduced(n_layers=args.layers,
+                                             d_model=args.d_model)
+        quant = args.microbatches * args.data
+        budget = SS.serve_slot_budget(
+            rcfg, args.max_len, args.mem_limit_mb * 2**20,
+            n_stages=args.stages, microbatches=quant)
+        if budget < args.slots:
+            print(f"slot budget: {args.slots} -> {budget} "
+                  f"(mem limit {args.mem_limit_mb:.0f} MiB)")
+            args.slots = max(quant, budget)
+
+    cfg, mesh, plan, params, step, fresh_cache = build(args)
+    reqs = make_requests(cfg, args)
+    print(f"{args.arch}: {args.requests} requests, prompts "
+          f"{args.prompt_min}-{args.prompt_max}, gen {args.gen}, "
+          f"arrival gap {args.arrival_gap} steps, {args.slots} slots x "
+          f"chunk {args.chunk}, mesh data={args.data} stage={args.stages} "
+          f"tensor={args.tensor}")
+
+    # warm-up: compile the mixed step AND the slot-reset once, outside
+    # every timed region
+    c0 = fresh_cache()
+    lg, c0 = step(params, c0,
+                  dict(tokens=np.zeros((args.slots, args.chunk), np.int32),
+                       n_valid=np.zeros((args.slots,), np.int32)))
+    jax.block_until_ready(lg)
+    c0 = SS.reset_slot_offsets(c0, np.zeros((args.slots,), bool))
+    jax.block_until_ready(jax.tree.leaves(c0)[0])
+    del c0
+
+    results, tokens = {}, {}
+    for policy in ("sequential", "one-shot", "continuous"):
+        done, steps, wall, lat_s, lat_ms = run_policy(
+            policy, cfg, step, params, fresh_cache, reqs, args)
+        results[policy] = summarize(policy, done, steps, wall, lat_s,
+                                    lat_ms, args)
+        tokens[policy] = {r.rid: list(r.generated) for r in done}
+
+    ident = tokens["continuous"] == tokens["sequential"]
+    print(f"bit-identity continuous == single-request reference: {ident}")
+    assert ident, "continuous batching changed request tokens"
+    if args.dry_run:
+        assert results["continuous"] > results["sequential"], \
+            (results["continuous"], results["sequential"])
+        print("PASS (continuous beats sequential batch-1, tokens "
+              "bit-identical)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,376 @@
+"""Continuous-batching request scheduler over the slot-based KV cache.
+
+Serving real traffic means requests arrive at different times, have
+different prompt lengths, and finish at different times — yet the
+pipeline wants one fixed-shape compiled step.  The reconciliation is the
+slot abstraction: the decode cache's batch rows are *slots*, each with
+its own per-layer ``len`` offset (``model.init_cache`` keeps them as
+``[L, B]`` vectors), so requests at different sequence positions coexist
+in one batch row-set.  Every engine step processes ``chunk`` columns for
+every slot; a per-slot ``n_valid`` count (0 = idle, 1 = decode tick,
+up to ``chunk`` = chunked prefill, Sarathi-style) says how many columns
+are real.  Roles are pure data — admitting, retiring, or switching a
+slot from prefill to decode never recompiles.
+
+The scheduler here is the host-side half: it admits arrivals into free
+slots, chunks their prompts, feeds decode ticks of running requests, and
+emits the mixed per-step op tables through :func:`schedplan.build_schedule`
+(micro-batch ``m`` of the ring table carries slots ``[m*mb, (m+1)*mb)``,
+so a table op is a mixed bundle of prefill chunks and decode ticks).
+``ContinuousEngine`` closes the loop against any compiled serve step —
+the pipelined ``runtime.make_serve_step`` or the single-device
+:func:`make_local_serve_step` reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+IDLE, PREFILL, DECODE = "idle", "prefill", "decode"
+
+
+# ---------------------------------------------------------------------------
+# Requests and per-step work descriptions.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: prompt tokens in, ``max_new`` tokens out."""
+    rid: int
+    prompt: list[int]
+    max_new: int
+    arrival: int = 0          # engine step at which the request arrives
+
+    # runtime state (managed by the scheduler)
+    slot: int = -1
+    pos: int = 0              # prompt tokens already prefilled into the cache
+    generated: list[int] = dataclasses.field(default_factory=list)
+    t_admit: int = -1
+    t_first: int = -1         # step that produced the first output token
+    t_done: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotWork:
+    """What one cache slot does during one engine step."""
+    slot: int
+    kind: str                 # idle | prefill | decode
+    n_valid: int
+    rid: int = -1
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Device-ready inputs for one engine step (static shapes)."""
+    tokens: np.ndarray        # [n_slots, chunk] int32
+    n_valid: np.ndarray       # [n_slots] int32
+    work: list[SlotWork]
+
+    @property
+    def busy(self) -> int:
+        return int(np.sum(self.n_valid > 0))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: admission + per-step role assignment.
+# ---------------------------------------------------------------------------
+
+class ServeScheduler:
+    """Greedy continuous-batching scheduler.
+
+    Admission policy: first-free-slot, FIFO over arrivals.  A slot runs
+    its request's chunked prefill to completion (one ``chunk``-column
+    bite per step), then decodes one token per step until ``max_new``
+    tokens exist, then frees.  Prefill chunks and decode ticks of
+    different slots ride the same step — that is the continuous-batching
+    win: a new request's prefill never stalls running decodes, it fills
+    the idle columns of the same compiled table.
+    """
+
+    def __init__(self, n_slots: int, chunk: int):
+        assert n_slots >= 1 and chunk >= 1
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self.retired: list[Request] = []
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def active(self) -> bool:
+        return any(r is not None for r in self.slots)
+
+    def admit(self, req: Request, t: int = 0) -> bool:
+        """Place ``req`` into the lowest free slot; False when full."""
+        free = self.free_slots()
+        if not free:
+            return False
+        req.slot = free[0]
+        req.pos = 0
+        req.t_admit = t
+        self.slots[req.slot] = req
+        return True
+
+    def plan_step(self) -> StepPlan:
+        """Assign this step's per-slot roles and build the device inputs."""
+        C = self.chunk
+        tokens = np.zeros((self.n_slots, C), np.int32)
+        n_valid = np.zeros((self.n_slots,), np.int32)
+        work: list[SlotWork] = []
+        for s, req in enumerate(self.slots):
+            if req is None:
+                work.append(SlotWork(s, IDLE, 0))
+                continue
+            if req.pos < len(req.prompt):
+                nv = min(C, len(req.prompt) - req.pos)
+                tokens[s, :nv] = req.prompt[req.pos:req.pos + nv]
+                n_valid[s] = nv
+                work.append(SlotWork(s, PREFILL, nv, req.rid))
+            else:
+                tokens[s, 0] = req.generated[-1]
+                n_valid[s] = 1
+                work.append(SlotWork(s, DECODE, 1, req.rid))
+        return StepPlan(tokens=tokens, n_valid=n_valid, work=work)
+
+    def observe(self, sp: StepPlan, next_tokens: np.ndarray, t: int = 0
+                ) -> list[Request]:
+        """Fold one step's sampled tokens back into the request states.
+        Returns the requests retired by this step (their slots are free
+        for the next admission round)."""
+        finished: list[Request] = []
+        for w in sp.work:
+            req = self.slots[w.slot]
+            if w.kind == IDLE:
+                continue
+            assert req is not None and req.rid == w.rid
+            tok = int(next_tokens[w.slot])
+            if w.kind == PREFILL:
+                req.pos += w.n_valid
+                if req.pos < len(req.prompt):
+                    continue          # mid-prompt chunk: logits discarded
+            # prompt just completed (its last logit IS the first new
+            # token) or a decode tick: either way ``tok`` is output.
+            req.generated.append(tok)
+            if req.t_first < 0:
+                req.t_first = t
+            if req.done:
+                req.t_done = t
+                req.slot = -1
+                self.slots[w.slot] = None
+                self.retired.append(req)
+                finished.append(req)
+        return finished
+
+
+# ---------------------------------------------------------------------------
+# Mixed prefill/decode op tables (schedplan IR view of one engine step).
+# ---------------------------------------------------------------------------
+
+def mixed_op_table(work: Sequence[SlotWork], M: int, N: int, V: int = 1,
+                   schedule: str = "auto"):
+    """Lower one engine step to the schedplan IR: the ring schedule's
+    op table from :func:`build_schedule` plus the per-micro-batch slot
+    roles it carries (micro-batch ``m`` = slots ``[m*mb, (m+1)*mb)``).
+
+    Returns ``(plan, roles)`` where ``roles[m]`` is the tuple of slot
+    kinds bundled into micro-batch ``m`` — the table's F op for ``m`` is
+    a *mixed* prefill/decode bundle exactly when the tuple mixes kinds.
+    """
+    from repro.core import schedplan as SP
+    name = SP.resolve_ring_schedule(schedule, V)
+    plan = SP.build_schedule(name, M, N, V)
+    n_slots = len(work)
+    assert n_slots % M == 0, (n_slots, M)
+    mb = n_slots // M
+    roles = {m: tuple(w.kind for w in work[m * mb:(m + 1) * mb])
+             for m in range(M)}
+    return plan, roles
+
+
+def format_mixed_table(plan, roles) -> str:
+    """Human-readable mixed table: one line per device, ops annotated
+    with the role letters (P/D/-) of the slots their micro-batch holds."""
+    tag = {PREFILL: "P", DECODE: "D", IDLE: "-"}
+    lines = []
+    for dev, ops in enumerate(plan.device_ops):
+        cells = []
+        for op in ops:
+            if op.kind != "F":
+                continue
+            r = "".join(tag[k] for k in roles[op.m])
+            cells.append(f"F{op.m}" + (f".{op.v}" if plan.V > 1 else "")
+                         + f"[{r}]")
+        lines.append(f"dev{dev}: " + " ".join(cells))
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Explorer-style memory gating: how many slots fit a device?
+# ---------------------------------------------------------------------------
+
+def kv_bytes_per_slot(cfg: ArchConfig, max_len: int, itemsize: int = 4
+                      ) -> int:
+    """Cache bytes one slot pins across ALL layers (model total)."""
+    if cfg.attn_kind == "mla":
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+    else:
+        per_tok = 2 * max(1, cfg.n_kv_heads) * cfg.resolved_head_dim
+    return cfg.n_layers * max_len * per_tok * itemsize
+
+
+def serve_slot_budget(cfg: ArchConfig, max_len: int, mem_limit_bytes: float,
+                      *, n_stages: int = 0, weight_bytes: float = 0.0,
+                      itemsize: int = 4, microbatches: int = 1) -> int:
+    """Largest slot count whose per-stage cache footprint (plus resident
+    stage weights) fits under ``mem_limit_bytes`` — the serving analogue
+    of the explorer's activation-memory gate (``partition.stage_memory``):
+    where training trades micro-batch depth for live activations, serving
+    trades concurrent requests for pinned KV rows.  The result is floored
+    to a multiple of ``microbatches`` (the ring splits slots evenly)."""
+    stages = max(1, n_stages or cfg.stages)
+    layers_per_stage = math.ceil(cfg.n_layers / stages)
+    per_slot = kv_bytes_per_slot(cfg, max_len, itemsize) \
+        * layers_per_stage / cfg.n_layers
+    free = mem_limit_bytes - weight_bytes
+    if free < per_slot:
+        return 0
+    slots = int(free // per_slot)
+    return (slots // microbatches) * microbatches
+
+
+# ---------------------------------------------------------------------------
+# The engine: open-loop driver over any compiled serve step.
+# ---------------------------------------------------------------------------
+
+_reset_jit = None
+
+
+def reset_slot_offsets(cache, mask):
+    """Zero the per-slot kv ``len`` offsets where ``mask`` is True (slot
+    admission / reuse).  Jitted once at module scope so every engine in a
+    process shares the compiled reset instead of retracing per engine."""
+    global _reset_jit
+    if _reset_jit is None:
+        import jax
+        import jax.numpy as jnp
+        from repro.pipeline.runtime import _is_kv_len
+
+        def do(c, m):
+            return jax.tree_util.tree_map_with_path(
+                lambda p, l: jnp.where(m, 0, l) if _is_kv_len(p) else l, c)
+
+        _reset_jit = jax.jit(do, donate_argnums=(0,))
+    return _reset_jit(cache, mask)
+
+
+class ContinuousEngine:
+    """Drives admission -> step -> observe over a compiled serve step.
+
+    ``step(params, cache, dict(tokens, n_valid)) -> (logits, cache)`` with
+    ``logits`` ``[n_slots, 1, vocab]`` gathered at each slot's last valid
+    column.  Sampling is greedy argmax (bit-stable across runs, which is
+    what the invariance tests pin).  The clock is the engine-step counter:
+    arrivals are admitted when their ``arrival`` step has passed and a
+    slot is free.
+    """
+
+    def __init__(self, cfg: ArchConfig, step: Callable, params, cache,
+                 n_slots: int, chunk: int):
+        if cfg.family in ("ssm", "hybrid", "audio"):
+            raise ValueError(
+                f"continuous batching is attention-family only (gqa/mla); "
+                f"{cfg.family} carries recurrent state that padded slot "
+                f"columns would pollute")
+        self.cfg = cfg
+        self.step = step
+        self.params = params
+        self.cache = cache
+        self.sched = ServeScheduler(n_slots, chunk)
+        self.steps_run = 0
+        self.step_log: list[StepPlan] = []
+
+    def _reset_slots(self, slot_ids: list[int]):
+        """Rewind freed/reused slots' kv offsets to 0.  Stale K/V rows are
+        harmless: positions below the new request's write head get
+        overwritten, positions above it stay causally masked."""
+        mask = np.zeros((self.sched.n_slots,), bool)
+        mask[slot_ids] = True
+        self.cache = reset_slot_offsets(self.cache, mask)
+
+    def run(self, requests: Sequence[Request], max_steps: int = 10_000
+            ) -> list[Request]:
+        """Open loop: admit each request at its ``arrival`` step, run
+        until every request retired.  Returns the requests retired by
+        THIS call (the engine keeps the full history in
+        ``sched.retired``)."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        n0 = len(self.sched.retired)
+        t = self.steps_run
+        while pending or self.sched.active():
+            admitted = []
+            while pending and pending[0].arrival <= t:
+                if not self.sched.admit(pending[0], t):
+                    break
+                admitted.append(pending.pop(0).slot)
+            if admitted:
+                self._reset_slots(admitted)
+            sp = self.sched.plan_step()
+            if sp.busy == 0:
+                # nothing in flight: jump the clock to the next arrival
+                t = max(t + 1, pending[0].arrival)
+                continue
+            logits, self.cache = self.step(
+                self.params, self.cache,
+                dict(tokens=np.asarray(sp.tokens),
+                     n_valid=np.asarray(sp.n_valid)))
+            toks = np.asarray(logits[:, 0, :self.cfg.vocab].argmax(axis=-1))
+            self.sched.observe(sp, toks, t)
+            self.step_log.append(sp)
+            self.steps_run += 1
+            t += 1
+            if self.steps_run > max_steps:
+                raise RuntimeError("engine did not drain "
+                                   f"within {max_steps} steps")
+        return self.sched.retired[n0:]
+
+
+# ---------------------------------------------------------------------------
+# Single-device reference step (tests + bench baselines).
+# ---------------------------------------------------------------------------
+
+def make_local_serve_step(cfg: ArchConfig):
+    """Single-device serve step with the same contract as the pipelined
+    ``runtime.make_serve_step``: mixed per-slot prefill/decode over the
+    per-slot-offset cache, logits gathered at each slot's last valid
+    column, offsets advanced by ``n_valid``."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as M
+    from repro.pipeline.runtime import _advance_len, _restore_len
+
+    @jax.jit
+    def step(params, cache, batch):
+        nv = batch["n_valid"].astype(jnp.int32)
+        x, _, new_cache = M.forward(cfg, params,
+                                    dict(tokens=batch["tokens"]),
+                                    cache=cache)
+        # forward advanced every row by the full chunk width; rewind and
+        # re-advance by each slot's true valid count
+        new_cache = _restore_len(new_cache, cache)
+        new_cache = _advance_len(new_cache, nv)
+        col = jnp.clip(nv, 1, x.shape[1]) - 1
+        h = jnp.take_along_axis(x, col[:, None, None], axis=1)
+        table = params.get("head", params["embed"])
+        logits = (h @ table.T).astype(jnp.float32)
+        return logits, new_cache
+
+    return step

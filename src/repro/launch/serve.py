@@ -9,10 +9,18 @@ CPU quickstart:
 
 ``--virtual V`` (V > 1) runs the *prefill* phase on an interleaved
 1F1B-I plan — prefill is throughput-bound, so the V-times-smaller flush
-bubble pays — then unstacks the V-chunk parameters and restacks them
-contiguously for the latency-bound decode loop, whose plan stays V=1.
-The prefill cache is written chunk-stacked [S, V, Lc, ...] and is
-re-folded to the contiguous [S, Lps, ...] decode layout between phases.
+bubble pays — then restacks the V-chunk parameters and the chunk-stacked
+[S, V, Lc, ...] prefill cache contiguously for the decode loop, whose
+plan stays V=1.  The restack runs as ONE jitted call that *donates* the
+prefill copies: the contiguous buffers are built in place of the chunked
+ones, so the handoff never holds params+cache twice (the old eager
+restack had a transient 2x residency spike).
+
+Timing discipline: both jitted steps are AOT-compiled (``.lower(...)
+.compile()``) before any timed region and every phase is fenced with
+``block_until_ready`` — compile time, prefill throughput, and
+steady-state decode throughput are reported separately instead of the
+first decode step's compile silently landing inside the decode loop.
 """
 from __future__ import annotations
 
@@ -67,8 +75,6 @@ def main(argv=None):
     plan_p = ST.plan_stages(cfg) if cfg.virtual > 1 else plan
     params_p = ST.init_stacked_params(cfg, jax.random.PRNGKey(args.seed),
                                       plan_p)
-    params = ST.restack_params(params_p, plan_p, plan, cfg.n_layers) \
-        if cfg.virtual > 1 else params_p
     max_len = args.prompt_len + args.gen
     pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
                              schedule=args.schedule)
@@ -77,7 +83,7 @@ def main(argv=None):
     prefill, _, cspecs_p, _ = RT.make_serve_step(
         cfg, mesh, plan_p, pcfg, max_len=max_len, global_batch=args.batch,
         q_len=args.prompt_len)
-    decode, _, cspecs, _ = RT.make_serve_step(
+    decode, dspecs, cspecs, _ = RT.make_serve_step(
         cfg, mesh, plan, pcfg1, max_len=max_len, global_batch=args.batch,
         q_len=1)
     cache = jax.jit(
@@ -87,33 +93,95 @@ def main(argv=None):
 
     prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab)
-    t0 = time.time()
-    logits, cache = prefill(params_p, cache, dict(tokens=prompt))
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    tok0 = jnp.zeros((args.batch, 1), jnp.int32)
+
+    # ---- warm-up: compile every phase before any timed region ------------
+    t0 = time.perf_counter()
+    prefill_x = prefill.lower(params_p, cache, dict(tokens=prompt)).compile()
+    restack_x = None
     if cfg.virtual > 1:
-        # re-fold the chunk-stacked [S, V, Lc, ...] prefill cache into the
-        # contiguous [S, Lps, ...] layout the decode plan scans
-        refold = jax.jit(
-            lambda c: jax.tree.map(
-                lambda a: ST.restack_layers(a, plan_p, plan, cfg.n_layers), c),
-            out_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s),
-                                       cspecs))
-        cache = refold(cache)
-    next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        # one donated jitted call re-folds the V-chunked params AND the
+        # chunk-stacked [S, V, Lc, ...] prefill cache to the contiguous
+        # [S, Lps, ...] decode layout in place of the prefill buffers
+        shard = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree)
+
+        def _restack(p, c):
+            p2 = ST.restack_params(p, plan_p, plan, cfg.n_layers)
+            c2 = jax.tree.map(
+                lambda a: ST.restack_layers(a, plan_p, plan, cfg.n_layers), c)
+            return p2, c2
+
+        restack_x = jax.jit(
+            _restack, donate_argnums=(0, 1),
+            out_shardings=(shard(dspecs), shard(cspecs)))
+        params_shapes, cache_shapes = jax.eval_shape(_restack, params_p,
+                                                     cache)
+        import warnings
+        with warnings.catch_warnings():
+            # the chunked->contiguous layout change blocks in-place
+            # aliasing for the re-folded leaves; those are instead freed
+            # by the `del params_p` right after the handoff call
+            # (tests/test_serve_sched.py pins both halves)
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            restack_x = restack_x.lower(params_p, cache).compile()
+        decode_x = decode.lower(
+            jax.tree.map(lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+                params_shapes, dspecs),
+            jax.tree.map(lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+                cache_shapes, cspecs),
+            dict(tokens=tok0)).compile()
+    else:
+        decode_x = decode.lower(params_p, cache, dict(tokens=tok0)).compile()
+    t_compile = time.perf_counter() - t0
+
+    # ---- prefill ----------------------------------------------------------
+    t0 = time.perf_counter()
+    logits, cache = prefill_x(params_p, cache, dict(tokens=prompt))
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # ---- prefill -> decode handoff (donating restack) ---------------------
+    t0 = time.perf_counter()
+    if cfg.virtual > 1:
+        params, cache = restack_x(params_p, cache)
+        # drop the last reference to the prefill-layout copies: the
+        # layout-changing leaves cannot be aliased by the donation, so
+        # they stay resident until this name dies
+        del params_p
+        jax.block_until_ready(params)
+    else:
+        params = params_p
+    t_handoff = time.perf_counter() - t0
+
+    next_tok = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1).astype(jnp.int32)
     generated = [np.asarray(next_tok)]
-    t0 = time.time()
+
+    # ---- steady-state decode (everything below is compiled + fenced) ------
+    jax.block_until_ready(next_tok)
+    t0 = time.perf_counter()
     for _ in range(args.gen - 1):
-        logits, cache = decode(params, cache, dict(tokens=next_tok[:, None]))
-        next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        logits, cache = decode_x(params, cache, dict(tokens=next_tok[:, None]))
+        next_tok = jnp.argmax(logits[:, 0, :cfg.vocab],
+                              axis=-1).astype(jnp.int32)
         generated.append(np.asarray(next_tok))
     jax.block_until_ready(logits)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     toks = np.stack(generated, 1)
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms")
+    pre_toks = args.batch * args.prompt_len
+    dec_toks = (args.gen - 1) * args.batch
+    print(f"compile: {t_compile*1e3:.1f}ms (excluded from all phases)")
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms "
+          f"({pre_toks / max(t_prefill, 1e-9):.0f} tok/s)")
+    if cfg.virtual > 1:
+        print(f"handoff: V={cfg.virtual} restack (donated) in "
+              f"{t_handoff*1e3:.1f}ms")
     print(f"decode:  {args.gen - 1} steps x batch {args.batch} in "
           f"{t_decode*1e3:.1f}ms "
-          f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.0f} tok/s)")
+          f"({dec_toks / max(t_decode, 1e-9):.0f} tok/s steady-state)")
     print("sample generations (first 3 rows):")
     for row in toks[:3]:
         print("  ", row.tolist())

@@ -93,18 +93,21 @@ UNROLL_SCANS = False
 
 def _block_attend(qg, k, v, qpos, kpos, kv_len, window, causal, scale):
     """One query block.  qg: [B,c,Hkv,G,D]; k/v: [B,S,Hkv,D*].
-    qpos: [c], kpos: [S]; kv_len: valid prefix of k/v (traced or None)."""
+    qpos: [c] shared or [B,c] per-row (slot-cache offsets); kpos: [S];
+    kv_len: valid prefix of k/v — None, scalar, or per-row [B]."""
     logits = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
-    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    qp = qpos if qpos.ndim == 2 else qpos[None]          # [R,c], R in {1,B}
+    m = jnp.ones((qp.shape[0], qp.shape[1], kpos.shape[0]), bool)
     if causal:
-        m &= kpos[None, :] <= qpos[:, None]
+        m &= kpos[None, None, :] <= qp[:, :, None]
     if kv_len is not None:
-        m &= kpos[None, :] < kv_len
+        kl = jnp.asarray(kv_len)
+        m &= kpos[None, None, :] < (kl[:, None, None] if kl.ndim else kl)
     if window is not None:
         w = jnp.asarray(window)
-        m &= (kpos[None, :] > qpos[:, None] - w) | (w == 0)
-    logits = jnp.where(m[None, None, None], logits, -1e30)
+        m &= (kpos[None, None, :] > qp[:, :, None] - w) | (w == 0)
+    logits = jnp.where(m[:, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgts,bskd->btkgd", probs, v.astype(jnp.float32))
     B, c = qg.shape[0], qg.shape[1]
@@ -120,14 +123,18 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kernel in repro.kernels; backward rematerialises each chunk).
 
     q: [B,T,Hq,D], k/v: [B,S,Hkv,D*] (GQA by head-group broadcast).
-    ``q_start``: absolute position of q[0] (cache offset, may be traced);
-    ``kv_len``: valid prefix of k/v (traced) or None for all;
+    ``q_start``: absolute position of q[0] — a scalar cache offset shared
+    by the batch, or a per-row [B] vector of slot offsets (continuous
+    batching: every row sits at its own sequence position);
+    ``kv_len``: valid prefix of k/v (scalar or per-row [B]) or None;
     ``window``: sliding window size (0/None = global; may be traced).
     """
     B, T, Hq, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, T, Hkv, G, D)
+    q_start = jnp.asarray(q_start)
+    q_base = q_start[:, None] if q_start.ndim else q_start
     kpos = jnp.arange(S)
     if T % chunk != 0:
         # pick the largest divisor of T <= chunk (falls back to one block
@@ -137,7 +144,7 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
             c -= 1
         chunk = c if c >= chunk // 4 else T
     if T <= chunk:
-        qpos = q_start + jnp.arange(T)
+        qpos = q_base + jnp.arange(T)
         out = _block_attend(qg, k, v, qpos, kpos, kv_len, window, causal, scale)
         return out.reshape(B, T, Hq, v.shape[-1])
     assert T % chunk == 0, (T, chunk)
@@ -147,7 +154,7 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
     @jax.checkpoint
     def body(_, inp):
         qc, idx = inp
-        qpos = q_start + idx * chunk + jnp.arange(chunk)
+        qpos = q_base + idx * chunk + jnp.arange(chunk)
         return None, _block_attend(qc, k, v, qpos, kpos, kv_len, window,
                                    causal, scale)
 
@@ -155,6 +162,19 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       unroll=UNROLL_SCANS)
     out = jnp.moveaxis(out, 0, 1).reshape(B, T, Hq, v.shape[-1])
     return out
+
+
+def _cache_write(buf, new, idx):
+    """Write ``new`` [B,T,...] into the sequence axis (dim 1) of ``buf``
+    [B,S,...] at offset ``idx`` — a scalar shared by the batch, or a
+    per-row [B] vector of slot offsets (each request's ring position)."""
+    new = new.astype(buf.dtype)
+    if idx.ndim == 0:
+        start = (0, idx) + (0,) * (buf.ndim - 2)
+        return lax.dynamic_update_slice(buf, new, start)
+    per_row = lambda b, u, i: lax.dynamic_update_slice(
+        b, u, (i,) + (0,) * (b.ndim - 1))
+    return jax.vmap(per_row)(buf, new, idx)
 
 
 # ---------------------------------------------------------------------------
@@ -225,11 +245,9 @@ def gqa_attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
     new_cache = None
     win = (jnp.where(is_global, 0, cfg.window) if cfg.window else None)
     if cache is not None:
-        idx = cache["len"]
-        ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, idx, 0, 0))
-        cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, idx, 0, 0))
+        idx = jnp.asarray(cache["len"])
+        ck = _cache_write(cache["k"], k, idx)
+        cv = _cache_write(cache["v"], v, idx)
         new_cache = dict(k=ck, v=cv, len=idx + T)
         out = attend(q, ck, cv, scale=1.0 / math.sqrt(hd), causal=True,
                      q_start=idx, kv_len=idx + T, window=win)
@@ -322,11 +340,9 @@ def mla_attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
     w_uv = wkv_b[..., m.qk_nope_dim:]                     # [r, H, v]
     new_cache = None
     if cache is not None:
-        idx = cache["len"]
-        cc = lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
-                                      (0, idx, 0))
-        cr = lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
-                                      (0, idx, 0))
+        idx = jnp.asarray(cache["len"])
+        cc = _cache_write(cache["c_kv"], c_kv, idx)
+        cr = _cache_write(cache["k_rope"], k_rope, idx)
         new_cache = dict(c_kv=cc, k_rope=cr, len=idx + T)
     if T == 1 and cache is not None:
         # absorbed decode: score and read out directly against the latent
@@ -337,7 +353,9 @@ def mla_attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
         logits = (jnp.einsum("bthr,bsr->bhts", q_lat, cc.astype(jnp.float32))
                   + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
                                cr.astype(jnp.float32))) * scale
-        mask = (jnp.arange(S)[None, None, None, :] < idx + T)
+        kl = idx + T                                      # scalar or [B]
+        kl = kl[:, None, None, None] if kl.ndim else kl
+        mask = (jnp.arange(S)[None, None, None, :] < kl)
         logits = jnp.where(mask, logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         ctx = jnp.einsum("bhts,bsr->bthr", probs, cc.astype(jnp.float32))

@@ -348,23 +348,32 @@ def forward(cfg: ArchConfig, params: Params, batch: dict, *,
 
 def _default_pos(tokens, cache):
     B, T = tokens.shape
-    off = 0
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
     if cache is not None:
         off = _cache_len(cache)
-    return jnp.broadcast_to(jnp.arange(T)[None], (B, T)) + off
+        pos = pos + (off[:, None] if getattr(off, "ndim", 0) else off)
+    return pos
 
 
 def _default_pos_from_x(x, cache):
     B, T = x.shape[:2]
-    off = _cache_len(cache) if cache is not None else 0
-    return jnp.broadcast_to(jnp.arange(T)[None], (B, T)) + off
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if cache is not None:
+        off = _cache_len(cache)
+        pos = pos + (off[:, None] if getattr(off, "ndim", 0) else off)
+    return pos
 
 
 def _cache_len(cache):
-    # cache["kv"]["len"] is stacked [L]; encoder layers never advance
-    # theirs (whisper), so take the max.
+    # cache["kv"]["len"] is stacked [L, B] — per-layer, per-slot offsets
+    # (every request row sits at its own sequence position).  Encoder
+    # layers never advance theirs (whisper), so reduce layer-like leading
+    # axes with max and keep the per-slot [B] vector.
     if isinstance(cache, dict) and "kv" in cache and "len" in cache["kv"]:
-        return jnp.max(cache["kv"]["len"])
+        l = cache["kv"]["len"]
+        if l.ndim <= 1:
+            return jnp.max(l) if l.ndim else l
+        return jnp.max(l, axis=tuple(range(l.ndim - 1)))
     return 0
 
 
@@ -394,11 +403,11 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, tp: int = 1,
         c["kv"] = dict(
             c_kv=jnp.zeros((n, batch, max_len, m.kv_lora_rank), dtype),
             k_rope=jnp.zeros((n, batch, max_len, m.qk_rope_dim), dtype),
-            len=jnp.zeros((n,), jnp.int32))
+            len=jnp.zeros((n, batch), jnp.int32))
     else:
         c["kv"] = dict(k=jnp.zeros((n, batch, max_len, nkv, hd), dtype),
                        v=jnp.zeros((n, batch, max_len, nkv, hd), dtype),
-                       len=jnp.zeros((n,), jnp.int32))
+                       len=jnp.zeros((n, batch), jnp.int32))
     if cfg.family == "hybrid":
         c["ssm"] = _ssm_cache(cfg, n, batch, tp, dtype)
     if cfg.n_enc_layers:

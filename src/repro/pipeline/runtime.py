@@ -877,7 +877,11 @@ def cache_specs(cfg: ArchConfig, cache_shapes, batch_axes, *,
     def leaf(path, l):
         name = getattr(path[-1], "key", None)
         if name == "len":
-            return P(*([stage_axis] + [None] * (l.ndim - 1)))
+            # per-slot offsets [S, (V,) Lc, B]: trailing axis is the slot
+            spec = [stage_axis] + [None] * (l.ndim - 1)
+            if b_sharded and l.ndim >= 3:
+                spec[-1] = batch_axes
+            return P(*spec)
         spec = [stage_axis, None] + [None] * (l.ndim - 2)
         if b_sharded and l.ndim >= 3 + off:
             spec[2 + off] = batch_axes
@@ -908,16 +912,28 @@ def init_pipeline_cache(cfg: ArchConfig, plan: ST.StagePlan, batch: int,
     return jax.tree.map(lambda a: ST._stack_chunks(a, plan), c)
 
 
+def _is_kv_len(path) -> bool:
+    """True only for the ``kv`` subtree's ``len`` offset leaves — scoped so
+    an unrelated cache field that happens to be named ``len`` (e.g. in a
+    future ssm/audio extension) is never silently bumped."""
+    keys = [getattr(p, "key", None) for p in path]
+    return bool(keys) and keys[-1] == "len" and "kv" in keys[:-1]
+
+
 def _restore_len(c_new, c_old):
-    """Copy 'len' counters back from c_old into c_new."""
+    """Copy kv 'len' offsets back from c_old into c_new."""
     def pick(path, new, old):
-        return old if getattr(path[-1], "key", None) == "len" else new
+        return old if _is_kv_len(path) else new
     return jax.tree_util.tree_map_with_path(pick, c_new, c_old)
 
 
-def _advance_len(cache, q_len: int):
+def _advance_len(cache, adv):
+    """Advance the kv 'len' offsets by ``adv`` — a scalar (uniform step) or
+    a per-slot [B] vector (mixed prefill/decode: each request advances by
+    its own valid-token count), broadcast over the trailing slot axis of
+    the [Lc, B] / [V, Lc, B] leaves."""
     def bump(path, leaf):
-        return leaf + q_len if getattr(path[-1], "key", None) == "len" else leaf
+        return leaf + adv if _is_kv_len(path) else leaf
     return jax.tree_util.tree_map_with_path(bump, cache)
 
 
@@ -932,25 +948,30 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     ``q_len=1`` is one-token decode; ``q_len=seq`` is prefill (KV/SSM cache
     populated, logits returned for the last position).  Micro-batches split
     the batch dimension; the per-stage cache is [Lps, B_loc, ...] and each
-    tick dynamic-slices its micro-batch rows.  Cache ``len`` counters are
-    frozen during the tick scan (every micro-batch writes at the same
-    offset) and advanced once at the end.
+    tick dynamic-slices its micro-batch rows.  Cache ``len`` offsets are
+    per-slot [B] vectors, frozen during the tick scan (each row is
+    processed exactly once per step) and advanced once at the end.
 
-    Interleaved (``plan.virtual`` = V > 1) plans are supported for the
-    *prefill* phase only: prefill is throughput-bound, so shrinking the
-    flush bubble by V pays, and the tick scan replays the same compiled
+    Continuous batching: the batch may carry ``n_valid`` [B] int32 — each
+    slot then holds the first ``n_valid`` columns of its row as real
+    tokens (``0`` = idle slot, ``1`` = decode, up to ``q_len`` = chunked
+    prefill) and advances its cache offset by exactly that count.  Rows
+    start at their own per-slot offsets, the returned ``[B, 1, vocab]``
+    logits are gathered at each slot's last valid column, and garbage
+    written by padding columns is causally masked and later overwritten,
+    so mixed prefill chunks and decode ticks share one compiled step.
+    Attention families only (ssm/hybrid/audio recurrent state has no
+    per-token offsets to mask padding with).
+
+    Interleaved (``plan.virtual`` = V > 1) plans replay the same compiled
     schedule table as training (cache leaves are [V, Lc, B, ...]; each
-    tick chunk-indexes them).  One-token decode is latency-bound — every
-    extra ring lap adds S hops to the token's critical path — so
-    ``q_len == 1`` with V > 1 still raises.
+    tick chunk-indexes them).  For prefill the V-times-smaller flush
+    bubble pays directly; one-token decode rides the same table — each
+    extra ring lap adds S hops to the token's critical path, so it is a
+    throughput-over-latency trade the serving scheduler opts into (e.g.
+    to keep one parameter layout for both phases).
     """
     V = plan.virtual
-    if V != 1 and q_len == 1:
-        raise NotImplementedError(
-            "pipelined decode does not support interleaved (virtual>1) "
-            "plans; decode is latency-bound, not flush-bubble-bound — "
-            "use plan_stages(cfg, virtual=1) for decode (prefill may "
-            "keep V > 1)")
     shape_params = jax.eval_shape(
         lambda k: ST.init_stacked_params(cfg, k, plan, param_dtype),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -978,9 +999,20 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     cspecs = cache_specs(cfg, cache_shapes, batch_axes,
                          b_sharded=batch_sharded, stage_axis=stage_ax,
                          virtual=V)
-    batch_spec = dict(tokens=P(batch_axes if batch_sharded else None, None))
-    if cfg.family == "vlm":
-        batch_spec["pos3"] = P(None, batch_axes if batch_sharded else None, None)
+    b_ax = batch_axes if batch_sharded else None
+
+    def batch_spec_for(keys):
+        sp = {}
+        for kk in keys:
+            if kk == "tokens":
+                sp[kk] = P(b_ax, None)
+            elif kk == "n_valid":
+                sp[kk] = P(b_ax)
+            elif kk == "pos3":
+                sp[kk] = P(None, b_ax, None)
+            else:
+                raise ValueError(f"unknown serve batch key {kk!r}")
+        return sp
 
     tab = _ring_tables(lowering)
     MV = M_ * V
@@ -1002,18 +1034,19 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         B_loc = x_all.shape[0]
         assert B_loc % M_ == 0
         mb = B_loc // M_
+        # per-slot cache offsets -> per-row positions, sliced per micro-batch
         cur_len = jnp.asarray(M._cache_len(cache_local), jnp.int32)
-        pos1 = cur_len + jnp.arange(q_len, dtype=jnp.int32)
+        if cur_len.ndim == 0:
+            cur_len = jnp.broadcast_to(cur_len, (B_loc,))
+        pos_all = cur_len[:, None] + jnp.arange(q_len, dtype=jnp.int32)[None]
         if cfg.family == "audio":
-            x_all = x_all + M.sinusoid_pos(
-                jnp.broadcast_to(pos1[None], (B_loc, q_len)),
-                cfg.d_model, x_all.dtype)
+            x_all = x_all + M.sinusoid_pos(pos_all, cfg.d_model, x_all.dtype)
         inj = x_all.reshape(M_, mb, q_len, -1)
         if cfg.family == "audio":
             # decode consumes the cross K/V cache; h_enc is vestigial
             inj = dict(h_dec=inj,
                        h_enc=jnp.zeros((M_, mb, 1, cfg.d_model), x_all.dtype))
-        pos = jnp.broadcast_to(pos1[None], (mb, q_len))
+        pos_mb = pos_all.reshape(M_, mb, q_len)
         pos3 = None
         if batch.get("pos3") is not None:
             pos3 = jnp.moveaxis(batch["pos3"].reshape(3, M_, mb, q_len), 1, 0)
@@ -1055,11 +1088,12 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                 lambda a: lax.dynamic_slice_in_dim(a, mc * mb, mb, 1)
                 if a.ndim >= 2 else a, cache_chunk)
             p3 = None if pos3 is None else pos3[mc]
+            pos_t = pos_mb[mc]
 
             def _run(args):
                 x_in, c_mb = args
                 y, _, c_new = apply_stage(
-                    cfg, lp_t, sm_t, x_in, pos=pos, pos3=p3,
+                    cfg, lp_t, sm_t, x_in, pos=pos_t, pos3=p3,
                     cache=c_mb, tp_axis="tensor", tp_index=tp_index,
                     dp_axis=ep_dp_axis, n_dp=ep_n_dp,
                     fsdp_axis="data" if cfg.fsdp else None,
@@ -1096,7 +1130,7 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             do_collect = ((out_e >= 0) & _at(tab["collect"], oecl)
                           & (stage_idx == S - 1))
             curo = lax.dynamic_index_in_dim(outbuf, oc, 0, keepdims=False)
-            wr = jnp.where(do_collect, _hidden_of(y)[:, -1:], curo)
+            wr = jnp.where(do_collect, _hidden_of(y), curo)
             outbuf = lax.dynamic_update_index_in_dim(outbuf, wr, oc, 0)
             perm = [(i, (i + 1) % S) for i in range(S)]
             x_next = jax.tree.map(lambda a: lax.ppermute(a, stage_ax, perm), y)
@@ -1105,7 +1139,7 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             return (x_next, cache_l, outbuf), None
 
         x0 = jax.tree.map(lambda q: jnp.zeros_like(q[0]), inj)
-        outbuf0 = jnp.zeros((M_, mb, 1, cfg.d_model), x_all.dtype)
+        outbuf0 = jnp.zeros((M_, mb, q_len, cfg.d_model), x_all.dtype)
         carry0 = (x0, cache_local, outbuf0)
         if use_retbuf:
             carry0 = carry0 + (_retbuf_init(inj, S, retbuf_sharded),)
@@ -1113,10 +1147,18 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             tick, carry0, jnp.arange(lowering.n_ticks),
             unroll=pcfg.tick_scan_unroll)
         cache_local, outbuf = carry_out[1], carry_out[2]
-        cache_local = _advance_len(cache_local, q_len)
+        nv = batch.get("n_valid")
+        adv = q_len if nv is None else nv.astype(jnp.int32)
+        cache_local = _advance_len(cache_local, adv)
 
-        h = LYR.rms_norm(outbuf.reshape(B_loc, 1, -1), params["final_norm"],
-                         cfg.norm_eps)
+        # gather each slot's last *valid* column (uniform steps: column -1)
+        hidden = outbuf.reshape(B_loc, q_len, -1)
+        if nv is None:
+            hidden = hidden[:, -1:]
+        else:
+            col = jnp.clip(nv.astype(jnp.int32), 1, q_len) - 1
+            hidden = jnp.take_along_axis(hidden, col[:, None, None], axis=1)
+        h = LYR.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
         table = params.get("head", params["embed"])
         logits = (h @ table.T).astype(jnp.float32)
         # broadcast real logits from the last stage to every stage
@@ -1125,10 +1167,23 @@ def make_serve_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         new_cache = jax.tree.map(lambda a: a[None], cache_local)
         return logits, new_cache
 
-    fn = shard_map(
-        sharded_decode, mesh=mesh,
-        in_specs=(specs, cspecs, batch_spec),
-        out_specs=(P(batch_axes if batch_sharded else None, None, "tensor"),
-                   cspecs),
-        check_rep=False)
+    out_specs = (P(b_ax, None, "tensor"), cspecs)
+    _built: dict = {}
+
+    def fn(params, cache, batch):
+        keys = tuple(sorted(batch))
+        if "n_valid" in keys and cfg.family in ("ssm", "hybrid", "audio"):
+            raise ValueError(
+                f"continuous batching (n_valid) needs per-token cache "
+                f"offsets to mask padding columns; the {cfg.family} "
+                f"family carries recurrent ssm/conv (or cross-attention) "
+                f"state that padding tokens would pollute — serve it "
+                f"with uniform steps instead")
+        if keys not in _built:
+            _built[keys] = shard_map(
+                sharded_decode, mesh=mesh,
+                in_specs=(specs, cspecs, batch_spec_for(keys)),
+                out_specs=out_specs, check_rep=False)
+        return _built[keys](params, cache, batch)
+
     return jax.jit(fn, donate_argnums=(1,)), specs, cspecs, cache_shapes

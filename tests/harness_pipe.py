@@ -155,10 +155,14 @@ def train_loss_decreases(arch):
 
 def serve_driver(arch):
     from repro.launch.serve import main as serve_main
-    toks = serve_main(["--arch", arch, "--reduced", "--data", "2",
-                       "--stages", "2", "--tensor", "2", "--batch", "8",
-                       "--prompt-len", "16", "--gen", "8"])
+    base = ["--arch", arch, "--reduced", "--data", "2", "--stages", "2",
+            "--tensor", "2", "--batch", "8", "--prompt-len", "16",
+            "--gen", "8"]
+    toks = serve_main(base)
     assert toks.shape == (8, 8)
+    # interleaved prefill + donated restack handoff must not change tokens
+    toks_v2 = serve_main(base + ["--virtual", "2"])
+    assert (toks_v2 == toks).all()
     print("OK")
 
 
@@ -414,8 +418,7 @@ def prefill_equivalence(arch="llama3.2-1b", stages=2, tensor=2, virtual=2,
                         microbatches=2, schedule="auto"):
     """Interleaved (V>1) pipelined prefill must match the single-device
     reference — run in two segments so the second consumes the KV cache
-    the first wrote through the chunked [V, Lc, ...] layout.  Decode
-    (q_len=1) on an interleaved plan must still raise."""
+    the first wrote through the chunked [V, Lc, ...] layout."""
     import dataclasses as _dc
     data = 8 // (stages * tensor) or 1
     cfg = get_config(arch).reduced(n_layers=stages * virtual, d_model=128)
@@ -425,13 +428,6 @@ def prefill_equivalence(arch="llama3.2-1b", stages=2, tensor=2, virtual=2,
     params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
     B, P1, P2, maxlen = 8, 8, 8, 32
     pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=schedule)
-    if virtual > 1:
-        try:
-            RT.make_serve_step(cfg, mesh, plan, pcfg, max_len=maxlen,
-                               global_batch=B, q_len=1)
-            raise AssertionError("interleaved decode must raise")
-        except NotImplementedError:
-            pass
     pre1, _, cspecs, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
                                             max_len=maxlen, global_batch=B,
                                             q_len=P1)
@@ -455,6 +451,109 @@ def prefill_equivalence(arch="llama3.2-1b", stages=2, tensor=2, virtual=2,
     print(f"OK maxerr={max(e1, e2):.2e}")
 
 
+
+
+def interleaved_decode(arch="llama3.2-1b", stages=2, tensor=2, virtual=2,
+                       microbatches=2):
+    """One-token pipelined decode on an interleaved (V > 1) plan matches
+    the single-device reference — the former NotImplementedError is gone;
+    decode ticks replay the same compiled table as prefill."""
+    import dataclasses as _dc
+    data = 8 // (stages * tensor) or 1
+    cfg = get_config(arch).reduced(n_layers=stages * virtual, d_model=128)
+    cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=virtual)
+    mesh = _mesh(data, stages, tensor)
+    plan = ST.plan_stages(cfg)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    B, P1, steps, maxlen = 8, 8, 4, 32
+    pcfg = RT.PipelineConfig(n_microbatches=microbatches)
+    prefill, _, cspecs, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
+                                               max_len=maxlen,
+                                               global_batch=B, q_len=P1)
+    serve, _, _, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
+                                        max_len=maxlen, global_batch=B,
+                                        q_len=1)
+    cache = jax.jit(lambda: RT.init_pipeline_cache(cfg, plan, B, maxlen),
+                    out_shardings=jax.tree.map(
+                        lambda s: NamedSharding(mesh, s), cspecs))()
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, P1 + steps), 0,
+                              cfg.vocab)
+    lg, cache = prefill(params, cache, dict(tokens=toks[:, :P1]))
+    got = [np.asarray(lg[:, 0])]
+    for t in range(steps):
+        lg, cache = serve(params, cache, dict(tokens=toks[:, P1 + t:P1 + t + 1]))
+        got.append(np.asarray(lg[:, 0]))
+    rp = _ref_params(cfg, params, plan)
+    rcache = M.init_cache(cfg, B, max_len=maxlen)
+    rlg, rcache = M.decode_step(cfg, rp, dict(tokens=toks[:, :P1]), rcache)
+    errs = [float(np.max(np.abs(got[0] - np.asarray(rlg[:, -1]))))]
+    for t in range(steps):
+        rlg, rcache = M.decode_step(
+            cfg, rp, dict(tokens=toks[:, P1 + t:P1 + t + 1]), rcache)
+        errs.append(float(np.max(np.abs(got[t + 1] - np.asarray(rlg[:, 0])))))
+    assert max(errs) < TOL, errs
+    print(f"OK maxerr={max(errs):.2e}")
+
+
+def serve_continuous(arch="llama3.2-1b", stages=2, tensor=2, virtual=1):
+    """Continuous batching on the pipelined serve step: overlapping
+    requests at staggered arrivals, admitted into cache slots and run as
+    mixed chunked-prefill + decode steps, must produce tokens
+    bit-identical to each request's solo single-device reference."""
+    import copy
+    import dataclasses as _dc
+    from repro.core import serve_sched as SS
+    data = 8 // (stages * tensor) or 1
+    if virtual > 1:
+        cfg = get_config(arch).reduced(n_layers=stages * virtual, d_model=128)
+        cfg = _dc.replace(cfg, stages=stages, tensor=tensor, virtual=virtual)
+        plan = ST.plan_stages(cfg)
+    else:
+        cfg, plan, _ = _setup(arch, stages, tensor)
+    mesh = _mesh(data, stages, tensor)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    n_slots, chunk, maxlen = 8, 4, 32
+    pcfg = RT.PipelineConfig(n_microbatches=2)
+    step, _, cspecs, _ = RT.make_serve_step(cfg, mesh, plan, pcfg,
+                                            max_len=maxlen,
+                                            global_batch=n_slots,
+                                            q_len=chunk)
+    cache = jax.jit(lambda: RT.init_pipeline_cache(cfg, plan, n_slots,
+                                                   maxlen),
+                    out_shardings=jax.tree.map(
+                        lambda s: NamedSharding(mesh, s), cspecs))()
+    rng = np.random.default_rng(7)
+    reqs = [SS.Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab, size=pl).tolist(), max_new=4, arrival=a)
+            for i, (pl, a) in enumerate([(9, 0), (6, 1), (11, 3), (5, 6)])]
+
+    rp = _ref_params(cfg, params, plan if virtual > 1 else None)
+
+    def solo(req):
+        rcache = M.init_cache(cfg, 1, max_len=maxlen)
+        lg, rcache = M.decode_step(cfg, rp,
+                                   dict(tokens=jnp.asarray([req.prompt])),
+                                   rcache)
+        t = int(np.asarray(lg[0, -1, :cfg.vocab]).argmax())
+        out = [t]
+        for _ in range(req.max_new - 1):
+            lg, rcache = M.decode_step(cfg, rp,
+                                       dict(tokens=jnp.asarray([[t]])),
+                                       rcache)
+            t = int(np.asarray(lg[0, 0, :cfg.vocab]).argmax())
+            out.append(t)
+        return out
+
+    refs = {r.rid: solo(r) for r in reqs}
+    eng = SS.ContinuousEngine(cfg, step, params, cache, n_slots=n_slots,
+                              chunk=chunk)
+    done = eng.run(copy.deepcopy(reqs))
+    assert len(done) == len(reqs)
+    for r in done:
+        assert r.generated == refs[r.rid], (r.rid, r.generated, refs[r.rid])
+    kinds = [tuple(w.kind for w in sp.work) for sp in eng.step_log]
+    assert any("prefill" in k and "decode" in k for k in kinds), kinds
+    print(f"OK steps={eng.steps_run} reqs={len(done)} bitident=True")
 
 
 def pod_stage_equivalence():
@@ -529,4 +628,6 @@ if __name__ == "__main__":
      "dp_overlap": dp_overlap,
      "pos3_ring": pos3_ring,
      "prefill_equivalence": prefill_equivalence,
+     "interleaved_decode": interleaved_decode,
+     "serve_continuous": serve_continuous,
      }[mode](*args)

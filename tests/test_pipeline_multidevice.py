@@ -171,9 +171,24 @@ def test_interleaved_prefill_equivalence(arch, stages, tensor, virtual,
                                          microbatches, schedule):
     """Pipelined prefill on an interleaved (V>1) plan: two-segment prefill
     through the chunk-stacked cache must match the single-device
-    reference; interleaved one-token decode must still raise."""
+    reference."""
     run_case("prefill_equivalence", arch, str(stages), str(tensor),
              str(virtual), str(microbatches), schedule)
+
+
+def test_interleaved_decode_equivalence():
+    """One-token decode on an interleaved (V>1) plan — formerly a
+    NotImplementedError — must match the single-device reference through
+    the chunk-stacked [S, V, Lc, ...] cache."""
+    run_case("interleaved_decode", "llama3.2-1b")
+
+
+def test_continuous_batching_serve():
+    """Open-loop continuous batching: staggered arrivals admitted into
+    slots of a paged KV cache, chunked prefill mixed with running
+    decodes in single steps; every request's tokens must be
+    bit-identical to its solo single-device reference."""
+    run_case("serve_continuous", "llama3.2-1b", timeout=540)
 
 
 def test_pod_as_stage_pipeline():

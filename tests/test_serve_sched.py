@@ -1,0 +1,245 @@
+"""Unit tests for the continuous-batching serving layer: scheduler
+admission/roles, mixed op tables, the slot-memory budget, the kv-scoped
+cache-offset surgery, and the donation contracts the serving runtime
+relies on (restack handoff + slot reset free their inputs)."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import serve_sched as SS
+from repro.models import model as M
+from repro.pipeline import runtime as RT
+from repro.pipeline import stage as ST
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: admission, per-step roles, retirement.
+# ---------------------------------------------------------------------------
+
+def _req(rid, plen, max_new=2, arrival=0):
+    return SS.Request(rid=rid, prompt=list(range(1, plen + 1)),
+                      max_new=max_new, arrival=arrival)
+
+
+def test_admission_lowest_free_slot_fifo():
+    s = SS.ServeScheduler(n_slots=2, chunk=4)
+    a, b, c = _req(0, 3), _req(1, 3), _req(2, 3)
+    assert s.admit(a) and a.slot == 0
+    assert s.admit(b) and b.slot == 1
+    assert not s.admit(c)                 # full
+    s.slots[0] = None                     # retire a
+    assert s.admit(c) and c.slot == 0     # lowest free slot reused
+
+
+def test_plan_step_mixed_roles_and_chunking():
+    s = SS.ServeScheduler(n_slots=3, chunk=4)
+    pre = _req(0, 10)                     # needs 4 + 4 + 2 bites
+    dec = _req(1, 2)
+    s.admit(pre), s.admit(dec)
+    dec.pos = 2                           # prompt done -> decoding
+    dec.generated = [77]
+    sp = s.plan_step()
+    assert [w.kind for w in sp.work] == [SS.PREFILL, SS.DECODE, SS.IDLE]
+    assert sp.n_valid.tolist() == [4, 1, 0]
+    assert sp.tokens[0, :4].tolist() == pre.prompt[:4]
+    assert sp.tokens[1, 0] == 77          # decode feeds last sampled token
+    assert sp.busy == 2
+
+
+def test_observe_prefill_to_decode_handoff_and_retire():
+    """Mid-prompt chunks discard their logits; the chunk that completes
+    the prompt emits the FIRST new token (the V>1 handoff bug class);
+    retirement frees the slot."""
+    s = SS.ServeScheduler(n_slots=1, chunk=4)
+    r = _req(0, 6, max_new=2)
+    s.admit(r)
+    sp = s.plan_step()                    # bite 1: 4 prompt tokens
+    s.observe(sp, np.array([11]), t=0)
+    assert r.generated == [] and r.pos == 4
+    sp = s.plan_step()                    # bite 2 completes the prompt
+    assert sp.n_valid.tolist() == [2]
+    s.observe(sp, np.array([22]), t=1)
+    assert r.generated == [22] and r.t_first == 1
+    sp = s.plan_step()                    # decode tick -> max_new reached
+    assert sp.work[0].kind == SS.DECODE
+    fin = s.observe(sp, np.array([33]), t=2)
+    assert fin == [r] and r.generated == [22, 33] and r.t_done == 2
+    assert s.slots[0] is None and s.retired == [r]
+
+
+def test_engine_run_returns_only_newly_retired():
+    """Repeated ``run`` calls on one engine (the sequential baseline)
+    must not double-count earlier retirements."""
+    cfg = get_config("llama3.2-1b").reduced()
+    step = SS.make_local_serve_step(cfg)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache = M.init_cache(cfg, 2, max_len=16)
+    eng = SS.ContinuousEngine(cfg, step, params, cache, 2, 4)
+    first = eng.run([_req(0, 3, max_new=1)])
+    second = eng.run([_req(1, 3, max_new=1)])
+    assert [r.rid for r in first] == [0]
+    assert [r.rid for r in second] == [1]
+    assert [r.rid for r in eng.sched.retired] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Mixed op tables through the schedplan IR.
+# ---------------------------------------------------------------------------
+
+def test_mixed_op_table_roles_follow_microbatches():
+    work = [SS.SlotWork(0, SS.PREFILL, 4, 0), SS.SlotWork(1, SS.DECODE, 1, 1),
+            SS.SlotWork(2, SS.DECODE, 1, 2), SS.SlotWork(3, SS.IDLE, 0)]
+    plan, roles = SS.mixed_op_table(work, M=2, N=2)
+    assert roles == {0: (SS.PREFILL, SS.DECODE), 1: (SS.DECODE, SS.IDLE)}
+    # micro-batch 0 is a genuinely mixed prefill+decode bundle
+    assert len(set(roles[0])) > 1
+    txt = SS.format_mixed_table(plan, roles)
+    assert "F0[PD]" in txt and "F1[D-]" in txt
+    # every micro-batch's F op appears on every device exactly once
+    for dev, ops in enumerate(plan.device_ops):
+        fs = [op.m for op in ops if op.kind == "F"]
+        assert sorted(fs) == [0, 1], (dev, fs)
+
+
+def test_mixed_op_table_interleaved_plan():
+    work = [SS.SlotWork(0, SS.DECODE, 1, 0), SS.SlotWork(1, SS.DECODE, 1, 1)]
+    plan, roles = SS.mixed_op_table(work, M=2, N=2, V=2)
+    assert plan.V == 2
+    txt = SS.format_mixed_table(plan, roles)
+    assert "F0.0[D]" in txt and "F0.1[D]" in txt
+
+
+# ---------------------------------------------------------------------------
+# Memory gating: slots <-> cache bytes (explorer analogue).
+# ---------------------------------------------------------------------------
+
+def test_kv_bytes_per_slot_matches_cache():
+    for arch in ("llama3.2-1b", "deepseek-v2-lite-16b"):
+        cfg = get_config(arch).reduced()
+        got = SS.kv_bytes_per_slot(cfg, max_len=32)
+        kv = M.init_cache(cfg, 1, max_len=32)["kv"]
+        real = sum(a.nbytes for k, a in kv.items() if k != "len")
+        assert got == real, (arch, got, real)
+
+
+def test_serve_slot_budget_floors_and_gates():
+    cfg = get_config("llama3.2-1b").reduced()
+    per = SS.kv_bytes_per_slot(cfg, 32) / cfg.n_layers \
+        * -(-cfg.n_layers // 2)  # 2-stage per-slot bytes
+    assert SS.serve_slot_budget(cfg, 32, per * 0.5, n_stages=2) == 0
+    assert SS.serve_slot_budget(cfg, 32, per * 7.5, n_stages=2,
+                                microbatches=4) == 4  # floored from 7
+    assert SS.serve_slot_budget(cfg, 32, per * 7.5, n_stages=2,
+                                weight_bytes=per * 4,
+                                microbatches=1) == 3  # weights charged
+    big = SS.serve_slot_budget(cfg, 32, per * 100, n_stages=2)
+    assert big > SS.serve_slot_budget(cfg, 32, per * 10, n_stages=2)
+
+
+# ---------------------------------------------------------------------------
+# kv-scoped offset surgery: _advance_len/_restore_len touch ONLY kv lens.
+# ---------------------------------------------------------------------------
+
+def _kv_len_paths(cache):
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    return {jax.tree_util.keystr(p) for p, _ in flat
+            if RT._is_kv_len(p)}
+
+
+@pytest.mark.parametrize("arch,pinned", [
+    ("llama3.2-1b", {"['kv']['len']"}),
+    ("deepseek-v2-lite-16b", {"['kv']['len']"}),
+    ("hymba-1.5b", {"['kv']['len']"}),        # ssm subtree must NOT match
+    ("whisper-base", {"['kv']['len']"}),      # xk/xv must NOT match
+])
+def test_advance_len_scope_pinned(arch, pinned):
+    cfg = get_config(arch).reduced()
+    cache = M.init_cache(cfg, batch=3, max_len=8, enc_len=4)
+    assert _kv_len_paths(cache) == pinned
+    adv = RT._advance_len(cache, jnp.array([1, 2, 3]))
+    flat0 = jax.tree_util.tree_flatten_with_path(cache)[0]
+    flat1 = {jax.tree_util.keystr(p): a
+             for p, a in jax.tree_util.tree_flatten_with_path(adv)[0]}
+    for p, a in flat0:
+        key = jax.tree_util.keystr(p)
+        if key in pinned:
+            assert (flat1[key] == a + jnp.array([1, 2, 3])).all()
+        else:
+            assert (flat1[key] == a).all(), key  # untouched bit-for-bit
+    back = RT._restore_len(adv, cache)
+    assert jax.tree.all(jax.tree.map(
+        lambda x, y: bool((x == y).all()), back, cache))
+
+
+def test_advance_len_scalar_broadcasts_over_slots():
+    cfg = get_config("llama3.2-1b").reduced()
+    cache = M.init_cache(cfg, batch=2, max_len=8)
+    adv = RT._advance_len(cache, 5)
+    assert (adv["kv"]["len"] == 5).all()
+    assert adv["kv"]["len"].shape == (cfg.n_layers, 2)
+
+
+# ---------------------------------------------------------------------------
+# Donation pins: the serving handoffs must FREE their inputs (the old
+# eager paths held params+cache twice).
+# ---------------------------------------------------------------------------
+
+def test_reset_slot_offsets_donates_cache():
+    cfg = get_config("llama3.2-1b").reduced()
+    cache = M.init_cache(cfg, batch=4, max_len=8)
+    cache = RT._advance_len(cache, 3)
+    old_leaves = jax.tree.leaves(cache)
+    out = SS.reset_slot_offsets(cache, np.array([True, False, True, False]))
+    assert out["kv"]["len"][:, 0].tolist() == [0] * cfg.n_layers
+    assert out["kv"]["len"][:, 1].tolist() == [3] * cfg.n_layers
+    assert all(l.is_deleted() for l in old_leaves)
+
+
+def test_restack_handoff_frees_prefill_buffers():
+    """The V>1 prefill->decode restack (serve.py) runs as one donated
+    jitted call and must not leave the prefill-layout copies resident:
+    leaves whose layout survives (embed/head/final_norm pass-throughs)
+    are aliased in place and deleted by the donation; the chunk-stacked
+    ``layers``/cache leaves change shape (XLA cannot alias them — the
+    'donated buffers were not usable' warning) and must be freed the
+    moment the caller drops its reference, which serve.py does with
+    ``del params_p`` right after the handoff."""
+    import weakref
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(
+        n_layers=4, d_model=64), stages=2, virtual=2)
+    plan_p = ST.plan_stages(cfg)                   # [S, V, Lc, ...]
+    plan = ST.plan_stages(cfg, virtual=1)          # [S, Lps, ...]
+    params_p = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan_p)
+    cache_p = RT.init_pipeline_cache(cfg, plan_p, 2, 8)
+
+    def _restack(p, c):
+        p2 = ST.restack_params(p, plan_p, plan, cfg.n_layers)
+        c2 = jax.tree.map(
+            lambda a: ST.restack_layers(a, plan_p, plan, cfg.n_layers), c)
+        return p2, c2
+
+    fn = jax.jit(_restack, donate_argnums=(0, 1))
+    passthrough = [l for k, l in params_p.items() if k != "layers"]
+    refolded = [weakref.ref(l) for l in
+                jax.tree.leaves(params_p["layers"])
+                + jax.tree.leaves(cache_p)]
+    assert refolded
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        params, cache = fn(params_p, cache_p)
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    assert all(l.is_deleted() for l in passthrough)   # aliased in place
+    del params_p, cache_p                             # what serve.py does
+    assert all(r() is None for r in refolded)         # ...frees the rest
+    # and the restack itself is correct: layer order survives the re-fold
+    ref = ST.restack_params(
+        ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan_p),
+        plan_p, plan, cfg.n_layers)
+    assert jax.tree.all(jax.tree.map(
+        lambda x, y: bool((x == y).all()), params, ref))
