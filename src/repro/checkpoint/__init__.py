@@ -1,1 +1,5 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint
+from repro.checkpoint.ckpt import (CheckpointMismatch, checkpoint_meta,
+                                   checkpoint_step, restore_checkpoint,
+                                   save_checkpoint)
+from repro.checkpoint.reshard import (layout_dict, plan_from_layout,
+                                      reshard_checkpoint, reshard_tree)

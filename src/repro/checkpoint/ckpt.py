@@ -2,6 +2,18 @@
 
 Arrays are gathered to host (fully replicated view) before writing; restore
 re-places each leaf with the provided sharding tree when given.
+
+Restore semantics are driven by the checkpoint's own ``.meta`` sidecar, not
+by the caller's ``like`` tree: each leaf is cast back to the dtype it was
+*saved* with (``meta["dtypes"]`` — bf16 survives the f32 npz encoding), and
+key-set or shape disagreements between the file and ``like`` raise a
+:class:`CheckpointMismatch` naming the offending keys instead of a bare
+``KeyError``.  ``like`` supplies only structure and expected shapes; its
+leaves may be ``jax.ShapeDtypeStruct``s.
+
+The ``.meta`` sidecar also carries an open ``extra`` dict (the elastic
+layer stores the stage layout there — see
+:mod:`repro.checkpoint.reshard`).
 """
 from __future__ import annotations
 
@@ -11,6 +23,15 @@ from typing import Any, Optional
 import msgpack
 import numpy as np
 import jax
+
+
+class CheckpointMismatch(ValueError):
+    """The checkpoint on disk does not match the requested ``like`` tree
+    (missing/unexpected keys or shape disagreement)."""
+
+
+def _is_namedtuple(tree) -> bool:
+    return isinstance(tree, tuple) and hasattr(type(tree), "_fields")
 
 
 def _flatten(tree, prefix=""):
@@ -26,26 +47,69 @@ def _flatten(tree, prefix=""):
     return out
 
 
-def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    extra: Optional[dict] = None) -> None:
+    """Write ``tree`` to ``path.npz`` + ``path.meta``.  ``extra`` is an
+    arbitrary msgpack-able dict stored in the sidecar (layout descriptors
+    etc.; read back with :func:`checkpoint_meta`)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     arrays, dtypes = {}, {}
     for k, v in flat.items():
         a = np.asarray(jax.device_get(v))
         dtypes[k] = str(a.dtype)
-        if a.dtype.kind == "V":          # bfloat16 has no numpy equivalent
-            a = a.astype(np.float32)
+        if a.dtype.kind == "V":          # bfloat16 has no native npz encoding
+            a = a.astype(np.float32)     # dtypes[k] still says 'bfloat16'
         arrays[k] = a
     np.savez(path + ".npz", **arrays)
-    meta = dict(step=step, keys=sorted(arrays), dtypes=dtypes)
+    meta = dict(step=step, keys=sorted(arrays), dtypes=dtypes,
+                extra=extra or {})
     with open(path + ".meta", "wb") as f:
         f.write(msgpack.packb(meta))
 
 
+def _load_meta(path: str) -> dict:
+    with open(path + ".meta", "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
 def restore_checkpoint(path: str, like: Any,
                        shardings: Optional[Any] = None) -> Any:
+    """Rebuild the pytree saved at ``path`` into the structure of ``like``.
+
+    Leaves come back in their SAVED dtype (``meta["dtypes"]``), not the
+    ``like`` leaf's — a bf16 checkpoint restores as bf16 even when the
+    caller hands an f32 skeleton.  Sequences are rebuilt with their own
+    type; NamedTuple nodes (optax-style opt states) are splatted through
+    their constructor.  ``shardings`` (a matching pytree of shardings)
+    triggers a per-leaf ``device_put``.
+    """
     data = np.load(path + ".npz")
+    meta = _load_meta(path)
+    dtypes = meta.get("dtypes", {})
     flat_like = _flatten(like)
+
+    saved_keys = set(data.files)
+    like_keys = set(flat_like)
+    if saved_keys != like_keys:
+        missing = sorted(like_keys - saved_keys)
+        unexpected = sorted(saved_keys - like_keys)
+        raise CheckpointMismatch(
+            f"checkpoint {path!r} does not match the requested tree: "
+            + (f"missing keys {missing}" if missing else "")
+            + (" ; " if missing and unexpected else "")
+            + (f"unexpected keys {unexpected}" if unexpected else ""))
+    bad_shapes = []
+    for k in sorted(like_keys):
+        want = tuple(getattr(flat_like[k], "shape", np.shape(flat_like[k])))
+        got = data[k].shape
+        if want != got:
+            bad_shapes.append(f"{k}: saved {got} != expected {want}")
+    if bad_shapes:
+        raise CheckpointMismatch(
+            f"checkpoint {path!r} shape mismatch (reshard it first? see "
+            f"repro.checkpoint.reshard): " + " ; ".join(bad_shapes))
+
     flat_sh = _flatten(shardings) if shardings is not None else {}
 
     def rebuild(tree, prefix=""):
@@ -53,15 +117,25 @@ def restore_checkpoint(path: str, like: Any,
             return {k: rebuild(tree[k], f"{prefix}{k}/") for k in tree}
         if isinstance(tree, (list, tuple)):
             vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            if _is_namedtuple(tree):
+                return type(tree)(*vals)
             return type(tree)(vals)
         key = prefix[:-1]
-        arr = jax.numpy.asarray(data[key]).astype(flat_like[key].dtype)
+        arr = data[key]
+        dt = dtypes.get(key)
+        if dt is not None and str(arr.dtype) != dt:
+            arr = arr.astype(dt)      # ml_dtypes makes 'bfloat16' a valid name
+        arr = jax.numpy.asarray(arr)
         sh = flat_sh.get(key)
         return jax.device_put(arr, sh) if sh is not None else arr
 
     return rebuild(like)
 
 
+def checkpoint_meta(path: str) -> dict:
+    """Full ``.meta`` sidecar: ``step``, ``keys``, ``dtypes``, ``extra``."""
+    return _load_meta(path)
+
+
 def checkpoint_step(path: str) -> int:
-    with open(path + ".meta", "rb") as f:
-        return msgpack.unpackb(f.read())["step"]
+    return _load_meta(path)["step"]

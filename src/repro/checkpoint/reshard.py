@@ -1,0 +1,152 @@
+"""Plan-to-plan checkpoint resharding — the elastic layer's relayout step.
+
+A training job saves ``{params, opt, step}`` with every layer-stacked leaf
+in the layout of its :class:`~repro.pipeline.stage.StagePlan`:
+``[S, Lps, ...]`` for a contiguous plan, ``[S, V, Lc, ...]`` for an
+interleaved one.  When the fleet shrinks, grows, or re-skews, the next
+incarnation of the job runs under a *different* ``(N, V)`` layout — this
+module repartitions a saved checkpoint between any two such layouts so the
+job resumes on the new fleet with bit-identical real-layer weights and
+optimizer moments.
+
+Mechanics: every leaf under a ``layers`` subtree (params AND the
+optimizer's per-parameter moments, which mirror the params structure) is
+unstacked to the global layer order, trimmed to the real layers, re-padded
+and re-stacked for the target plan via the existing
+:func:`repro.pipeline.stage.restack_layers` machinery.  The relayout is a
+pure gather: real-layer values are moved bit-for-bit; padded slots (which
+are inactive — pass-through forward, zero gradient) are re-seeded by
+repeating the last real layer.  Non-layer leaves (embed / head /
+final_norm, scalar step counters) pass through untouched, so the two
+layouts must agree on everything outside the stage stacking (in
+particular the tensor degree's vocab padding).
+
+Two entry points:
+
+- :func:`reshard_tree` — in-memory pytree relayout (the ``--resume`` path
+  uses it when the checkpoint's recorded layout differs from the target).
+- :func:`reshard_checkpoint` — file-to-file relayout on the host, no
+  devices needed (the operator-side path: repartition a dead 8-device
+  job's checkpoint for the 4 skewed survivors before relaunching).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+from repro.checkpoint.ckpt import checkpoint_meta, CheckpointMismatch
+from repro.pipeline.stage import StagePlan, restack_layers
+
+
+def layout_dict(plan: StagePlan, n_layers: int) -> dict:
+    """Msgpack-able layout descriptor stored in the checkpoint's ``extra``
+    meta (``extra["layout"]``) so resume can detect a layout change."""
+    return dict(stages=plan.n_stages, tensor=plan.tensor,
+                virtual=plan.virtual,
+                layers_per_stage=plan.layers_per_stage,
+                n_layers_padded=plan.n_layers_padded,
+                n_layers=int(n_layers))
+
+
+def plan_from_layout(layout: dict) -> StagePlan:
+    return StagePlan(n_stages=layout["stages"], tensor=layout["tensor"],
+                     layers_per_stage=layout["layers_per_stage"],
+                     n_layers_padded=layout["n_layers_padded"],
+                     virtual=layout.get("virtual", 1))
+
+
+def _lead_shape(plan: StagePlan) -> tuple[int, ...]:
+    if plan.virtual == 1:
+        return (plan.n_stages, plan.layers_per_stage)
+    return (plan.n_stages, plan.virtual, plan.layers_per_stage)
+
+
+def _is_layer_path(names) -> bool:
+    """True for leaves living under a ``layers`` subtree (the stacked
+    per-layer parameters and their optimizer-moment mirrors)."""
+    return "layers" in names[:-1]
+
+
+def _check_lead(name: str, shape, plan: StagePlan) -> None:
+    lead = _lead_shape(plan)
+    if tuple(shape[:len(lead)]) != lead:
+        raise CheckpointMismatch(
+            f"layer leaf {name!r} has shape {tuple(shape)}, which does not "
+            f"carry the source plan's stacking {lead} "
+            f"(S={plan.n_stages}, V={plan.virtual}, "
+            f"Lc={plan.layers_per_stage})")
+
+
+def reshard_tree(tree: Any, plan_from: StagePlan, plan_to: StagePlan,
+                 n_layers: int) -> Any:
+    """Relayout every layer-stacked leaf of ``tree`` (a ``{params, opt}``
+    state or any subtree of one) from ``plan_from``'s chunk stacking to
+    ``plan_to``'s.  Real-layer values are preserved bit-for-bit."""
+    if n_layers > plan_to.n_layers_padded:
+        raise CheckpointMismatch(
+            f"target plan holds {plan_to.n_layers_padded} padded layers "
+            f"< {n_layers} real layers")
+
+    def leaf(path, a):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        if not _is_layer_path(names):
+            return a
+        _check_lead("/".join(str(n) for n in names), a.shape, plan_from)
+        return restack_layers(a, plan_from, plan_to, n_layers)
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def reshard_checkpoint(src: str, dst: str, plan_to: StagePlan,
+                       plan_from: Optional[StagePlan] = None,
+                       n_layers: Optional[int] = None) -> dict:
+    """File-to-file resharding: read the checkpoint at ``src`` (npz +
+    meta), restack every ``layers`` leaf from ``plan_from`` to
+    ``plan_to``, and write ``dst``.  ``plan_from``/``n_layers`` default to
+    the layout recorded in the source's meta (``extra["layout"]``).
+
+    Dtypes, the step counter, and all non-layer leaves are preserved
+    exactly; the written meta records ``plan_to``'s layout.  Returns the
+    new layout dict.  Runs entirely on the host — no accelerator (or any
+    particular device count) is needed, so a checkpoint from a dead
+    8-device job can be repartitioned anywhere before the 4-device
+    relaunch."""
+    import os
+
+    import msgpack
+
+    meta = checkpoint_meta(src)
+    layout = (meta.get("extra") or {}).get("layout")
+    if plan_from is None or n_layers is None:
+        if layout is None:
+            raise CheckpointMismatch(
+                f"checkpoint {src!r} records no layout in its meta; pass "
+                f"plan_from and n_layers explicitly")
+        plan_from = plan_from or plan_from_layout(layout)
+        n_layers = n_layers if n_layers is not None else layout["n_layers"]
+    if plan_from.tensor != plan_to.tensor:
+        raise CheckpointMismatch(
+            f"tensor degree change ({plan_from.tensor} -> {plan_to.tensor}) "
+            f"would re-pad the vocab; reshard only moves stage boundaries "
+            f"and virtual chunks")
+
+    os.makedirs(os.path.dirname(dst) or ".", exist_ok=True)
+    data = np.load(src + ".npz")
+    out = {}
+    for key in data.files:
+        a = data[key]
+        if _is_layer_path(key.split("/")):
+            _check_lead(key, a.shape, plan_from)
+            a = np.asarray(restack_layers(a, plan_from, plan_to, n_layers))
+        out[key] = a
+    np.savez(dst + ".npz", **out)
+    new_layout = layout_dict(plan_to, n_layers)
+    meta = dict(meta)
+    extra = dict(meta.get("extra") or {})
+    extra["layout"] = new_layout
+    meta["extra"] = extra
+    with open(dst + ".meta", "wb") as f:
+        f.write(msgpack.packb(meta))
+    return new_layout

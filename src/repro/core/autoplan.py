@@ -139,3 +139,132 @@ def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
         raise ValueError(f"no feasible (stage, tensor) factorisation for "
                          f"{cfg.arch_id} on model_axis={model_axis}")
     return best
+
+
+def _derated(base: DeviceSpec, factor: float) -> DeviceSpec:
+    """``base`` slowed down by ``factor`` (>1 = slower): the drift
+    monitor's per-stage slowdown becomes a cost-model derating of both
+    compute and HBM streaming."""
+    if factor <= 0:
+        raise ValueError(f"slowdown factor must be positive, got {factor}")
+    return dataclasses.replace(
+        base,
+        name=f"{base.name}~{factor:.2f}x",
+        peak_flops=base.peak_flops / factor,
+        hbm_bandwidth=base.hbm_bandwidth / factor)
+
+
+def _same_config(a: AutoPlan, b: AutoPlan) -> bool:
+    if (a.stages, a.tensor, a.n_microbatches, a.virtual) != \
+            (b.stages, b.tensor, b.n_microbatches, b.virtual):
+        return False
+    from repro.core.schedplan import canonical_name
+    try:
+        return canonical_name(a.schedule) == canonical_name(b.schedule)
+    except ValueError:
+        return a.schedule == b.schedule
+
+
+def replan(cfg: ArchConfig, incumbent: AutoPlan, *, budget_s: float,
+           global_batch: int, seq_len: int,
+           device: DeviceSpec = TPU_V5E,
+           devices: Optional[Sequence[DeviceSpec]] = None,
+           slowdown: Optional[Sequence[float]] = None,
+           max_microbatches: Optional[int] = None,
+           mem_limit: Optional[int] = None,
+           clock=None) -> AutoPlan:
+    """Deadline-bounded re-search around a running plan.
+
+    Triggered by the drift monitor: the fleet the incumbent was planned
+    for no longer matches reality, so re-run the (stages, tensor, M, V,
+    schedule) exploration under the CURRENT cost model and return the
+    winner — or the ``incumbent`` itself when the search runs out of
+    ``budget_s`` seconds before evaluating anything, or when the best
+    configuration found IS the incumbent's (identity-testable: callers
+    compare ``replan(...) is plan`` to skip a no-op restart).
+
+    The current cost model comes from either an explicit per-stage
+    ``devices`` list or a ``slowdown`` vector (the drift monitor's
+    measured/planned ratios, length ``incumbent.stages``), which derates
+    the baseline ``device`` per stage.  Either pins the stage count to
+    the incumbent's — live replanning moves micro-batching, layer cuts,
+    virtual chunking, and the schedule; CHANGING the device count is the
+    restart path (kill, :func:`repro.checkpoint.reshard.reshard_checkpoint`,
+    relaunch).
+
+    Never-worse guarantee: the incumbent's (stages, tensor)
+    factorisation is evaluated FIRST (before any deadline check can
+    exhaust the budget) with the incumbent's micro-batch count forced
+    into the candidate set, and the explorer's schedule space contains
+    the incumbent's schedule — so the returned plan's predicted step
+    time under the new cost model is <= the incumbent config's.  The
+    deadline is checked between candidates (search work is not
+    preempted mid-candidate); ``budget_s <= 0`` returns the incumbent
+    immediately.
+
+    ``clock`` is injectable for tests (defaults to
+    ``time.monotonic``)."""
+    import time as _time
+    clock = clock or _time.monotonic
+    if budget_s <= 0:
+        return incumbent
+    if slowdown is not None:
+        if devices is not None:
+            raise ValueError("pass either devices or slowdown, not both")
+        if len(slowdown) != incumbent.stages:
+            raise ValueError(
+                f"slowdown vector has {len(slowdown)} entries, incumbent "
+                f"runs {incumbent.stages} stages")
+        devices = [_derated(device, f) for f in slowdown]
+
+    model_axis = incumbent.stages * incumbent.tensor
+    data_axis = incumbent.data_axis
+    prof = profile_arch(cfg, seq=seq_len)
+    local_batch_tokens = max(1, global_batch // data_axis) * seq_len
+    b_loc = max(1, global_batch // data_axis)
+
+    facts = list(_valid_factorisations(cfg, model_axis))
+    inc_key = (incumbent.stages, incumbent.tensor)
+    facts.sort(key=lambda st: st != inc_key)   # incumbent's (s, t) first
+
+    t0 = clock()
+    best: Optional[AutoPlan] = None
+    for i, (s, t) in enumerate(facts):
+        if i > 0 and clock() - t0 >= budget_s:
+            break
+        if devices is not None:
+            if s != len(devices):
+                continue
+            cluster = heterogeneous_cluster(
+                [_stage_device(d, t) for d in devices])
+        else:
+            cluster = homogeneous_cluster(_stage_device(device, t), s)
+        ms = [m for m in (1, 2, 4, 8, 16, 32)
+              if m <= b_loc and b_loc % m == 0]
+        if max_microbatches:
+            ms = [m for m in ms if m <= max_microbatches] or ms[:1]
+        if (incumbent.n_microbatches <= b_loc
+                and b_loc % incumbent.n_microbatches == 0
+                and incumbent.n_microbatches not in ms):
+            ms.append(incumbent.n_microbatches)
+        r = explore(prof, cluster, local_batch_tokens,
+                    candidate_Ms=sorted(ms), consider_dp=False,
+                    mem_limit=mem_limit, dp_degree=data_axis)
+        if r.plan is None:
+            continue
+        cand = AutoPlan(stages=s, tensor=t, n_microbatches=max(1, r.M),
+                        schedule=r.schedule or "1F1B-AS",
+                        predicted_step_time=r.minibatch_time,
+                        predicted_speedup_over_dp=r.speedup_over_dp,
+                        virtual=r.V, mem_limit=mem_limit or 0,
+                        data_axis=data_axis,
+                        predicted_sync_exposed=(
+                            r.grad_sync_eval.exposed
+                            if r.grad_sync_eval else 0.0))
+        if best is None or cand.predicted_step_time < best.predicted_step_time:
+            best = cand
+    if best is None:
+        return incumbent
+    if _same_config(best, incumbent):
+        return incumbent
+    return best

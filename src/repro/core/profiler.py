@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.core.hardware import DeviceSpec
 from repro.configs.base import ArchConfig
@@ -379,8 +379,7 @@ def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
     ratio out of (0.02, 0.98)) — callers fall back to the per-layer
     analytic split."""
     try:
-        import jax
-        import jax.numpy as jnp
+        import jax  # noqa: F401
     except Exception:
         return None
     if kind not in ("dense", "moe", "ssm"):
@@ -391,74 +390,9 @@ def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
     if kind == "ssm" and cfg.ssm is None:
         return None
     try:
-        d = max(32, min(cfg.d_model, 256))
-        ff = max(2 * d, min(cfg.d_ff or 4 * d, 4 * d))
-        seq = max(8, min(seq, 256))
-        key = jax.random.PRNGKey(0)
-        ks = jax.random.split(key, 10)
-        scale = 1.0 / math.sqrt(d)
-        if kind == "ssm":
-            s_ = cfg.ssm
-            di = max(d, min(s_.expand * d, 2 * d))
-            p0 = {"w_in": jax.random.normal(ks[0], (d, 3 * di)) * scale,
-                  "w_out": jax.random.normal(ks[3], (di, d)) * scale}
+        import jax
 
-            def mix(p, x):
-                xi, a_raw, z = jnp.split(x @ p["w_in"], 3, axis=-1)
-                a = jax.nn.sigmoid(a_raw)      # decay in (0, 1)
-
-                def comb(l, r):
-                    # h_t = a_t * h_{t-1} + x_t as a monoid over
-                    # (decay, state) pairs — parameter-free, so its
-                    # vjp contributes only to the B (input-grad) half
-                    return (l[0] * r[0], r[0] * l[1] + r[1])
-
-                _, h = jax.lax.associative_scan(comb, (a, xi), axis=0)
-                return (h * jax.nn.silu(z)) @ p["w_out"]
-        else:
-            p0 = {"wq": jax.random.normal(ks[0], (d, d)) * scale,
-                  "wk": jax.random.normal(ks[1], (d, d)) * scale,
-                  "wv": jax.random.normal(ks[2], (d, d)) * scale,
-                  "wo": jax.random.normal(ks[3], (d, d)) * scale}
-
-            def mix(p, x):
-                q, k, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
-                s = jax.nn.softmax(q @ k.T * scale, axis=-1)
-                return (s @ v) @ p["wo"]
-        if kind == "moe":
-            m = cfg.moe
-            ne = max(2, min(4, m.n_shared + m.n_routed))
-            tk = max(1, min(m.top_k, ne))
-            fe = max(16, min(m.d_ff_expert, d))
-            p0.update(
-                wr=jax.random.normal(ks[4], (d, ne)) * scale,
-                we1=jax.random.normal(ks[5], (ne, d, fe)) * scale,
-                we2=jax.random.normal(ks[6], (ne, fe, d)) * scale)
-
-            def ffn(p, h):
-                gates = jax.nn.softmax(h @ p["wr"], axis=-1)
-                kth = jnp.sort(gates, axis=-1)[:, -tk][:, None]
-                gates = jnp.where(gates >= kth, gates, 0.0)
-                y = jax.nn.silu(jnp.einsum("sd,edf->esf", h, p["we1"]))
-                y = jnp.einsum("esf,efd->esd", y, p["we2"])
-                return jnp.einsum("se,esd->sd", gates, y)
-        elif kind == "ssm" and not cfg.d_ff:
-            # pure-Mamba blocks are mixer-only (no FFN)
-            def ffn(p, h):
-                return h
-        else:
-            p0.update(w1=jax.random.normal(ks[4], (d, ff)) * scale,
-                      w2=jax.random.normal(ks[5], (ff, d)) * scale)
-
-            def ffn(p, h):
-                return jax.nn.silu(h @ p["w1"]) @ p["w2"]
-
-        x = jax.random.normal(ks[7], (seq, d))
-
-        def block(p, x):
-            return ffn(p, mix(p, x))
-
-        ct = jnp.ones((seq, d))
+        p0, x, ct, block = _block_proxy(cfg, seq, kind)
 
         def vjp_full(p, x, ct):
             return jax.vjp(block, p, x)[1](ct)
@@ -476,3 +410,266 @@ def measure_w_frac(cfg: ArchConfig, seq: int = 128, iters: int = 5,
         return wf
     except Exception:
         return None
+
+
+def _block_proxy(cfg: ArchConfig, seq: int, kind: str):
+    """Build the reduced, CPU-runnable transformer-block proxy of
+    ``kind`` (the layer :func:`measure_w_frac` documents) and return
+    ``(params, x, cotangent, block_fn)`` — shared by the W-split and
+    per-stage live timers."""
+    import jax
+    import jax.numpy as jnp
+
+    d = max(32, min(cfg.d_model, 256))
+    ff = max(2 * d, min(cfg.d_ff or 4 * d, 4 * d))
+    seq = max(8, min(seq, 256))
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 10)
+    scale = 1.0 / math.sqrt(d)
+    if kind == "ssm":
+        s_ = cfg.ssm
+        di = max(d, min(s_.expand * d, 2 * d))
+        p0 = {"w_in": jax.random.normal(ks[0], (d, 3 * di)) * scale,
+              "w_out": jax.random.normal(ks[3], (di, d)) * scale}
+
+        def mix(p, x):
+            xi, a_raw, z = jnp.split(x @ p["w_in"], 3, axis=-1)
+            a = jax.nn.sigmoid(a_raw)      # decay in (0, 1)
+
+            def comb(l, r):
+                # h_t = a_t * h_{t-1} + x_t as a monoid over
+                # (decay, state) pairs — parameter-free, so its
+                # vjp contributes only to the B (input-grad) half
+                return (l[0] * r[0], r[0] * l[1] + r[1])
+
+            _, h = jax.lax.associative_scan(comb, (a, xi), axis=0)
+            return (h * jax.nn.silu(z)) @ p["w_out"]
+    else:
+        p0 = {"wq": jax.random.normal(ks[0], (d, d)) * scale,
+              "wk": jax.random.normal(ks[1], (d, d)) * scale,
+              "wv": jax.random.normal(ks[2], (d, d)) * scale,
+              "wo": jax.random.normal(ks[3], (d, d)) * scale}
+
+        def mix(p, x):
+            q, k, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
+            s = jax.nn.softmax(q @ k.T * scale, axis=-1)
+            return (s @ v) @ p["wo"]
+    if kind == "moe":
+        m = cfg.moe
+        ne = max(2, min(4, m.n_shared + m.n_routed))
+        tk = max(1, min(m.top_k, ne))
+        fe = max(16, min(m.d_ff_expert, d))
+        p0.update(
+            wr=jax.random.normal(ks[4], (d, ne)) * scale,
+            we1=jax.random.normal(ks[5], (ne, d, fe)) * scale,
+            we2=jax.random.normal(ks[6], (ne, fe, d)) * scale)
+
+        def ffn(p, h):
+            gates = jax.nn.softmax(h @ p["wr"], axis=-1)
+            kth = jnp.sort(gates, axis=-1)[:, -tk][:, None]
+            gates = jnp.where(gates >= kth, gates, 0.0)
+            y = jax.nn.silu(jnp.einsum("sd,edf->esf", h, p["we1"]))
+            y = jnp.einsum("esf,efd->esd", y, p["we2"])
+            return jnp.einsum("se,esd->sd", gates, y)
+    elif kind == "ssm" and not cfg.d_ff:
+        # pure-Mamba blocks are mixer-only (no FFN)
+        def ffn(p, h):
+            return h
+    else:
+        p0.update(w1=jax.random.normal(ks[4], (d, ff)) * scale,
+                  w2=jax.random.normal(ks[5], (ff, d)) * scale)
+
+        def ffn(p, h):
+            return jax.nn.silu(h @ p["w1"]) @ p["w2"]
+
+    x = jax.random.normal(ks[7], (seq, d))
+
+    def block(p, x):
+        return ffn(p, mix(p, x))
+
+    ct = jnp.ones((seq, d))
+    return p0, x, ct, block
+
+
+def measure_block_time(cfg: ArchConfig, seq: int = 64, iters: int = 3,
+                       kind: str = "dense") -> float | None:
+    """Median wall-time of ONE full vjp (forward + both cotangents)
+    through the reduced block proxy of ``kind`` — the live-timing
+    primitive behind :func:`measure_stage_times`.  Returns ``None``
+    when timing is unavailable (no jax, ``kind`` has no matching
+    config) — callers fall back to the analytic cost vector."""
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        return None
+    if kind not in ("dense", "moe", "ssm"):
+        raise ValueError(f"kind must be 'dense', 'moe' or 'ssm', "
+                         f"got {kind!r}")
+    if kind == "moe" and cfg.moe is None:
+        return None
+    if kind == "ssm" and cfg.ssm is None:
+        return None
+    try:
+        import jax
+
+        p0, x, ct, block = _block_proxy(cfg, seq, kind)
+
+        def vjp_full(p, x, ct):
+            return jax.vjp(block, p, x)[1](ct)
+
+        t = measure_layer(vjp_full, p0, x, ct, iters=iters)
+        return t if t > 0 else None
+    except Exception:
+        return None
+
+
+def stage_layer_kinds(cfg: ArchConfig, plan) -> list[list[str]]:
+    """Per-stage list of the timing kinds of the REAL layers each stage
+    owns under ``plan`` (a :class:`~repro.pipeline.stage.StagePlan` or
+    anything with ``n_stages``/``virtual``/``layers_per_stage``),
+    following the Megatron chunk placement (chunk ``v*S + n`` lives on
+    device ``n``).  Padded slots are inactive and excluded."""
+    S, V, Lc = plan.n_stages, plan.virtual, plan.layers_per_stage
+    out = []
+    for n in range(S):
+        kinds = []
+        for v in range(V):
+            chunk = v * S + n
+            for l in range(chunk * Lc, (chunk + 1) * Lc):
+                if l < cfg.n_layers:
+                    kinds.append(layer_kind(cfg, l))
+        out.append(kinds)
+    return out
+
+
+def measure_stage_times(cfg: ArchConfig, plan, seq: int = 64,
+                        iters: int = 3) -> list[float] | None:
+    """Measured per-stage step-time vector for ``plan``: time one
+    reduced block proxy per DISTINCT layer kind in the trunk
+    (:func:`measure_block_time`) and charge each stage the sum over the
+    real layers it owns.  This is the live side of the drift monitor —
+    on a shared host every stage's layers run on the same silicon, so
+    one proxy timing per kind is exact up to layer-count weighting;
+    on a real fleet each stage would time its own step and the vector
+    arrives from the collective instead.  Returns ``None`` when any
+    needed proxy timing is unavailable."""
+    per_stage = stage_layer_kinds(cfg, plan)
+    kinds = sorted({k for ks in per_stage for k in ks})
+    t = {k: measure_block_time(cfg, seq=seq, iters=iters, kind=k)
+         for k in kinds}
+    if any(t[k] is None for k in kinds):
+        return None
+    return [sum(t[k] for k in ks) for ks in per_stage]
+
+
+# ---------------------------------------------------------------------------
+# Drift monitoring — live step timings vs the planned cost vector.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DriftMonitor:
+    """EMA of measured per-stage step timings, compared against the
+    partition plan's predicted cost vector.
+
+    Both vectors are normalised to *shares* of their own total before
+    comparison, so the metric is invariant to absolute scale — a CPU
+    host running 1000x slower than the modelled TPU shows zero drift as
+    long as the stages stay in the planned ratio.  Drift is the worst
+    per-stage relative share error::
+
+        drift = max_n |m_n - p_n| / p_n      (m, p = measured/planned shares)
+
+    ``should_replan()`` goes true once the EMA has absorbed
+    ``min_samples`` updates AND drift exceeds ``threshold`` (default
+    0.25: some stage is doing 25% more or less than its planned share
+    of the work — the balance the partition was chosen for is gone).
+
+    ``slowdown()`` reports the per-stage measured/planned share ratio —
+    the derating vector :func:`repro.core.autoplan.replan` feeds back
+    into the cost model so the re-search sees the skewed fleet."""
+
+    planned: tuple[float, ...]
+    alpha: float = 0.25              # EMA weight of the newest sample
+    threshold: float = 0.25
+    min_samples: int = 3
+    ema: Optional[list[float]] = None
+    n_samples: int = 0
+
+    def __post_init__(self):
+        if len(self.planned) < 1 or any(p <= 0 for p in self.planned):
+            raise ValueError(f"planned stage costs must be positive, "
+                             f"got {self.planned}")
+
+    @classmethod
+    def from_plan(cls, plan, **kw) -> "DriftMonitor":
+        """Build from a :class:`~repro.core.partition.PartitionPlan`:
+        the planned per-stage cost is F + B + W of its cost vector."""
+        c = plan.cost_vector()
+        planned = tuple(f + b + w for f, b, w in zip(c.F, c.B, c.W))
+        return cls(planned=planned, **kw)
+
+    def update(self, measured: Sequence[float]) -> float:
+        """Fold one measured per-stage step-time vector into the EMA
+        and return the current drift."""
+        m = [float(x) for x in measured]
+        if len(m) != len(self.planned):
+            raise ValueError(f"measured vector has {len(m)} stages, "
+                             f"plan has {len(self.planned)}")
+        if any(x <= 0 for x in m):
+            raise ValueError(f"measured stage times must be positive, "
+                             f"got {m}")
+        if self.ema is None:
+            self.ema = m
+        else:
+            a = self.alpha
+            self.ema = [a * x + (1.0 - a) * e
+                        for x, e in zip(m, self.ema)]
+        self.n_samples += 1
+        return self.drift()
+
+    def _shares(self) -> tuple[list[float], list[float]]:
+        pt = sum(self.planned)
+        mt = sum(self.ema)
+        return ([p / pt for p in self.planned],
+                [m / mt for m in self.ema])
+
+    def drift(self) -> float:
+        if self.ema is None:
+            return 0.0
+        p, m = self._shares()
+        return max(abs(mi - pi) / pi for pi, mi in zip(p, m))
+
+    def should_replan(self) -> bool:
+        return self.n_samples >= self.min_samples \
+            and self.drift() > self.threshold
+
+    def slowdown(self) -> tuple[float, ...]:
+        """Per-stage measured/planned share ratio (> 1 = that stage is
+        slower than the plan assumed).  Identity vector until the first
+        update."""
+        if self.ema is None:
+            return tuple(1.0 for _ in self.planned)
+        p, m = self._shares()
+        return tuple(mi / pi for pi, mi in zip(p, m))
+
+
+def planned_stage_costs(cfg: ArchConfig, plan, seq: int = 4096) -> list[float]:
+    """Analytic per-stage fwd+bwd cost vector under ``plan`` (trunk
+    layers only, flops units) — the PLANNED side of the drift monitor.
+    Device-independent: the monitor compares normalised shares, so any
+    homogeneous per-flop rate cancels.  Stages that own no real layer
+    (extreme padding) are floored to a tiny positive cost."""
+    prof = profile_arch(cfg, seq=seq)
+    S, V, Lc = plan.n_stages, plan.virtual, plan.layers_per_stage
+    out = []
+    for n in range(S):
+        c = 0.0
+        for v in range(V):
+            chunk = v * S + n
+            for l in range(chunk * Lc, (chunk + 1) * Lc):
+                if l < cfg.n_layers:
+                    lp = prof.layers[l]
+                    c += lp.flops_fwd + lp.flops_bwd
+        out.append(c)
+    floor = 1e-6 * max(out) if max(out) > 0 else 1.0
+    return [max(c, floor) for c in out]

@@ -20,7 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import (checkpoint_meta, layout_dict,
+                              reshard_checkpoint, restore_checkpoint,
+                              save_checkpoint)
 from repro.configs import get_config
 from repro.data import SyntheticLM
 from repro.data.synthetic import shard_batch
@@ -74,7 +76,37 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--remat", default="stage")
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt", default="",
+                    help="checkpoint base path; saves the FULL training "
+                         "state {params, opt} + step + stage layout")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="with --ckpt: also save every N steps (the "
+                         "survive loop; 0 = only at exit)")
+    ap.add_argument("--resume", default="",
+                    help="checkpoint base path to resume from; a layout "
+                         "mismatch (different stages/virtual) reshards "
+                         "the checkpoint on the host first "
+                         "(repro.checkpoint.reshard)")
+    ap.add_argument("--die-at", type=int, default=0,
+                    help="fault injection: exit(17) after completing N "
+                         "steps, WITHOUT saving — resume restarts from "
+                         "the last --ckpt-every boundary")
+    ap.add_argument("--losses-out", default="",
+                    help="write {start, losses} JSON here (harness "
+                         "cross-process loss comparison)")
+    ap.add_argument("--drift-every", type=int, default=0,
+                    help="update the drift monitor every N steps from "
+                         "live block-proxy timings (0 = off)")
+    ap.add_argument("--drift-threshold", type=float, default=0.25,
+                    help="max per-stage relative share error before the "
+                         "monitor triggers a replan")
+    ap.add_argument("--drift-inject", default="",
+                    help="comma-separated per-stage slowdown factors "
+                         "multiplied into the measured vector "
+                         "(deterministic drift for tests/CI)")
+    ap.add_argument("--replan-budget", type=float, default=5.0,
+                    help="seconds the drift-triggered re-search may "
+                         "spend before returning the incumbent")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--auto-plan", action="store_true",
                     help="let the BaPipe explorer pick stages/tensor/M")
@@ -157,13 +189,61 @@ def main(argv=None):
                              grad_sync=args.grad_sync or "auto")
     step_fn, specs = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
 
+    layout = layout_dict(plan, cfg.n_layers)
+
+    def _save(path, step_done, params, opt_state):
+        save_checkpoint(path, dict(params=params, opt=opt_state),
+                        step=step_done,
+                        extra=dict(layout=layout, arch=cfg.arch_id))
+
+    start_step = 0
+    if args.resume:
+        meta = checkpoint_meta(args.resume)
+        src_layout = (meta.get("extra") or {}).get("layout")
+        resume_path = args.resume
+        if src_layout and any(
+                src_layout.get(k) != layout[k]
+                for k in ("stages", "virtual", "layers_per_stage",
+                          "n_layers_padded")):
+            resume_path = f"{args.resume}.to{plan.n_stages}v{plan.virtual}"
+            reshard_checkpoint(args.resume, resume_path, plan)
+            print(f"resharded checkpoint: stages"
+                  f"{src_layout['stages']} x virtual"
+                  f"{src_layout.get('virtual', 1)} -> stages"
+                  f"{plan.n_stages} x virtual{plan.virtual}")
+        p_sh, o_sh = RT.state_shardings(mesh, specs, opt_state)
+        state = restore_checkpoint(resume_path,
+                                   dict(params=params, opt=opt_state),
+                                   shardings=dict(params=p_sh, opt=o_sh))
+        params, opt_state = state["params"], state["opt"]
+        start_step = int(checkpoint_meta(resume_path)["step"])
+        print(f"resumed from {resume_path} at step {start_step}")
+
+    monitor, inject, replanned = None, None, False
+    if args.drift_every:
+        from repro.core import profiler as PF
+        planned = PF.planned_stage_costs(cfg, plan, seq=args.seq)
+        monitor = PF.DriftMonitor(planned=tuple(planned),
+                                  threshold=args.drift_threshold)
+        if args.drift_inject:
+            inject = [float(x) for x in args.drift_inject.split(",")]
+            if len(inject) != plan.n_stages:
+                ap.error(f"--drift-inject needs {plan.n_stages} factors, "
+                         f"got {len(inject)}")
+
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
                        global_batch=args.batch, seed=args.seed)
     bspec = dict(tokens=NamedSharding(mesh, P(("data",), None)),
                  labels=NamedSharding(mesh, P(("data",), None)))
+    def _dump_losses():
+        if args.losses_out:
+            import json
+            with open(args.losses_out, "w") as f:
+                json.dump(dict(start=start_step, losses=losses), f)
+
     t0 = time.time()
     losses = []
-    for step in range(args.steps):
+    for step in range(start_step, args.steps):
         batch = shard_batch(data.batch(step), bspec)
         if cfg.family == "audio":
             batch["frames"] = jnp.zeros((args.batch, 64, cfg.d_model))
@@ -175,13 +255,57 @@ def main(argv=None):
         losses.append(float(metrics["loss"]))
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.time() - t0
-            tput = (step + 1) * args.batch * args.seq / dt
+            tput = (step + 1 - start_step) * args.batch * args.seq / dt
             print(f"step {step:5d} loss {losses[-1]:.4f} "
                   f"({tput:.0f} tok/s)", flush=True)
-    print(f"first-10 mean loss {sum(losses[:10])/10:.4f} -> "
-          f"last-10 mean loss {sum(losses[-10:])/10:.4f}")
+        if monitor is not None and not replanned \
+                and (step + 1) % args.drift_every == 0:
+            from repro.core import profiler as PF
+            measured = PF.measure_stage_times(cfg, plan,
+                                              seq=min(args.seq, 64), iters=2)
+            if measured is None:
+                # proxy timing unavailable: no live signal, no drift
+                measured = list(monitor.planned)
+            if inject:
+                measured = [m * f for m, f in zip(measured, inject)]
+            drift = monitor.update(measured)
+            if monitor.should_replan():
+                from repro.core.autoplan import AutoPlan, replan
+                incumbent = AutoPlan(
+                    stages=cfg.stages, tensor=cfg.tensor,
+                    n_microbatches=args.microbatches,
+                    schedule=cfg.schedule,
+                    predicted_step_time=float("inf"),
+                    predicted_speedup_over_dp=1.0, virtual=cfg.virtual,
+                    mem_limit=cfg.mem_limit, data_axis=args.data)
+                new = replan(cfg, incumbent, budget_s=args.replan_budget,
+                             global_batch=args.batch, seq_len=args.seq,
+                             slowdown=list(monitor.slowdown()))
+                if new is incumbent:
+                    print(f"drift {drift:.2f} at step {step}: replan kept "
+                          f"the incumbent plan", flush=True)
+                else:
+                    print(f"drift {drift:.2f} at step {step}: replan -> "
+                          f"stages={new.stages} tensor={new.tensor} "
+                          f"M={new.n_microbatches} sched={new.schedule} "
+                          f"V={new.virtual} (predicted "
+                          f"{new.predicted_step_time * 1e3:.2f} ms/step); "
+                          f"restart with --resume to adopt", flush=True)
+                replanned = True
+        if args.ckpt and args.ckpt_every \
+                and (step + 1) % args.ckpt_every == 0:
+            _save(args.ckpt, step + 1, params, opt_state)
+        if args.die_at and step + 1 >= args.die_at:
+            _dump_losses()
+            print(f"fault injection: dying after step {step + 1}",
+                  flush=True)
+            raise SystemExit(17)
+    n = min(10, max(1, len(losses)))
+    print(f"first-{n} mean loss {sum(losses[:n])/n:.4f} -> "
+          f"last-{n} mean loss {sum(losses[-n:])/n:.4f}")
+    _dump_losses()
     if args.ckpt:
-        save_checkpoint(args.ckpt, dict(params=params), step=args.steps)
+        _save(args.ckpt, args.steps, params, opt_state)
         print(f"saved checkpoint to {args.ckpt}.npz")
     return losses
 

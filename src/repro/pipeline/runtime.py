@@ -79,7 +79,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ArchConfig
@@ -861,6 +861,31 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
         return params, opt_state, dict(loss=loss)
 
     return jax.jit(full_step, donate_argnums=(0, 1)), specs
+
+
+def state_shardings(mesh: Mesh, specs, opt_state=None):
+    """``NamedSharding`` pytrees for the training state, from the param
+    specs :func:`make_train_step` returns — the ``shardings`` argument
+    :func:`repro.checkpoint.restore_checkpoint` wants so a resumed
+    state lands directly on the mesh in the step function's layout.
+
+    Returns the param sharding tree alone, or — given an ``opt_state``
+    skeleton — ``(param_shardings, opt_shardings)`` where any opt-state
+    entry whose tree structure mirrors the params (AdamW's ``m``/``v``
+    moments, SGD's momentum) inherits the param shardings and
+    everything else (step counters) is replicated."""
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+    if opt_state is None:
+        return param_sh
+    rep = NamedSharding(mesh, P())
+    pstruct = jax.tree.structure(specs)
+
+    def mirror(sub):
+        if jax.tree.structure(sub) == pstruct:
+            return param_sh
+        return jax.tree.map(lambda _: rep, sub)
+
+    return param_sh, {k: mirror(v) for k, v in opt_state.items()}
 
 
 # ---------------------------------------------------------------------------

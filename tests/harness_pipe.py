@@ -556,6 +556,63 @@ def serve_continuous(arch="llama3.2-1b", stages=2, tensor=2, virtual=1):
     print(f"OK steps={eng.steps_run} reqs={len(done)} bitident=True")
 
 
+def elastic_resume(arch="llama3.2-1b"):
+    """Kill-and-resume across a device-count change (the survive loop):
+    train on an 8-stage pipeline with periodic checkpoints, die mid-run
+    via fault injection (exit 17, losing the unsaved tail), then resume
+    the SAME job on HALF the devices — 4 stages with 2 virtual chunks
+    each, so the checkpoint is host-resharded 8x(V=1) -> 4x(V=2) on
+    restore.  The resumed loss trajectory must be BIT-EQUAL to the
+    uninterrupted 8-stage reference (deterministic data by step index,
+    the optimizer's saved step counter drives the LR schedule, and the
+    reshard moves real-layer weights/moments bit-for-bit)."""
+    import tempfile
+    from repro.launch.train import main as train_main
+    d = tempfile.mkdtemp()
+    ck = os.path.join(d, "ck")
+    common = ["--arch", str(arch), "--reduced", "--layers", "8",
+              "--d-model", "64", "--data", "1", "--tensor", "1",
+              "--microbatches", "8", "--steps", "12", "--batch", "8",
+              "--seq", "32", "--log-every", "100", "--seed", "3"]
+    ref = train_main(common + ["--stages", "8"])
+    try:
+        train_main(common + ["--stages", "8", "--ckpt", ck,
+                             "--ckpt-every", "4", "--die-at", "9"])
+        raise AssertionError("fault injection did not kill the run")
+    except SystemExit as e:
+        assert e.code == 17, e.code
+    res = train_main(common + ["--stages", "4", "--virtual", "2",
+                               "--schedule", "1f1b-interleaved",
+                               "--resume", ck])
+    # died after step 9, last save at step 8 -> resume covers steps 8..11
+    assert len(res) == 4, len(res)
+    errs = [abs(a - b) for a, b in zip(res, ref[8:])]
+    assert max(errs) == 0.0, (errs, res, ref[8:])
+    print(f"OK resumed 8->4(V=2) bit-equal over {len(res)} steps")
+
+
+def elastic_drift(arch="llama3.2-1b"):
+    """Injected cost skew must trip the drift monitor mid-run and
+    produce a budget-bounded replan recommendation (the train.py side of
+    the elastic loop; plan quality is pinned against the simulator in
+    tests/test_drift_replan.py)."""
+    import contextlib
+    import io
+    from repro.launch.train import main as train_main
+    out = io.StringIO()
+    with contextlib.redirect_stdout(out):
+        train_main(["--arch", str(arch), "--reduced", "--layers", "8",
+                    "--d-model", "64", "--data", "1", "--stages", "4",
+                    "--tensor", "1", "--microbatches", "4", "--steps", "8",
+                    "--batch", "4", "--seq", "32", "--log-every", "100",
+                    "--drift-every", "2", "--drift-inject", "4,1,1,1",
+                    "--drift-threshold", "0.25", "--replan-budget", "20"])
+    text = out.getvalue()
+    sys.stdout.write(text)
+    assert "replan" in text, text
+    print("OK drift-triggered replan fired")
+
+
 def pod_stage_equivalence():
     import dataclasses as _dc
     cfg = get_config("llama3.2-1b").reduced(n_layers=4, d_model=128)
@@ -630,4 +687,6 @@ if __name__ == "__main__":
      "prefill_equivalence": prefill_equivalence,
      "interleaved_decode": interleaved_decode,
      "serve_continuous": serve_continuous,
+     "elastic_resume": elastic_resume,
+     "elastic_drift": elastic_drift,
      }[mode](*args)

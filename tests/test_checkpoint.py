@@ -1,0 +1,113 @@
+"""Hardened checkpoint layer: NamedTuple rebuild, meta-driven dtype
+round-trips, and named-key mismatch errors (instead of bare KeyErrors)."""
+import collections
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (CheckpointMismatch, checkpoint_meta,
+                              checkpoint_step, restore_checkpoint,
+                              save_checkpoint)
+
+OptState = collections.namedtuple("OptState", ["m", "v"])
+
+
+def _tree():
+    return dict(
+        params=dict(w=np.arange(12, dtype=np.float32).reshape(3, 4),
+                    b=np.ones((4,), np.float32)),
+        opt=dict(m=np.full((3, 4), 0.5, np.float32),
+                 step=np.int32(7)),
+        scales=[np.float32(1.0), np.float32(2.0)],
+    )
+
+
+def test_roundtrip_bitexact(tmp_path):
+    p = str(tmp_path / "ck")
+    t = _tree()
+    save_checkpoint(p, t, step=7)
+    r = restore_checkpoint(p, t)
+    for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert checkpoint_step(p) == 7
+
+
+def test_namedtuple_leaves_rebuild(tmp_path):
+    """Regression: sequences used to rebuild as ``type(tree)(vals)``,
+    which crashes on NamedTuples (their constructor takes fields, not an
+    iterable) — optax-style opt states are NamedTuples."""
+    p = str(tmp_path / "ck")
+    t = dict(opt=OptState(m=np.ones((2, 2), np.float32),
+                          v=np.zeros((2, 2), np.float32)),
+             lst=[np.float32(3.0)])
+    save_checkpoint(p, t)
+    r = restore_checkpoint(p, t)
+    assert isinstance(r["opt"], OptState)
+    assert isinstance(r["lst"], list)
+    np.testing.assert_array_equal(np.asarray(r["opt"].m), t["opt"].m)
+
+
+def test_dtype_restored_from_meta_not_like(tmp_path):
+    """bf16 is stored as f32 in the npz (no native encoding) with the
+    true dtype in the meta — restore must come back bf16 even when the
+    caller's ``like`` tree says f32."""
+    p = str(tmp_path / "ck")
+    t = dict(w=jnp.asarray(np.arange(8).reshape(2, 4), jnp.bfloat16))
+    save_checkpoint(p, t)
+    meta = checkpoint_meta(p)
+    assert meta["dtypes"]["w"] == "bfloat16"
+    like_f32 = dict(w=np.zeros((2, 4), np.float32))
+    r = restore_checkpoint(p, like_f32)
+    assert r["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(r["w"], np.float32),
+                                  np.asarray(t["w"], np.float32))
+
+
+def test_key_mismatch_names_keys(tmp_path):
+    p = str(tmp_path / "ck")
+    save_checkpoint(p, dict(a=np.zeros(2, np.float32),
+                            b=np.zeros(2, np.float32)))
+    with pytest.raises(CheckpointMismatch) as ei:
+        restore_checkpoint(p, dict(a=np.zeros(2, np.float32),
+                                   c=np.zeros(2, np.float32)))
+    msg = str(ei.value)
+    assert "c" in msg and "b" in msg
+    assert "missing" in msg and "unexpected" in msg
+
+
+def test_shape_mismatch_names_keys_and_suggests_reshard(tmp_path):
+    p = str(tmp_path / "ck")
+    save_checkpoint(p, dict(w=np.zeros((4, 2, 8), np.float32)))
+    with pytest.raises(CheckpointMismatch) as ei:
+        restore_checkpoint(p, dict(w=np.zeros((2, 4, 8), np.float32)))
+    msg = str(ei.value)
+    assert "w" in msg and "(4, 2, 8)" in msg and "(2, 4, 8)" in msg
+    assert "reshard" in msg
+
+
+def test_extra_meta_roundtrip(tmp_path):
+    p = str(tmp_path / "ck")
+    extra = dict(layout=dict(stages=4, virtual=2), arch="llama3.2-1b")
+    save_checkpoint(p, dict(w=np.zeros(2, np.float32)), step=3, extra=extra)
+    meta = checkpoint_meta(p)
+    assert meta["step"] == 3
+    assert meta["extra"]["layout"]["stages"] == 4
+    assert meta["extra"]["arch"] == "llama3.2-1b"
+
+
+def test_shapedtypestruct_like(tmp_path):
+    """``like`` may carry ShapeDtypeStructs — restore never needs real
+    arrays on the caller's side."""
+    p = str(tmp_path / "ck")
+    t = dict(w=np.arange(6, dtype=np.float32).reshape(2, 3))
+    save_checkpoint(p, t)
+    like = dict(w=jax.ShapeDtypeStruct((2, 3), jnp.float32))
+    r = restore_checkpoint(p, like)
+    np.testing.assert_array_equal(np.asarray(r["w"]), t["w"])

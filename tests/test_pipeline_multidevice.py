@@ -202,3 +202,17 @@ def test_gated_serve_equivalence():
     change decode results."""
     run_case("gated_serve", "mamba2-2.7b")
     run_case("gated_serve", "llama3.2-1b")
+
+
+def test_elastic_kill_and_resume():
+    """The survive loop: an 8-stage run checkpoints periodically, dies
+    mid-run by fault injection, and resumes on 4 stages x 2 virtual
+    chunks (half the devices) after a host-side checkpoint reshard —
+    loss trajectory bit-equal to the uninterrupted 8-stage reference."""
+    run_case("elastic_resume", "llama3.2-1b", timeout=540)
+
+
+def test_elastic_drift_triggers_replan():
+    """Injected per-stage cost skew trips the drift monitor and fires a
+    budget-bounded replan recommendation mid-run."""
+    run_case("elastic_drift", "llama3.2-1b", timeout=540)

@@ -1,0 +1,175 @@
+"""Plan-to-plan checkpoint resharding: randomized round-trip sweep over
+(N, V) layouts, file-to-file relayout, and guard rails."""
+import itertools
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.checkpoint import (CheckpointMismatch, checkpoint_meta,
+                              layout_dict, plan_from_layout,
+                              reshard_checkpoint, reshard_tree,
+                              restore_checkpoint, save_checkpoint)
+from repro.pipeline import stage as ST
+from repro.pipeline.stage import StagePlan
+
+
+def _plan(stages, virtual, n_layers):
+    import math
+    lc = math.ceil(n_layers / (stages * virtual))
+    return StagePlan(n_stages=stages, tensor=1, layers_per_stage=lc,
+                     n_layers_padded=stages * virtual * lc, virtual=virtual)
+
+
+def _layer_tree(rng, plan, n_layers, dims=((3, 2), (4,))):
+    """A params-like tree with distinct per-layer values, stacked under
+    ``plan`` (padded slots repeat the last real layer, as the runtime
+    init/reshard both do)."""
+    global_tree = {f"w{i}": rng.standard_normal(
+        (n_layers,) + d).astype(np.float32) for i, d in enumerate(dims)}
+    pad = plan.n_layers_padded - n_layers
+    stacked = {}
+    for k, a in global_tree.items():
+        if pad:
+            a = np.concatenate([a, np.repeat(a[-1:], pad, 0)], 0)
+        stacked[k] = np.asarray(ST._stack_chunks(jax.numpy.asarray(a), plan))
+    return global_tree, stacked
+
+
+LAYOUTS = [(1, 1), (2, 1), (2, 2), (4, 1), (4, 2), (3, 1), (8, 1)]
+
+
+@pytest.mark.parametrize("n_layers", [8, 12, 7])
+def test_reshard_roundtrip_sweep(n_layers):
+    """Every (N, V) -> (N', V') relayout preserves the real layers
+    bit-for-bit, for contiguous and interleaved plans, even and uneven
+    layer counts."""
+    rng = np.random.default_rng(0)
+    for (sa, va), (sb, vb) in itertools.product(LAYOUTS, LAYOUTS):
+        pa, pb = _plan(sa, va, n_layers), _plan(sb, vb, n_layers)
+        glob, stacked = _layer_tree(rng, pa, n_layers)
+        tree = dict(layers=stacked, embed=rng.standard_normal(
+            (5, 3)).astype(np.float32))
+        out = reshard_tree(tree, pa, pb, n_layers)
+        for k, g in glob.items():
+            back = np.asarray(ST.unstack_chunks(
+                jax.numpy.asarray(out["layers"][k]), pb))[:n_layers]
+            np.testing.assert_array_equal(back, g), (sa, va, sb, vb, k)
+        # non-layer leaves pass through untouched
+        np.testing.assert_array_equal(np.asarray(out["embed"]),
+                                      tree["embed"])
+
+
+def test_reshard_tree_covers_opt_moment_mirrors():
+    """Optimizer moments mirror the params structure — their ``layers``
+    subtrees must be restacked exactly like the params'."""
+    rng = np.random.default_rng(1)
+    n_layers = 8
+    pa, pb = _plan(4, 1, n_layers), _plan(2, 2, n_layers)
+    glob, stacked = _layer_tree(rng, pa, n_layers)
+    globm, stackedm = _layer_tree(rng, pa, n_layers)
+    state = dict(params=dict(layers=stacked),
+                 opt=dict(m=dict(layers=stackedm),
+                          step=np.int32(5)))
+    out = reshard_tree(state, pa, pb, n_layers)
+    for k, g in globm.items():
+        back = np.asarray(ST.unstack_chunks(
+            jax.numpy.asarray(out["opt"]["m"]["layers"][k]), pb))[:n_layers]
+        np.testing.assert_array_equal(back, g)
+    assert out["opt"]["step"] == 5
+
+
+def test_reshard_rejects_wrong_source_layout():
+    rng = np.random.default_rng(2)
+    n_layers = 8
+    pa, pb = _plan(4, 1, n_layers), _plan(2, 2, n_layers)
+    _, stacked = _layer_tree(rng, pa, n_layers)
+    wrong_from = _plan(8, 1, n_layers)     # claims [8, 1, ...] stacking
+    with pytest.raises(CheckpointMismatch):
+        reshard_tree(dict(layers=stacked), wrong_from, pb, n_layers)
+
+
+def test_reshard_checkpoint_file_to_file(tmp_path):
+    """Host-side relayout of a saved {params, opt} checkpoint: values,
+    dtypes, step, and non-layer leaves preserved; meta layout updated;
+    restore on the target plan succeeds with no device mesh."""
+    rng = np.random.default_rng(3)
+    n_layers = 8
+    pa, pb = _plan(4, 1, n_layers), _plan(2, 2, n_layers)
+    glob, stacked = _layer_tree(rng, pa, n_layers)
+    state = dict(params=dict(layers=stacked,
+                             embed=rng.standard_normal((5, 3)).astype(
+                                 np.float32)),
+                 opt=dict(m=dict(layers=stacked),
+                          step=np.int32(9)))
+    src, dst = str(tmp_path / "a"), str(tmp_path / "b")
+    save_checkpoint(src, state, step=9,
+                    extra=dict(layout=layout_dict(pa, n_layers)))
+    new_layout = reshard_checkpoint(src, dst, pb)
+    assert new_layout["stages"] == 2 and new_layout["virtual"] == 2
+    meta = checkpoint_meta(dst)
+    assert meta["step"] == 9
+    assert meta["extra"]["layout"] == new_layout
+    assert plan_from_layout(meta["extra"]["layout"]) == pb
+
+    like = dict(params=dict(
+        layers={k: np.zeros((2, 2, 2) + v.shape[2:], np.float32)
+                for k, v in stacked.items()},
+        embed=np.zeros((5, 3), np.float32)),
+        opt=dict(m=dict(layers={k: np.zeros((2, 2, 2) + v.shape[2:],
+                                            np.float32)
+                                for k, v in stacked.items()}),
+                 step=np.int32(0)))
+    r = restore_checkpoint(dst, like)
+    for k, g in glob.items():
+        back = np.asarray(ST.unstack_chunks(
+            jax.numpy.asarray(r["params"]["layers"][k]), pb))[:n_layers]
+        np.testing.assert_array_equal(back, g)
+    np.testing.assert_array_equal(np.asarray(r["params"]["embed"]),
+                                  state["params"]["embed"])
+    assert int(r["opt"]["step"]) == 9
+
+
+def test_reshard_checkpoint_rejects_tensor_change(tmp_path):
+    rng = np.random.default_rng(4)
+    n_layers = 4
+    pa = _plan(2, 1, n_layers)
+    _, stacked = _layer_tree(rng, pa, n_layers)
+    src = str(tmp_path / "a")
+    save_checkpoint(src, dict(layers=stacked),
+                    extra=dict(layout=layout_dict(pa, n_layers)))
+    pb = StagePlan(n_stages=2, tensor=2, layers_per_stage=2,
+                   n_layers_padded=4, virtual=1)
+    with pytest.raises(CheckpointMismatch) as ei:
+        reshard_checkpoint(src, str(tmp_path / "b"), pb)
+    assert "tensor" in str(ei.value)
+
+
+def test_reshard_checkpoint_needs_layout_or_plans(tmp_path):
+    rng = np.random.default_rng(5)
+    pa = _plan(2, 1, 4)
+    _, stacked = _layer_tree(rng, pa, 4)
+    src = str(tmp_path / "a")
+    save_checkpoint(src, dict(layers=stacked))      # no layout recorded
+    with pytest.raises(CheckpointMismatch) as ei:
+        reshard_checkpoint(src, str(tmp_path / "b"), _plan(4, 1, 4))
+    assert "layout" in str(ei.value)
+    # explicit plans work without recorded layout
+    reshard_checkpoint(src, str(tmp_path / "b"), _plan(4, 1, 4),
+                       plan_from=pa, n_layers=4)
+
+
+def test_target_too_small_rejected():
+    rng = np.random.default_rng(6)
+    n_layers = 8
+    pa = _plan(4, 1, n_layers)
+    _, stacked = _layer_tree(rng, pa, n_layers)
+    too_small = StagePlan(n_stages=2, tensor=1, layers_per_stage=2,
+                          n_layers_padded=4, virtual=1)
+    with pytest.raises(CheckpointMismatch):
+        reshard_tree(dict(layers=stacked), pa, too_small, n_layers)
