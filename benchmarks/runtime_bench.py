@@ -183,7 +183,7 @@ def measure_ar_duration(mesh, n_elems, dp):
 
 
 def measured_walltimes(cfg, mesh, plan, M, runtime="stream", steps=10,
-                       dp=1, grad_sync="auto"):
+                       dp=1, grad_sync="auto", ar_groups=1):
     """Per-schedule best wall-clock of the jitted train step."""
     import jax
     import numpy as np
@@ -198,7 +198,8 @@ def measured_walltimes(cfg, mesh, plan, M, runtime="stream", steps=10,
     out = {}
     for sched in SCHEDULES:
         pcfg = RT.PipelineConfig(n_microbatches=M, schedule=sched,
-                                 runtime=runtime, grad_sync=grad_sync)
+                                 runtime=runtime, grad_sync=grad_sync,
+                                 ar_groups=ar_groups)
         step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
         loss, grads = step(params, batch)          # compile + sanity
         assert np.isfinite(float(loss)), (sched, float(loss))
@@ -255,6 +256,10 @@ def grad_sync_report(args, cfg, mesh, plan, M, S, dp,
               f"{end[sched]*1e3:.3f},{ov[sched]*1e3:.3f},"
               f"{(end[sched] - ov[sched])*1e3:.3f}")
 
+    if getattr(args, "ar_groups", 1) > 1:
+        _grouped_ar_report(args, cfg, mesh, plan, M, S, dp,
+                           t_f, t_full, t_dx, t_dw, ar, sim, ov)
+
     sim_ov = {s: v[1] for s, v in sim.items()}
     rank = lambda d: ",".join(sorted(d, key=d.get))
     print(f"# sim ranking (overlapped):      {rank(sim_ov)}")
@@ -281,6 +286,100 @@ def grad_sync_report(args, cfg, mesh, plan, M, S, dp,
     return sim, ov
 
 
+def _grouped_ar_report(args, cfg, mesh, plan, M, S, dp,
+                       t_f, t_full, t_dx, t_dw, ar, sim, ov):
+    """The ``--ar-groups`` satellite report: split each device's AR
+    bucket into G per-layer-group buckets released as each group's W
+    retires mid-drain.  Shows the closed-form exposed-sync drop
+    (``eval_grad_sync(groups=G)``) next to the measured wall-clock of
+    the grouped overlap path, and gates on the drop being monotone."""
+    from repro.core import schedplan as SP
+    from repro.core.schedules import eval_grad_sync
+
+    G = args.ar_groups
+    ovg = measured_walltimes(cfg, mesh, plan, M, dp=dp,
+                             grad_sync="overlap", ar_groups=G)
+    print(f"schedule,sim_exposed_g1_ms,sim_exposed_g{G}_ms,"
+          f"overlap_g1_ms,overlap_g{G}_ms")
+    for sched in SCHEDULES:
+        if SP.build_schedule(sched, M, S, 1).has_w:
+            b = t_dx + t_dw
+            wf = t_dw / b
+        else:
+            b, wf = t_full, 0.5
+        e1 = eval_grad_sync(sched, M, S, t_f, b, ar, w_frac=wf).exposed
+        eg = eval_grad_sync(sched, M, S, t_f, b, ar, w_frac=wf,
+                            groups=G).exposed
+        assert eg <= e1 + 1e-12, (sched, e1, eg)
+        print(f"{sched},{e1*1e3:.3f},{eg*1e3:.3f},"
+              f"{ov[sched]*1e3:.3f},{ovg[sched]*1e3:.3f}")
+    print(f"# GROUPED-AR OK: exposed(G={G}) <= exposed(1) "
+          f"for all schedules")
+
+
+def tp_report(args):
+    """The ``--tp`` dry-run gate: uniform tp=2 plans executed on the
+    real ``tensor`` axis by BOTH runtimes — losses and gradients must
+    be bit-equal across ticks/stream (the 3D planner's uniform
+    candidates are executable), with the per-runtime wall-clock
+    reported."""
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.pipeline import runtime as RT
+    from repro.pipeline import stage as ST
+
+    S, M, tp = args.stages, args.microbatches, 2
+    assert jax.device_count() >= S * tp, \
+        f"--tp needs {S * tp} devices, have {jax.device_count()}"
+    cfg = get_config("llama3.2-1b").reduced(n_layers=args.layers,
+                                            d_model=128)
+    cfg = dataclasses.replace(cfg, stages=S, tensor=tp)
+    mesh = make_mesh((1, S, tp), ("data", "stage", "tensor"))
+    plan = ST.plan_stages(cfg)
+    params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+    kt, kl = jax.random.split(jax.random.PRNGKey(3))
+    batch = dict(tokens=jax.random.randint(kt, (M, 64), 0, cfg.vocab),
+                 labels=jax.random.randint(kl, (M, 64), 0, cfg.vocab))
+    bad = False
+    print("schedule,ticks_ms,stream_ms,bitequal")
+    for sched in ("1f1b", "zb-h1"):
+        outs, times = {}, {}
+        for runtime in ("ticks", "stream"):
+            pcfg = RT.PipelineConfig(n_microbatches=M, schedule=sched,
+                                     runtime=runtime)
+            step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+            loss, grads = step(params, batch)
+            assert np.isfinite(float(loss)), (sched, runtime, float(loss))
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                for _ in range(5):
+                    loss, grads = step(params, batch)
+                jax.block_until_ready(loss)
+                best = min(best, (time.perf_counter() - t0) / 5)
+            outs[runtime] = (float(loss), jax.tree.map(np.asarray, grads))
+            times[runtime] = best
+        (lt, gt), (ls, gs) = outs["ticks"], outs["stream"]
+        ok = ls == lt
+        if ok:
+            try:
+                jax.tree.map(
+                    lambda a, b: np.testing.assert_array_equal(a, b),
+                    gs, gt)
+            except AssertionError:
+                ok = False
+        print(f"{sched},{times['ticks']*1e3:.3f},"
+              f"{times['stream']*1e3:.3f},{'yes' if ok else 'NO'}")
+        bad |= not ok
+    if bad:
+        print("# TP DRY-RUN FAILED: ticks/stream mismatch")
+        sys.exit(1)
+    print("# TP DRY-RUN OK")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--stages", type=int, default=8)
@@ -293,7 +392,24 @@ def main(argv=None):
                          "grad_sync 'end' vs 'overlap' exposed-sync "
                          "report (stream runtime only)")
     ap.add_argument("--assert-ranking", action="store_true")
+    ap.add_argument("--tp", action="store_true",
+                    help="tp=2 dry-run gate: execute uniform-TP plans "
+                         "on the real tensor axis under both runtimes "
+                         "and require bit-equal losses/gradients")
+    ap.add_argument("--ar-groups", type=int, default=1,
+                    help="with --data > 1: also report the per-layer-"
+                         "group AR bucket split (G buckets per device "
+                         "released as each group's W retires) — closed-"
+                         "form exposed-sync drop + measured wall-clock")
     args = ap.parse_args(argv)
+
+    if args.tp:
+        # bit-equality across differently structured programs needs
+        # single-threaded contractions (see tests/harness_pipe.py);
+        # set before the first jax import locks the backend
+        if "--xla_cpu_multi_thread_eigen" not in os.environ["XLA_FLAGS"]:
+            os.environ["XLA_FLAGS"] += " --xla_cpu_multi_thread_eigen=false"
+        return tp_report(args)
 
     import dataclasses
     import jax

@@ -18,9 +18,10 @@ import math
 from typing import Optional, Sequence
 
 from repro.configs.base import ArchConfig
-from repro.core.explorer import explore
-from repro.core.hardware import (DeviceSpec, TPU_V5E, heterogeneous_cluster,
-                                 homogeneous_cluster)
+from repro.core.explorer import explore, explore3d
+from repro.core.hardware import (DeviceSpec, TPU_V5E, fused_device,
+                                 heterogeneous_cluster, homogeneous_cluster,
+                                 homogeneous_fleet)
 from repro.core.profiler import profile_arch
 
 
@@ -39,6 +40,11 @@ class AutoPlan:
     # part of the data-axis all-reduce the drain bubble could NOT
     # absorb (0.0 when data_axis == 1 or fully hidden)
     predicted_sync_exposed: float = 0.0
+    # per-stage chip widths (dp*tp) of a 3D plan; () = flat 1D plan.
+    # Uniform widths are what ``apply`` maps onto the regular mesh; a
+    # non-uniform vector is carried for reporting only (the analytic
+    # ranking's winner — the runtime executes uniform plans)
+    stage_widths: tuple = ()
 
     def apply(self, cfg: ArchConfig) -> ArchConfig:
         from repro.core.schedplan import canonical_name
@@ -57,12 +63,7 @@ class AutoPlan:
 
 
 def _stage_device(base: DeviceSpec, tensor: int) -> DeviceSpec:
-    return dataclasses.replace(
-        base,
-        name=f"{base.name}x{tensor}",
-        peak_flops=base.peak_flops * tensor,
-        hbm_bandwidth=base.hbm_bandwidth * tensor,
-        memory_capacity=base.memory_capacity * tensor)
+    return fused_device(base, tensor)
 
 
 def _valid_factorisations(cfg: ArchConfig, model_axis: int):
@@ -139,6 +140,68 @@ def auto_plan(cfg: ArchConfig, *, global_batch: int, seq_len: int,
         raise ValueError(f"no feasible (stage, tensor) factorisation for "
                          f"{cfg.arch_id} on model_axis={model_axis}")
     return best
+
+
+def _tp_valid(cfg: ArchConfig, t: int) -> bool:
+    """Can the architecture's sharded dims split ``t`` ways?"""
+    if t == 1:
+        return True
+    heads_ok = cfg.n_heads % t == 0
+    ssm_ok = cfg.ssm is None
+    ff_ok = (cfg.d_ff % t == 0) if cfg.d_ff else True
+    return heads_ok and ssm_ok and ff_ok
+
+
+def auto_plan3d(cfg: ArchConfig, *, global_batch: int, seq_len: int,
+                n_devices: int, device: DeviceSpec = TPU_V5E,
+                mem_limit: Optional[int] = None) -> AutoPlan:
+    """3D auto-planning: search per-stage (dp, tp) degrees over an
+    ``n_devices`` homogeneous pool (:func:`repro.core.explorer.explore3d`)
+    and emit the runtime config of the best EXECUTABLE — uniform
+    (dp, tp) — candidate, which maps onto the regular ``(data, stage,
+    tensor)`` mesh: ``stages = S``, ``tensor = tp``, ``data_axis = dp``.
+    ``stage_widths`` carries the overall winner's per-stage chip
+    widths; when the analytic best is non-uniform its predicted time
+    still appears through ``predicted_speedup_over_dp``'s denominator
+    being the executable candidate (the uniform plan is what ships).
+
+    Unlike :func:`auto_plan` (which fixes the mesh split up front and
+    explores inside it), the device budget is the only constraint here
+    — the planner chooses how deep and how wide every stage is."""
+    prof = profile_arch(cfg, seq=seq_len)
+    gb = max(1, global_batch)
+    batch_tokens = gb * seq_len
+    # Ms the runtime can actually slice: divisors of the global batch
+    # (the executable filter below additionally requires the per-replica
+    # batch gb/dp to split into M microbatches)
+    ms = [m for m in (1, 2, 4, 8, 16, 32) if m <= gb and gb % m == 0]
+    res = explore3d(prof, homogeneous_fleet(device, n_devices),
+                    batch_tokens, candidate_Ms=ms or None,
+                    mem_limit=mem_limit)
+
+    def _runnable(c) -> bool:
+        dp = c.shards[0][0]
+        return gb % dp == 0 and (gb // dp) % c.M == 0
+
+    executable = [c for c in res.candidates
+                  if c.uniform and c.n_stages <= cfg.n_layers
+                  and _tp_valid(cfg, c.shards[0][1]) and _runnable(c)]
+    if not executable:
+        raise ValueError(
+            f"no executable uniform 3D candidate for {cfg.arch_id} "
+            f"on {n_devices} devices")
+    win = executable[0]                 # candidates are ranked
+    dp, tp = win.shards[0]
+    return AutoPlan(
+        stages=win.n_stages, tensor=tp, n_microbatches=win.M,
+        schedule=win.schedule,
+        predicted_step_time=win.predicted_time,
+        predicted_speedup_over_dp=(
+            res.incumbent.predicted_time / win.predicted_time
+            if win.predicted_time else 0.0),
+        mem_limit=mem_limit or 0, data_axis=dp,
+        predicted_sync_exposed=win.sync_exposed,
+        stage_widths=tuple(d * t for d, t in res.best.shards))
 
 
 def _derated(base: DeviceSpec, factor: float) -> DeviceSpec:

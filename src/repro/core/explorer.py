@@ -10,11 +10,12 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
-from repro.core.hardware import ClusterSpec
+from repro.core.hardware import ClusterSpec, FleetSpec
 from repro.core.partition import (PartitionPlan, comm_bound, coarse_partition,
                                   dp_partition, interleaved_partition,
                                   intra_layer_refine, memory_fine_tune,
-                                  stage_memory)
+                                  plan_costs_3d, stage_memory,
+                                  stage_memory_3d)
 from repro.core.profiler import NetworkProfile, bwd_time, fwd_time
 from repro.core.schedules import (GradSyncEval, HETERO_SCHEDULES, SCHEDULES,
                                   ScheduleEval, eval_1f1b_interleaved,
@@ -290,6 +291,219 @@ def explore(prof: NetworkProfile, cluster: ClusterSpec, minibatch: int,
             plan=None, minibatch_time=dp_t, per_stage_memory=[dp_mem] * N,
             feasible=True, dp_time=dp_t, dp_feasible=True)
     return best
+
+
+# ---------------------------------------------------------------------------
+# 3D exploration: per-stage (dp, tp) degrees over a device pool.
+# ---------------------------------------------------------------------------
+
+# canonical builder names the cost-shaped replay accepts — the 3D
+# candidates are ranked by simulator replay, so only replayable
+# schedules participate
+PLAN3D_SCHEDULES = ("1f1b", "zb-h1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan3D:
+    """One point of the 3D search space: a layer partition plus a
+    per-stage ``(dp, tp)`` chip grid, ranked by the cost-shaped
+    simulator replay of its schedule (makespan + exposed grad sync)."""
+    bounds: tuple[tuple[int, int], ...]   # per-stage [start, end) layers
+    shards: tuple[tuple[int, int], ...]   # per-stage (dp, tp)
+    schedule: str
+    M: int                                # micro-batches per mini-batch
+    microbatch: int                       # units per micro-batch
+    costs: object                         # TP-aware StageCosts (width-annotated)
+    predicted_time: float                 # replay makespan + exposed sync
+    sim_makespan: float                   # replay makespan, sync-free
+    sync_exposed: float
+    per_chip_memory: tuple[float, ...] = ()
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def devices_used(self) -> int:
+        return sum(d * t for d, t in self.shards)
+
+    @property
+    def uniform(self) -> bool:
+        """All stages share one (dp, tp) — the plan maps onto a regular
+        ``(data, stage, tensor)`` mesh and is directly executable; a
+        non-uniform plan is ranked analytically (simulator replay)
+        until the runtime grows ragged-mesh support."""
+        return len(set(self.shards)) == 1
+
+    @property
+    def pipeline_only(self) -> bool:
+        return all(s == (1, 1) for s in self.shards)
+
+
+@dataclasses.dataclass
+class Exploration3DResult:
+    best: Plan3D
+    incumbent: Plan3D                     # best pipeline-only plan
+    candidates: list                      # all feasible plans, ranked
+
+    @property
+    def speedup_over_1d(self) -> float:
+        return (self.incumbent.predicted_time / self.best.predicted_time
+                if self.best.predicted_time else 0.0)
+
+
+def _rank_3d(prof: NetworkProfile, fleet: FleetSpec, bounds, shards,
+             schedule: str, M: int, mb: int, mem_limit,
+             enforce_memory: bool) -> Optional[Plan3D]:
+    """Cost one (bounds, shards, schedule, M) point and replay it."""
+    from repro.core.schedules import eval_grad_sync_costs
+    base = fleet.base
+    S = len(bounds)
+    costs = plan_costs_3d(prof, base, bounds, mb, shards)
+    mem = stage_memory_3d(prof, bounds, shards, mb)
+    if enforce_memory and any(m > base.memory_capacity for m in mem):
+        return None
+    data_bw = base.axis_bandwidth("data")
+    ar_vec = []
+    for (s, e), (dp, tp) in zip(bounds, shards):
+        wbytes = sum(prof.layers[k].bytes_weights for k in range(s, e))
+        ar_vec.append(0.0 if dp <= 1 else
+                      2.0 * (dp - 1) / dp * (wbytes / tp) / data_bw)
+    gs = eval_grad_sync_costs(schedule, M, S, costs, ar_vec,
+                              mem_limit=mem_limit)
+    return Plan3D(
+        bounds=tuple(tuple(b) for b in bounds),
+        shards=tuple(tuple(s) for s in shards),
+        schedule=schedule, M=M, microbatch=mb, costs=costs,
+        predicted_time=gs.overlapped, sim_makespan=gs.compute_makespan,
+        sync_exposed=gs.exposed, per_chip_memory=tuple(mem))
+
+
+def _uniform_factorisations(chips: int) -> list[tuple[int, int]]:
+    """All (dp, tp) integer factorisations of a stage's chip count."""
+    return [(d, chips // d) for d in range(1, chips + 1)
+            if chips % d == 0]
+
+
+def explore3d(prof: NetworkProfile, fleet: FleetSpec, minibatch: int,
+              candidate_Ms: Optional[Sequence[int]] = None,
+              schedules: Sequence[str] = PLAN3D_SCHEDULES,
+              candidate_stage_counts: Optional[Sequence[int]] = None,
+              mem_limit: Optional[int] = None,
+              enforce_memory: bool = False) -> Exploration3DResult:
+    """BaPipe's balanced-partition exploration generalized to 3D: each
+    pipeline stage gets a ``(dp, tp)`` chip grid carved from the
+    ``fleet`` pool, under the pool's device budget.
+
+    The space has three candidate families, all ranked by the SAME
+    cost-shaped simulator replay (makespan of the schedule's op table
+    under the TP-aware per-stage durations, plus the exposed part of
+    the dp gradient sync — :func:`eval_grad_sync_costs`):
+
+    * **pipeline-only** (every stage ``(1, 1)``): the incumbent 1D
+      space — one plan per stage count.  Always searched, so the 3D
+      result is structurally never worse than the 1D explorer's
+      ranking of the same schedules.
+    * **uniform (dp, tp)**: for every stage count S dividing the pool
+      and every factorisation ``dp * tp = budget // S``.  These map
+      onto a regular ``(data, stage, tensor)`` mesh and are directly
+      executable by the runtime.
+    * **non-uniform tp** (greedy width promotion): starting from width
+      1 everywhere, repeatedly double the TP width of the
+      bottleneck-time stage while the budget allows, re-balancing the
+      layer split against the widened chain each step.  These let a
+      fat stage buy width where depth can't split it; they are ranked
+      analytically (the runtime executes uniform plans only).
+
+    Layer bounds come from the existing balanced partitioner run
+    against the width-fused chain (``fleet.chain``); the exact TP
+    costing — collectives, reshard SR, width-sharded memory — is then
+    applied by :func:`repro.core.partition.plan_costs_3d`.
+    ``enforce_memory`` drops candidates whose per-chip memory exceeds
+    the base device's capacity (off by default: the analytic fixtures
+    probe time, not capacity)."""
+    P = fleet.n_devices
+    base = fleet.base
+    if not fleet.homogeneous:
+        raise ValueError("explore3d plans over homogeneous pools; "
+                         "heterogeneous chains go through explore()")
+    for s in schedules:
+        if s not in PLAN3D_SCHEDULES:
+            raise ValueError(f"schedule {s!r} not replayable; "
+                             f"pick from {PLAN3D_SCHEDULES}")
+    Ss = (list(candidate_stage_counts) if candidate_stage_counts
+          else [S for S in range(1, P + 1) if S <= prof.n_layers])
+    candidates: list[Plan3D] = []
+
+    def bounds_for(widths) -> tuple:
+        chain = fleet.chain(widths)
+        if chain.n == 1:
+            return ((0, prof.n_layers),)
+        return dp_partition(prof, chain, max(1, minibatch),
+                            overlap=True).bounds
+
+    def rank_all(bounds, shards, S):
+        mbs = candidate_Ms or sorted({min(2 * S, minibatch),
+                                      min(4 * S, minibatch),
+                                      min(8 * S, minibatch)})
+        for sched in schedules:
+            for M in mbs:
+                if M < 1 or minibatch // M < 1:
+                    continue
+                mb = minibatch // M
+                # every dp replica needs a whole number of units
+                if any(mb % dp for dp, _ in shards):
+                    continue
+                cand = _rank_3d(prof, fleet, bounds, shards, sched, M, mb,
+                                mem_limit, enforce_memory)
+                if cand is not None:
+                    candidates.append(cand)
+
+    for S in Ss:
+        # pipeline-only + uniform (dp, tp): need S * dp * tp == P
+        if P % S == 0:
+            chips = P // S
+            for dp, tp in _uniform_factorisations(chips):
+                widths = [tp] * S      # dp replicates the chain, tp fuses
+                bounds = bounds_for(widths)
+                rank_all(bounds, [(dp, tp)] * S, S)
+        elif S <= P:
+            # budget doesn't divide: pipeline-only on S chips still valid
+            bounds = bounds_for([1] * S)
+            rank_all(bounds, [(1, 1)] * S, S)
+        # greedy non-uniform width promotion (tp only, dp = 1)
+        if S < 2 or S >= P:
+            continue
+        widths = [1] * S
+        while True:
+            costs = plan_costs_3d(prof, base, bounds_for(widths),
+                                  max(1, minibatch), [(1, w) for w in widths])
+            totals = [f + b + w for f, b, w
+                      in zip(costs.F, costs.B, costs.W)]
+            order = sorted(range(S), key=lambda i: -totals[i])
+            bumped = False
+            for i in order:
+                if sum(widths) + widths[i] <= P:
+                    widths[i] *= 2
+                    bumped = True
+                    break
+            if not bumped:
+                break
+            shards = [(1, w) for w in widths]
+            if len(set(shards)) > 1:          # uniform handled above
+                rank_all(bounds_for(widths), shards, S)
+
+    if not candidates:
+        raise ValueError(f"no feasible 3D candidate for {P} devices / "
+                         f"{prof.n_layers} layers / minibatch {minibatch}")
+    candidates.sort(key=lambda c: c.predicted_time)
+    pipeline_only = [c for c in candidates if c.pipeline_only]
+    if not pipeline_only:
+        raise AssertionError("incumbent pipeline-only plan missing from "
+                             "the 3D space")  # structurally impossible
+    return Exploration3DResult(best=candidates[0],
+                               incumbent=pipeline_only[0],
+                               candidates=candidates)
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,7 @@ Units: FLOP/s, bytes/s, bytes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 GiB = 1024 ** 3
 GB = 1e9
@@ -34,16 +34,30 @@ class DeviceSpec:
     efficiency: float = 0.5
     # Second-tier memory for weight spill (FPGA DDR).  0 => hard limit.
     spill_bandwidth: float = 0.0
-    # Per-mesh-axis link bandwidths, bytes/s (0.0 = fall back to the
-    # scalar ``link_bandwidth``).  The three axes carry different
-    # traffic: ``stage`` the pipeline boundary activations/errors,
-    # ``data`` the gradient all-reduce buckets, ``tensor`` the
-    # per-layer collective ops.  On real topologies they are different
-    # links (e.g. intra-host ICI/NVLink for tensor, inter-host DCN for
-    # data), so the explorer's AR cost must not read the stage link.
-    data_bandwidth: float = 0.0
-    stage_bandwidth: float = 0.0
-    tensor_bandwidth: float = 0.0
+    # Per-mesh-axis link bandwidths, bytes/s (None = inherit the scalar
+    # ``link_bandwidth``).  The three axes carry different traffic:
+    # ``stage`` the pipeline boundary activations/errors, ``data`` the
+    # gradient all-reduce buckets, ``tensor`` the per-layer collective
+    # ops.  On real topologies they are different links (e.g. intra-host
+    # ICI/NVLink for tensor, inter-host DCN for data), so the explorer's
+    # AR and TP-collective costs must not read the stage link.  An
+    # EXPLICIT zero is rejected at construction: the old ``0.0`` default
+    # silently fell back to ``link_bandwidth``, which let 3D cost models
+    # quietly price TP collectives at the inter-host rate.
+    data_bandwidth: Optional[float] = None
+    stage_bandwidth: Optional[float] = None
+    tensor_bandwidth: Optional[float] = None
+
+    def __post_init__(self):
+        for axis in ("data", "stage", "tensor"):
+            bw = getattr(self, f"{axis}_bandwidth")
+            if bw is not None and bw <= 0.0:
+                raise ValueError(
+                    f"{self.name}: {axis}_bandwidth must be positive "
+                    f"(got {bw!r}); pass None to inherit link_bandwidth")
+        if self.link_bandwidth <= 0.0:
+            raise ValueError(f"{self.name}: link_bandwidth must be "
+                             f"positive (got {self.link_bandwidth!r})")
 
     @property
     def effective_flops(self) -> float:
@@ -51,13 +65,14 @@ class DeviceSpec:
 
     def axis_bandwidth(self, axis: str) -> float:
         """Link bandwidth of one mesh axis (``data``/``stage``/
-        ``tensor``), falling back to the scalar ``link_bandwidth``
-        when the per-axis entry is unset."""
+        ``tensor``).  The fallback to the scalar ``link_bandwidth`` is
+        explicit: only an UNSET (None) per-axis entry inherits it; a
+        zero entry is a construction error, never a silent fallback."""
         try:
             bw = getattr(self, f"{axis}_bandwidth")
         except AttributeError:
             raise ValueError(f"unknown mesh axis {axis!r}") from None
-        return bw if bw > 0.0 else self.link_bandwidth
+        return self.link_bandwidth if bw is None else bw
 
 
 # ---------------------------------------------------------------------------
@@ -153,3 +168,83 @@ def homogeneous_cluster(dev: DeviceSpec, n: int) -> ClusterSpec:
 
 def heterogeneous_cluster(devs: Sequence[DeviceSpec]) -> ClusterSpec:
     return ClusterSpec(devices=tuple(devs))
+
+
+# ---------------------------------------------------------------------------
+# Device pools: the 3D explorer's hardware input.
+# ---------------------------------------------------------------------------
+
+def fused_device(base: DeviceSpec, width: int) -> DeviceSpec:
+    """Model a ``width``-chip tensor-parallel stage group as one BaPipe
+    accelerator: width x compute, HBM bandwidth and capacity, while the
+    per-axis link bandwidths stay per-chip (collectives move at the
+    link rate regardless of the group size)."""
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
+    if width == 1:
+        return base
+    return dataclasses.replace(
+        base,
+        name=f"{base.name}x{width}",
+        peak_flops=base.peak_flops * width,
+        hbm_bandwidth=base.hbm_bandwidth * width,
+        memory_capacity=base.memory_capacity * width)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """An UNORDERED pool of accelerators plus per-axis fabric rates —
+    what the 3D explorer plans against.  Unlike :class:`ClusterSpec`
+    (an ordered daisy chain with one device per stage), a fleet is raw
+    capacity: the planner decides how many chips each stage gets (its
+    ``dp x tp`` shard) and only then derives the chain, so "fat stages
+    buy width instead of depth" is expressible.
+
+    Devices within one stage group must be identical (a TP group lock-
+    steps its chips); the pool itself may mix device types — groups are
+    carved from the pool in order."""
+
+    devices: tuple[DeviceSpec, ...]
+
+    def __post_init__(self):
+        if not self.devices:
+            raise ValueError("FleetSpec needs at least one device")
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    @property
+    def homogeneous(self) -> bool:
+        return len({d.name for d in self.devices}) == 1
+
+    @property
+    def base(self) -> DeviceSpec:
+        return self.devices[0]
+
+    def chain(self, widths: Sequence[int]) -> ClusterSpec:
+        """Carve the pool, in order, into ``len(widths)`` stage groups
+        of ``widths[i]`` chips each and return the derived daisy chain
+        of fused stage accelerators.  Rejects over-budget carvings and
+        mixed-device groups."""
+        widths = [int(w) for w in widths]
+        if any(w < 1 for w in widths):
+            raise ValueError(f"stage widths must be >= 1, got {widths}")
+        if sum(widths) > self.n_devices:
+            raise ValueError(
+                f"stage widths {widths} need {sum(widths)} devices, "
+                f"fleet has {self.n_devices}")
+        stages, k = [], 0
+        for w in widths:
+            group = self.devices[k:k + w]
+            k += w
+            if len({d.name for d in group}) != 1:
+                raise ValueError(
+                    f"stage group {group} mixes device types; a TP "
+                    f"group's chips must be identical")
+            stages.append(fused_device(group[0], w))
+        return ClusterSpec(devices=tuple(stages))
+
+
+def homogeneous_fleet(dev: DeviceSpec, n: int) -> FleetSpec:
+    return FleetSpec(devices=(dev,) * n)

@@ -23,9 +23,10 @@ import dataclasses
 import math
 from typing import Optional
 
-from repro.core.hardware import ClusterSpec
+from repro.core.hardware import ClusterSpec, DeviceSpec
 from repro.core.profiler import (LayerProfile, NetworkProfile, bwd_time,
-                                 comm_time, fwd_time)
+                                 bwd_split_time_tp, comm_time, fwd_time,
+                                 fwd_time_tp)
 
 
 @dataclasses.dataclass
@@ -525,3 +526,116 @@ def memory_fine_tune(prof: NetworkProfile, cluster: ClusterSpec,
     mem = stage_memory(cur, feat_mult, M, schedule, mem_limit)
     ok = all(m <= d.memory_capacity for m, d in zip(mem, cluster.devices))
     return cur, ok
+
+
+# ---------------------------------------------------------------------------
+# 3D stage costing: per-stage (dp, tp) shards over a device pool.
+#
+# The 1D partitioner above balances layers across a FIXED device chain.
+# The 3D explorer instead hands each pipeline stage a (dp, tp) chip
+# grid carved from a FleetSpec pool: dp replicas each see mb/dp of the
+# micro-batch, tp shards split every GEMM 1/tp at the price of the
+# per-layer tensor collective.  The functions below turn one such
+# assignment into the same first-class StageCosts vector the builders,
+# simulator and eval_*_hetero forms already consume — width is priced
+# INTO the durations, the `width` field is annotation only.
+# ---------------------------------------------------------------------------
+
+def reshard_sr(act_bytes: float, shard_a: tuple[int, int],
+               shard_b: tuple[int, int], bandwidth: float) -> float:
+    """Boundary transfer time between adjacent stages sharded
+    ``shard_a = (dp_a, tp_a)`` and ``shard_b = (dp_b, tp_b)``.
+
+    When the layouts agree, each of the ``min(tp)`` aligned link pairs
+    carries its own 1/tp activation slice concurrently — the transfer
+    rides ``min(tp_a, tp_b)`` links.  When they differ (a boundary
+    RESHARD), the activation must additionally be regathered and
+    resliced to the consumer's grid — charged as one extra
+    full-activation pass over a single link, the conservative
+    store-and-forward bound."""
+    if act_bytes <= 0.0:
+        return 0.0
+    base = act_bytes / (min(shard_a[1], shard_b[1]) * bandwidth)
+    if tuple(shard_a) != tuple(shard_b):
+        base += act_bytes / bandwidth
+    return base
+
+
+def plan_costs_3d(prof: NetworkProfile, dev: DeviceSpec,
+                  bounds, mb: int, shards,
+                  include_embed_head: bool = True):
+    """Cost a layer partition under per-stage (dp, tp) shards.
+
+    ``bounds`` is the per-stage [start, end) layer ranges, ``shards``
+    one ``(dp, tp)`` pair per stage, ``dev`` the (homogeneous) pool's
+    base chip.  Each stage's dp replicas process ``mb / dp`` of the
+    micro-batch; its GEMMs shard 1/tp with the Megatron collective
+    priced at the chip's ``tensor`` axis bandwidth
+    (:func:`repro.core.profiler.fwd_time_tp`); stage hops pay the
+    :func:`reshard_sr` boundary term at the ``stage`` axis bandwidth.
+    Returns :class:`repro.core.schedplan.StageCosts` with the
+    ``width = dp*tp`` annotation."""
+    from repro.core.schedplan import StageCosts
+    bounds = [tuple(b) for b in bounds]
+    shards = [(int(d), int(t)) for d, t in shards]
+    if len(bounds) != len(shards):
+        raise ValueError(f"{len(bounds)} stages but {len(shards)} shards")
+    if any(d < 1 or t < 1 for d, t in shards):
+        raise ValueError(f"shards must be >= (1, 1), got {shards}")
+    N = len(bounds)
+    F, B, W = [], [], []
+    for i, ((s, e), (dp, tp)) in enumerate(zip(bounds, shards)):
+        units = mb / dp
+        lays = [prof.layers[k] for k in range(s, e)]
+        if include_embed_head:
+            if i == 0 and prof.embed is not None:
+                lays.append(prof.embed)
+            if i == N - 1 and prof.head is not None:
+                lays.append(prof.head)
+        f = b = w = 0.0
+        for lay in lays:
+            f += fwd_time_tp(lay, dev, units, tp)
+            bi, wi = bwd_split_time_tp(lay, dev, units, tp)
+            b += bi
+            w += wi
+        F.append(f)
+        B.append(b)
+        W.append(w)
+    bw = dev.axis_bandwidth("stage")
+    SR = tuple(
+        reshard_sr(prof.layers[bounds[i][1] - 1].bytes_act_out * mb,
+                   shards[i], shards[i + 1], bw)
+        for i in range(N - 1))
+    eps = max(max(F + B + W, default=1.0), 1.0) * 1e-12
+    return StageCosts(
+        F=tuple(max(f, eps) for f in F),
+        B=tuple(max(b, eps) for b in B),
+        W=tuple(max(w, eps) for w in W),
+        SR=SR,
+        width=tuple(d * t for d, t in shards))
+
+
+def stage_memory_3d(prof: NetworkProfile, bounds, shards, mb: int,
+                    live=None, include_embed_head: bool = True
+                    ) -> list[float]:
+    """Per-CHIP memory of each 3D stage: weights+grads shard 1/tp
+    (Megatron splits the parameter matrices), live boundary
+    activations shard across BOTH axes (each chip holds ``mb/dp``
+    samples of a 1/tp hidden slice) — the 'fat stages buy width' lever.
+    ``live`` is the per-stage live-activation count (default the 1F1B
+    ``N - i`` ramp)."""
+    N = len(bounds)
+    if live is None:
+        live = [N - i for i in range(N)]
+    out = []
+    for i, ((s, e), (dp, tp)) in enumerate(zip(bounds, shards)):
+        wbytes = sum(prof.layers[k].bytes_weights for k in range(s, e))
+        if include_embed_head:
+            if i == 0 and prof.embed is not None:
+                wbytes += prof.embed.bytes_weights
+            if i == N - 1 and prof.head is not None:
+                wbytes += prof.head.bytes_weights
+        act = prof.layers[e - 1].bytes_act_out * mb if e - 1 < prof.n_layers \
+            else 0.0
+        out.append(2.0 * wbytes / tp + live[i] * act / (dp * tp))
+    return out

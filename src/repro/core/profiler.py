@@ -98,6 +98,67 @@ def comm_time(act_bytes: float, link_bandwidth: float) -> float:
     return act_bytes / link_bandwidth
 
 
+# Megatron-style tensor parallelism all-reduces the block's activation
+# twice per forward pass (attention out-proj + MLP out-proj) and twice
+# per backward pass; each is a ring AR of the boundary activation over
+# the stage's tp chips on the ``tensor`` axis.
+TP_COLLECTIVES_FWD = 2
+TP_COLLECTIVES_BWD = 2
+
+
+def tp_collective_time(layer: LayerProfile, dev: DeviceSpec, units: int,
+                       tp: int, n_collectives: int = TP_COLLECTIVES_FWD
+                       ) -> float:
+    """Per-micro-batch tensor-parallel collective cost of one layer:
+    ``n_collectives`` ring all-reduces of the layer's activation over
+    ``tp`` chips, priced at the device's ``tensor`` axis bandwidth —
+    NOT the stage link (see :meth:`DeviceSpec.axis_bandwidth`)."""
+    if tp <= 1:
+        return 0.0
+    bw = dev.axis_bandwidth("tensor")
+    return n_collectives * 2.0 * (tp - 1) / tp \
+        * units * layer.bytes_act_out / bw
+
+
+def fwd_time_tp(layer: LayerProfile, dev: DeviceSpec, units: int,
+                tp: int) -> float:
+    """TP-sharded forward roofline: flops and weight streaming both
+    shard 1/tp (Megatron column/row splits), plus the per-layer TP
+    collective — the explicit price of buying width."""
+    if tp <= 1:
+        return fwd_time(layer, dev, units)
+    compute = units * layer.flops_fwd / tp / dev.effective_flops
+    memory = layer.bytes_weights / tp / dev.hbm_bandwidth
+    return max(compute, memory) \
+        + tp_collective_time(layer, dev, units, tp, TP_COLLECTIVES_FWD)
+
+
+def bwd_time_tp(layer: LayerProfile, dev: DeviceSpec, units: int,
+                tp: int) -> float:
+    if tp <= 1:
+        return bwd_time(layer, dev, units)
+    compute = units * layer.flops_bwd / tp / dev.effective_flops
+    memory = 2.0 * layer.bytes_weights / tp / dev.hbm_bandwidth
+    return max(compute, memory) \
+        + tp_collective_time(layer, dev, units, tp, TP_COLLECTIVES_BWD)
+
+
+def bwd_split_time_tp(layer: LayerProfile, dev: DeviceSpec, units: int,
+                      tp: int) -> tuple[float, float]:
+    """(input-gradient, weight-gradient) split of :func:`bwd_time_tp`.
+    The backward's TP collectives sit on the input-gradient (B) half —
+    dL/dx is what crosses the shards; dL/dw is shard-local — so the
+    collective term lands on B, keeping W a pure local GEMM the
+    zero-bubble schedules can float freely."""
+    if tp <= 1:
+        return bwd_split_time(layer, dev, units)
+    compute = units * layer.flops_bwd / tp / dev.effective_flops
+    memory = 2.0 * layer.bytes_weights / tp / dev.hbm_bandwidth
+    t = max(compute, memory)
+    coll = tp_collective_time(layer, dev, units, tp, TP_COLLECTIVES_BWD)
+    return t * (1.0 - layer.w_frac) + coll, t * layer.w_frac
+
+
 # ---------------------------------------------------------------------------
 # Transformer-family analytic profiles (the 10 assigned architectures).
 # ---------------------------------------------------------------------------

@@ -107,17 +107,27 @@ class StageCosts:
     :func:`repro.core.simulator.simulate` replays any plan under
     per-device durations, and the ``eval_*_hetero`` closed forms in
     :mod:`repro.core.schedules` reduce to the uniform forms exactly
-    when :attr:`uniform` holds."""
+    when :attr:`uniform` holds.
+
+    ``width[n]`` annotates how many chips device n's stage actually
+    occupies (its ``dp * tp`` shard of the 3D plan; empty = all 1).
+    The times already price the sharding — width changes no replay
+    duration — but the annotation travels with the vector so the
+    simulator and the hetero evals can report device-seconds and
+    budget-normalised makespans for non-uniform candidates."""
     F: tuple[float, ...]
     B: tuple[float, ...]
     W: tuple[float, ...]
     SR: tuple[float, ...] = ()
+    width: tuple[int, ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "F", tuple(float(x) for x in self.F))
         object.__setattr__(self, "B", tuple(float(x) for x in self.B))
         object.__setattr__(self, "W", tuple(float(x) for x in self.W))
         object.__setattr__(self, "SR", tuple(float(x) for x in self.SR))
+        object.__setattr__(self, "width",
+                           tuple(int(w) for w in self.width))
         n = len(self.F)
         if not (len(self.B) == len(self.W) == n):
             raise ValueError(f"StageCosts vectors disagree on N: "
@@ -130,10 +140,33 @@ class StageCosts:
             raise ValueError(f"StageCosts times must be positive: {self}")
         if any(x < 0 for x in self.SR):
             raise ValueError(f"StageCosts.SR must be >= 0: {self.SR}")
+        if self.width:
+            if len(self.width) != n:
+                raise ValueError(f"StageCosts.width needs one entry per "
+                                 f"device ({n}), got {len(self.width)}")
+            if any(w < 1 for w in self.width):
+                raise ValueError(f"StageCosts.width must be >= 1: "
+                                 f"{self.width}")
 
     @property
     def n(self) -> int:
         return len(self.F)
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        """Per-device chip widths, materialised (ones when unannotated)."""
+        return self.width if self.width else (1,) * self.n
+
+    @property
+    def uniform_width(self) -> bool:
+        """All stages occupy the same chip width — the regime the SPMD
+        runtime can execute directly on a rectangular mesh; non-uniform
+        widths stay analytic (simulator-ranked)."""
+        return len(set(self.widths)) == 1
+
+    def devices_used(self) -> int:
+        """Total chips the annotated plan occupies."""
+        return sum(self.widths)
 
     @property
     def B_full(self) -> tuple[float, ...]:
@@ -173,12 +206,14 @@ class StageCosts:
     def max_scalar(self) -> "StageCosts":
         """Uniform collapse: every device pays the bottleneck device's
         times (and every hop the worst hop) — the cost vector the old
-        scalar interface implied."""
+        scalar interface implied.  The width annotation is preserved:
+        collapsing times says nothing about chip occupancy."""
         return StageCosts(F=(max(self.F),) * self.n,
                           B=(max(self.B),) * self.n,
                           W=(max(self.W),) * self.n,
                           SR=(max(self.sr_hops, default=0.0),)
-                          * max(0, self.n - 1))
+                          * max(0, self.n - 1),
+                          width=self.width)
 
     @classmethod
     def uniform_costs(cls, N: int, F: float, B_full: float,
@@ -277,14 +312,25 @@ class SchedPlan:
         return any(op.kind == "AR"
                    for ops in self.device_ops for op in ops)
 
+    @property
+    def grad_sync_groups(self) -> int:
+        """Number of per-layer-group AR buckets per (device, chunk)
+        (see :func:`add_grad_sync`); 1 for single-bucket plans, 0 when
+        the plan has no grad sync."""
+        ars = [op.m for ops in self.device_ops for op in ops
+               if op.kind == "AR"]
+        return (max(ars) + 1) if ars else 0
+
     def validate(self) -> "SchedPlan":
         """Every (m, chunk) F and B — and W, for zero-bubble plans —
         appears exactly once per device, and the per-(m, v) order is
-        F before B before W.  AR ops (grad-sync plans) are one per
-        (device, chunk), each after the bucket's last B/W."""
+        F before B before W.  AR ops (grad-sync plans) are G per
+        (device, chunk) — ``m`` carries the layer-group index, groups
+        ascending within a chunk — each after the bucket's last B/W."""
         has_w = self.has_w
         per_mv = (3 if has_w else 2)
         release = "W" if has_w else "B"
+        groups = self.grad_sync_groups
         for n, ops in enumerate(self.device_ops):
             seen: dict[tuple[str, int, int], int] = {}
             for i, op in enumerate(ops):
@@ -294,11 +340,21 @@ class SchedPlan:
                                      f"device {n}")
                 seen[key] = i
             n_ar = sum(1 for op in ops if op.kind == "AR")
-            if n_ar not in (0, self.V):
+            if n_ar not in (0, self.V * groups):
                 raise ValueError(
                     f"{self.name}: device {n} has {n_ar} AR ops, expected "
-                    f"0 or one per chunk ({self.V})")
+                    f"0 or {groups} per chunk ({self.V * groups})")
             if n_ar:
+                by_chunk: dict[int, list[int]] = {}
+                for op in ops:
+                    if op.kind == "AR":
+                        by_chunk.setdefault(op.v, []).append(op.m)
+                for v, ms in by_chunk.items():
+                    if ms != list(range(groups)):
+                        raise ValueError(
+                            f"{self.name}: AR(v={v}) on device {n} has "
+                            f"group indices {ms}, expected "
+                            f"{list(range(groups))} ascending")
                 last_release = {
                     op.v: i for i, op in enumerate(ops)
                     if op.kind == release}
@@ -767,17 +823,35 @@ def canonical_name(name: str) -> str:
     return _ALIASES[name][0]
 
 
-def add_grad_sync(plan: SchedPlan) -> SchedPlan:
+def add_grad_sync(plan: SchedPlan, groups: int = 1) -> SchedPlan:
     """Append the data-parallel gradient-sync AR ops to a compute plan:
-    one AR per (device, chunk) parameter bucket, issued after the
-    device's compute drains, earliest-retired bucket first.  The bucket
-    for chunk v is ready the moment its last B/W retires — per-stage
-    readiness, so stage N-1 (whose backward chain finishes first) syncs
-    earliest and stage 0 last; the tick assignment then packs the AR
-    slots into the remaining drain ticks, one bucket in flight at a
-    time on the shared data-axis fabric (see ``_assign_ticks``)."""
+    ``groups`` AR buckets per (device, chunk) parameter bucket, issued
+    after the device's compute drains, earliest-retired bucket first.
+    The bucket for chunk v is ready the moment its last B/W retires —
+    per-stage readiness, so stage N-1 (whose backward chain finishes
+    first) syncs earliest and stage 0 last; the tick assignment then
+    packs the AR slots into the remaining drain ticks, one bucket in
+    flight at a time on the shared data-axis fabric (see
+    ``_assign_ticks``).
+
+    ``groups > 1`` splits each chunk bucket into per-layer-group
+    sub-buckets (``op.m`` carries the group index): the trailing
+    backward produces layer-group gradients progressively in reverse
+    layer order, so group g's slice is final a ``(groups - 1 - g) /
+    groups`` fraction of the final retiring op EARLY — the sub-release
+    model :func:`repro.core.schedules.eval_grad_sync` prices.  At the
+    tick level the sub-buckets still issue after the chunk's last B/W
+    (a tick cannot start mid-op); what the finer grain buys is smaller
+    fabric quanta that interleave across devices' drains and, on real
+    hardware, collectives launched as each group retires."""
     if plan.has_grad_sync:
+        if plan.grad_sync_groups != groups:
+            raise ValueError(
+                f"{plan.name} already carries {plan.grad_sync_groups} "
+                f"grad-sync groups; asked for {groups}")
         return plan
+    if groups < 1:
+        raise ValueError(f"groups must be >= 1, got {groups}")
     release = "W" if plan.has_w else "B"
     device_ops = []
     for n, ops in enumerate(plan.device_ops):
@@ -786,21 +860,25 @@ def add_grad_sync(plan: SchedPlan) -> SchedPlan:
             if op.kind == release:
                 last_release[op.v] = i
         order = sorted(last_release, key=last_release.get)
-        ars = tuple(Op("AR", 0, v, n, plan.N, plan.V) for v in order)
+        ars = tuple(Op("AR", g, v, n, plan.N, plan.V)
+                    for v in order for g in range(groups))
         device_ops.append(tuple(ops) + ars)
     return dataclasses.replace(
         plan, device_ops=tuple(device_ops)).validate()
 
 
 def build_schedule(name: str, M: int, N: int, V: int = 1,
-                   mem_limit=None, grad_sync: bool = False) -> SchedPlan:
+                   mem_limit=None,
+                   grad_sync: Union[bool, int] = False) -> SchedPlan:
     """Build the op table for a schedule by canonical or legacy name.
     ``mem_limit`` is the automatic zero-bubble scheduler's peak-live cap
     (``zb-auto`` only: None = unbounded, int = uniform, sequence =
     per-device); other schedules' memory behaviour is fixed by their
     table and the knob is rejected.  ``grad_sync=True`` appends the
     data-parallel gradient-sync AR ops (:func:`add_grad_sync`) so the
-    sync is scheduled into the drain instead of paid after it."""
+    sync is scheduled into the drain instead of paid after it; an
+    integer > 1 splits each bucket into that many per-layer-group
+    sub-buckets."""
     builder, kw = _ALIASES.get(name, (None, None))
     if builder is None:
         raise ValueError(name)
@@ -813,7 +891,11 @@ def build_schedule(name: str, M: int, N: int, V: int = 1,
                              f"(got {name})")
         kw = dict(kw, mem_limit=mem_limit)
     plan = _BUILDERS[builder](M, N, V, **kw)
-    return add_grad_sync(plan) if grad_sync else plan
+    if grad_sync:
+        return add_grad_sync(plan,
+                             groups=grad_sync if grad_sync is not True
+                             else 1)
+    return plan
 
 
 def resolve_ring_schedule(schedule: str, V: int) -> str:

@@ -773,6 +773,7 @@ class GradSyncEval:
     sequential: float              # sync-at-end baseline: T + sum(ar)
     t_ends: tuple[float, ...]      # per-device compute end times
     ars: tuple[float, ...]         # per-device bucket fabric times
+    groups: int = 1                # layer-group sub-buckets per device
 
     @property
     def exposed(self) -> float:
@@ -796,6 +797,61 @@ def grad_sync_fifo(t_ends, ars) -> float:
             (e, -n, a) for n, (e, a) in enumerate(zip(t_ends, ars))):
         busy = max(busy, end) + a
     return busy
+
+
+def _grouped_releases(t_ends, ars, drains, groups: int):
+    """Expand per-device buckets into ``groups`` layer-group sub-buckets.
+
+    Splitting a bucket WITHOUT moving its release cannot reduce the
+    work-conserving serial-fabric makespan (the closed form is invariant
+    under same-release subdivision).  The win comes from EARLIER
+    releases: the device's final drain op (duration ``drains[n]``)
+    produces its layer gradients progressively in reverse-layer order,
+    so layer group ``g`` of ``G`` retires at
+
+        t(n, g) = T_n - drains[n] * (G - 1 - g) / G
+
+    — the last group at the compute end, the first a full drain-op
+    earlier — each carrying ``ar_n / G`` of the fabric time.  With
+    ``groups == 1`` this is exactly the ungrouped release list."""
+    if groups < 1:
+        raise ValueError(f"groups must be >= 1, got {groups}")
+    rel, sub = [], []
+    for T_n, a, D in zip(t_ends, ars, drains):
+        for g in range(groups):
+            rel.append(T_n - D * (groups - 1 - g) / groups)
+            sub.append(a / groups)
+    return rel, sub
+
+
+def _drain_durations(events, N: int) -> tuple[float, ...]:
+    """Per-device duration of the LAST compute op, from a simulator
+    event log (``(start, end, kind, m, vstage)``; device = vstage %
+    N).  This is the op whose progressive completion the grouped
+    sub-releases model."""
+    dur = [0.0] * N
+    last = [-1.0] * N
+    for s, e, _kind, _m, vs in events:
+        n = vs % N
+        if e >= last[n]:
+            last[n] = e
+            dur[n] = e - s
+    return tuple(dur)
+
+
+def _uniform_drain_durs(name: str, B: float, w_frac: float,
+                        N: int) -> tuple[float, ...] | None:
+    """Closed-form final-drain-op durations matching
+    :func:`_uniform_drain_ends`: the two-op schedules end on a full
+    backward, zb-h1 tucks the final W (the ``w_frac`` share) behind the
+    drain hop."""
+    from repro.core.schedplan import canonical_name
+    cname = canonical_name(name)
+    if cname in ("gpipe", "1f1b", "dapple"):
+        return (B,) * N
+    if cname == "zb-h1":
+        return (B * w_frac,) * N
+    return None
 
 
 def _uniform_drain_ends(name: str, M: int, N: int, F: float, B: float,
@@ -824,39 +880,50 @@ def _uniform_drain_ends(name: str, M: int, N: int, F: float, B: float,
 
 def eval_grad_sync(name: str, M: int, N: int, F: float, B: float,
                    ar, w_frac: float = 0.5, V: int = 1,
-                   mem_limit=None) -> GradSyncEval:
+                   mem_limit=None, groups: int = 1) -> GradSyncEval:
     """Overlap-aware closed form for the exposed gradient-sync time of
     a schedule under uniform per-device costs.  ``ar`` is the
     per-device bucket fabric time (scalar or length-N).  Uses the
     analytic drain ends where the uniform form exists
     (:func:`_uniform_drain_ends`) and the discrete-event replay
     otherwise; the two agree for every builder (differentially
-    tested)."""
+    tested).  ``groups > 1`` splits each device's bucket into
+    per-layer-group sub-buckets released progressively through the
+    final drain op (:func:`_grouped_releases`) — exposed sync is
+    non-increasing in ``groups``."""
+    if groups < 1:
+        raise ValueError(f"groups must be >= 1, got {groups}")
     ars = tuple([float(ar)] * N if isinstance(ar, (int, float))
                 else [float(a) for a in ar])
     if len(ars) != N:
         raise ValueError(f"ar needs one entry per device ({N}), "
                          f"got {len(ars)}")
     ends = _uniform_drain_ends(name, M, N, F, B, w_frac) if V == 1 else None
+    drains = _uniform_drain_durs(name, B, w_frac, N) if ends else None
     if ends is None:
         from repro.core.schedplan import build_schedule
         from repro.core.simulator import simulate
         plan = build_schedule(name, M, N, V, mem_limit=mem_limit)
         sim = simulate(plan, M, N, F, B, 0.0, V=V, w_frac=w_frac)
         ends = tuple(sim.t_end)
+        drains = _drain_durations(sim.events, N)
+    rel, sub = _grouped_releases(ends, ars, drains, groups)
     T = max(ends)
     return GradSyncEval(
         name=name, compute_makespan=T,
-        overlapped=grad_sync_fifo(ends, ars),
-        sequential=T + sum(ars), t_ends=ends, ars=ars)
+        overlapped=grad_sync_fifo(rel, sub),
+        sequential=T + sum(ars), t_ends=ends, ars=ars, groups=groups)
 
 
 def eval_grad_sync_costs(name: str, M: int, N: int, costs: StageCosts,
-                         ar, mem_limit=None) -> GradSyncEval:
+                         ar, mem_limit=None, groups: int = 1) -> GradSyncEval:
     """Heterogeneous form of :func:`eval_grad_sync`: per-device drain
     ends from the cost-shaped replay (:func:`_replay_hetero`), so the
     exposed sync the explorer ranks by matches what the simulator pins
-    on skewed clusters."""
+    on skewed clusters.  ``groups`` as in :func:`eval_grad_sync`, with
+    the drain-op durations read off the replay's event log."""
+    if groups < 1:
+        raise ValueError(f"groups must be >= 1, got {groups}")
     ars = tuple([float(ar)] * N if isinstance(ar, (int, float))
                 else [float(a) for a in ar])
     if len(ars) != N:
@@ -865,11 +932,33 @@ def eval_grad_sync_costs(name: str, M: int, N: int, costs: StageCosts,
     _, sim = _replay_hetero(canonical_replay_name(name), M, N, costs,
                             mem_limit=mem_limit)
     ends = tuple(sim.t_end)
+    rel, sub = _grouped_releases(ends, ars, _drain_durations(sim.events, N),
+                                 groups)
     T = max(ends)
     return GradSyncEval(
         name=name, compute_makespan=T,
-        overlapped=grad_sync_fifo(ends, ars),
-        sequential=T + sum(ars), t_ends=ends, ars=ars)
+        overlapped=grad_sync_fifo(rel, sub),
+        sequential=T + sum(ars), t_ends=ends, ars=ars, groups=groups)
+
+
+def eval_grad_sync_2bw(name: str, M: int, N: int, F: float, B: float,
+                       ar, w_frac: float = 0.5, V: int = 1,
+                       mem_limit=None) -> GradSyncEval:
+    """Steady-state sync cost under PipeDream-2BW double-buffered
+    weights: step k's gradient all-reduce is consumed only at step
+    k+1's weight apply, so the collective has a full step of slack and
+    is never on the critical path — ``overlapped == compute_makespan``
+    (exposed == 0) whenever the fabric can drain ``sum(ar)`` within one
+    step, i.e. ``sum(ar) <= compute_makespan``.  Beyond that the
+    fabric itself is the bottleneck and the step pays the excess."""
+    sync = eval_grad_sync(name, M, N, F, B, ar, w_frac=w_frac, V=V,
+                          mem_limit=mem_limit)
+    T = sync.compute_makespan
+    total_ar = sum(sync.ars)
+    return GradSyncEval(
+        name=name, compute_makespan=T,
+        overlapped=max(T, total_ar),
+        sequential=sync.sequential, t_ends=sync.t_ends, ars=sync.ars)
 
 
 def canonical_replay_name(name: str) -> str:

@@ -70,6 +70,10 @@ class SimResult:
     # compute op in start order — the trace the instruction-stream
     # runtime's slot assignment is differentially checked against
     events: list[tuple] = dataclasses.field(default_factory=list)
+    # per-stage device widths (dp*tp chips behind each pipeline stage)
+    # when the replay was costed from a width-annotated StageCosts —
+    # annotation only, the durations already price the sharding
+    widths: tuple = ()
 
     def bubble_fraction(self, stage: int = 0) -> float:
         return self.idle[stage] / self.makespan if self.makespan else 0.0
@@ -122,7 +126,8 @@ _DEFAULT_COMM = {
 
 def op_durations(N: int, V: int, Fs: Sequence[float], Bs: Sequence[float],
                  wfs: Sequence[float], has_w: bool,
-                 ars: Sequence[float] | None = None) -> dict:
+                 ars: Sequence[float] | None = None,
+                 ar_groups: int = 1) -> dict:
     """Per-virtual-stage op durations — the single duration model shared
     by the discrete-event simulator, the instruction-stream runtime's
     timing expectations and the benchmarks.  For W-bearing plans the
@@ -131,7 +136,8 @@ def op_durations(N: int, V: int, Fs: Sequence[float], Bs: Sequence[float],
     divides device time evenly across the device's chunks.  ``ars`` is
     the per-device gradient-sync time (the device's whole stage bucket
     crossing the data-axis fabric); each of the V chunk buckets costs
-    an even 1/V share."""
+    an even 1/V share, and each of a chunk's ``ar_groups`` layer-group
+    sub-buckets an even share of that."""
     NS = N * V
     dur = {"F": [Fs[vs % N] / V for vs in range(NS)],
            "B": [Bs[vs % N] / V
@@ -139,7 +145,7 @@ def op_durations(N: int, V: int, Fs: Sequence[float], Bs: Sequence[float],
                  for vs in range(NS)],
            "W": [Bs[vs % N] / V * wfs[vs % N] for vs in range(NS)]}
     if ars is not None:
-        dur["AR"] = [ars[vs % N] / V for vs in range(NS)]
+        dur["AR"] = [ars[vs % N] / V / ar_groups for vs in range(NS)]
     return dur
 
 
@@ -149,7 +155,7 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
              comm: str | None = None,
              w_frac: float | Sequence[float] = 0.5,
              ar: float | Sequence[float] | None = None,
-             grad_sync: bool = False) -> SimResult:
+             grad_sync: bool | int = False) -> SimResult:
     """Simulate one mini-batch of M micro-batches through N devices.
 
     ``schedule`` is a schedule name (the op table is built via
@@ -180,7 +186,9 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
     default 0).  AR ops serialize on one fabric resource (at most one
     bucket in flight, ready buckets granted highest-device-first) and
     are unaffected by the stage-boundary ``comm`` model — the data
-    axis is a different set of links than the stage rings.
+    axis is a different set of links than the stage rings.  An integer
+    ``grad_sync=G`` emits G per-layer-group sub-buckets per (device,
+    chunk), each costing an even ``ar/V/G`` share.
     """
     Fs = list(F) if not isinstance(F, (int, float)) else [float(F)] * N
     Bs = list(B) if not isinstance(B, (int, float)) else [float(B)] * N
@@ -217,7 +225,8 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
                 f"plan {plan.name!r} is (M={plan.M}, N={plan.N}, "
                 f"V={plan.V}); simulate() was asked for ({M}, {N}, {V})")
         if grad_sync:
-            plan = SP.add_grad_sync(plan)
+            plan = SP.add_grad_sync(
+                plan, groups=1 if grad_sync is True else int(grad_sync))
         default_comm = _DEFAULT_COMM.get(plan.name, "free")
     else:
         default_comm = _DEFAULT_COMM.get(schedule)
@@ -234,7 +243,8 @@ def simulate(schedule: str | SP.SchedPlan, M: int, N: int,
         raise ValueError(comm)
 
     NS = N * V                                 # virtual stages
-    dur = op_durations(N, V, Fs, Bs, wfs, has_w, ars)
+    dur = op_durations(N, V, Fs, Bs, wfs, has_w, ars,
+                       ar_groups=plan.grad_sync_groups or 1)
 
     # --- task state ------------------------------------------------------
     f_done = [[-1.0] * NS for _ in range(M)]   # completion time of F[m][vs]
@@ -383,7 +393,7 @@ def simulate_costs(schedule: str | SP.SchedPlan, M: int, N: int,
                    costs: SP.StageCosts,
                    comm: str | None = None,
                    ar: float | Sequence[float] | None = None,
-                   grad_sync: bool = False) -> SimResult:
+                   grad_sync: bool | int = False) -> SimResult:
     """Replay a (V == 1) schedule under a first-class
     :class:`~repro.core.schedplan.StageCosts` vector: per-device F and
     full-backward durations, per-device ``w_frac`` split, per-hop SR.
@@ -391,13 +401,17 @@ def simulate_costs(schedule: str | SP.SchedPlan, M: int, N: int,
     (a dedicated comm engine paying each boundary's own transfer time),
     ``free`` otherwise — matching the cost-shaped ``zb-auto`` builder's
     arrival model, so a builder's internal makespan and this replay
-    agree."""
+    agree.  The costs' per-stage ``width`` annotation (dp*tp chips per
+    stage) is carried onto the result — the durations already price
+    the sharding, so the replay itself is width-agnostic."""
     if costs.n != N:
         raise ValueError(f"costs are for {costs.n} devices, "
                          f"simulate_costs was asked for N={N}")
     sr = list(costs.sr_hops)
     if comm is None:
         comm = "latency" if any(s > 0 for s in sr) else "free"
-    return simulate(schedule, M, N, list(costs.F), list(costs.B_full),
-                    sr, V=1, comm=comm, w_frac=list(costs.w_frac),
-                    ar=ar, grad_sync=grad_sync)
+    res = simulate(schedule, M, N, list(costs.F), list(costs.B_full),
+                   sr, V=1, comm=comm, w_frac=list(costs.w_frac),
+                   ar=ar, grad_sync=grad_sync)
+    res.widths = tuple(costs.widths)
+    return res

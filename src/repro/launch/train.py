@@ -56,13 +56,24 @@ def main(argv=None):
                          " scheduled SEND slots, so W/idle slots overlap"
                          " compute with no barrier)")
     ap.add_argument("--grad-sync", default="",
-                    choices=("", "auto", "end", "overlap"),
+                    choices=("", "auto", "end", "overlap", "2bw"),
                     help="data-parallel gradient sync placement: end"
                          " (trailing full-pytree psum) | overlap (AR"
                          " bucket ops scheduled into the pipeline drain,"
                          " executed inside the tick scan; needs"
-                         " --runtime stream) | auto (overlap iff the"
+                         " --runtime stream) | 2bw (PipeDream-2BW"
+                         " double-buffered weights: step k's grads apply"
+                         " at step k+1, so the AR never blocks the next"
+                         " step's warmup — sync-free steady state,"
+                         " stale-by-one) | auto (overlap iff the"
                          " stream runtime is active)")
+    ap.add_argument("--ar-groups", type=int, default=1,
+                    help="with overlapped grad sync: split each per-"
+                         "(device, chunk) AR bucket into N per-layer-"
+                         "group buckets released as each group's W"
+                         " retires mid-drain (earlier release, lower"
+                         " exposed sync; layers per chunk must divide"
+                         " evenly)")
     ap.add_argument("--mem-limit", type=int, default=0,
                     help="zb-auto only: peak-live cap (resident micro-batch"
                          " residuals per device). 0 = unbounded, the fully"
@@ -110,6 +121,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--auto-plan", action="store_true",
                     help="let the BaPipe explorer pick stages/tensor/M")
+    ap.add_argument("--auto-plan3d", action="store_true",
+                    help="search the per-stage (DP, TP) degree space over "
+                         "a homogeneous device pool (--pool chips) and "
+                         "adopt the best UNIFORM executable plan; non-"
+                         "uniform winners are reported analytically")
+    ap.add_argument("--pool", type=int, default=0,
+                    help="device-pool size for --auto-plan3d "
+                         "(default: jax.device_count())")
     ap.add_argument("--cluster", default="",
                     help="comma-separated per-stage device names for "
                          "--auto-plan on a heterogeneous pod "
@@ -144,6 +163,23 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, mem_limit=args.mem_limit)
     if args.cluster and not args.auto_plan:
         ap.error("--cluster only applies to --auto-plan")
+    if args.auto_plan and args.auto_plan3d:
+        ap.error("--auto-plan and --auto-plan3d are mutually exclusive")
+    if args.auto_plan3d:
+        from repro.core.autoplan import auto_plan3d
+        plan_ = auto_plan3d(cfg, global_batch=args.batch, seq_len=args.seq,
+                            n_devices=args.pool or jax.device_count(),
+                            mem_limit=args.mem_limit or None)
+        cfg = plan_.apply(cfg)
+        args.data = plan_.data_axis
+        args.microbatches = plan_.n_microbatches
+        widths = "x".join(str(w) for w in plan_.stage_widths)
+        print(f"auto-plan3d: stages={plan_.stages} data={plan_.data_axis} "
+              f"tensor={plan_.tensor} M={plan_.n_microbatches} "
+              f"sched={plan_.schedule} widths={widths} "
+              f"(predicted {plan_.predicted_step_time*1e3:.2f} ms/step, "
+              f"{plan_.predicted_speedup_over_dp:.2f}x over best "
+              f"pipeline-only)")
     if args.auto_plan:
         from repro.core.autoplan import auto_plan
         devices = None
@@ -186,8 +222,13 @@ def main(argv=None):
     pcfg = RT.PipelineConfig(n_microbatches=args.microbatches,
                              schedule=cfg.schedule, remat=args.remat,
                              mem_limit=cfg.mem_limit, runtime=cfg.runtime,
-                             grad_sync=args.grad_sync or "auto")
+                             grad_sync=args.grad_sync or "auto",
+                             ar_groups=args.ar_groups)
     step_fn, specs = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
+    if args.grad_sync == "2bw":
+        # the wrapped state (inner/pending/primed) is what gets stepped,
+        # checkpointed, and resumed
+        opt_state = RT.init_2bw_state(opt_state, params)
 
     layout = layout_dict(plan, cfg.n_layers)
 

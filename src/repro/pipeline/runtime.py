@@ -119,15 +119,30 @@ class PipelineConfig:
                                     # where some device SENDs, so ops take
                                     # their actual durations and W/idle
                                     # slots run communication-free
-    grad_sync: str = "auto"         # auto | end | overlap.  'overlap'
-                                    # compiles the data-axis gradient
-                                    # all-reduce into the schedule as AR
-                                    # bucket ops executed inside the tick
-                                    # scan (stream runtime only — the AR
-                                    # slots ride the instruction stream);
-                                    # 'end' keeps the trailing
-                                    # full-pytree psum; 'auto' overlaps
-                                    # iff runtime='stream'
+    grad_sync: str = "auto"         # auto | end | overlap | 2bw.
+                                    # 'overlap' compiles the data-axis
+                                    # gradient all-reduce into the
+                                    # schedule as AR bucket ops executed
+                                    # inside the tick scan (stream
+                                    # runtime only — the AR slots ride
+                                    # the instruction stream); 'end'
+                                    # keeps the trailing full-pytree
+                                    # psum; 'auto' overlaps iff
+                                    # runtime='stream'.  '2bw' is
+                                    # PipeDream-2BW double-buffered
+                                    # weights: step k's (fully synced)
+                                    # gradients are applied at step k+1,
+                                    # so the collective has a whole step
+                                    # of slack — sync-free steady state
+                                    # at a pinned one-step staleness
+                                    # (both runtimes; needs an optimizer
+                                    # and the 2bw-wrapped opt state,
+                                    # :func:`init_2bw_state`)
+    ar_groups: int = 1              # grad_sync='overlap': split each
+                                    # (device, chunk) gradient bucket
+                                    # into this many per-layer-group AR
+                                    # sub-buckets (layers per chunk must
+                                    # divide evenly); 1 = one bucket
     pod_role: str = "data"          # data | stage  (stage = pipeline over DCN)
     unroll: bool = False            # fully unroll ALL scans (roofline mode)
     gate_ticks: bool = False        # serve: lax.cond-skip invalid ticks so
@@ -460,12 +475,24 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
     if pcfg.runtime not in ("ticks", "stream"):
         raise ValueError(f"unknown runtime {pcfg.runtime!r}: "
                          f"expected ticks | stream")
-    if pcfg.grad_sync not in ("auto", "end", "overlap"):
+    if pcfg.grad_sync not in ("auto", "end", "overlap", "2bw"):
         raise ValueError(f"unknown grad_sync {pcfg.grad_sync!r}: "
-                         f"expected auto | end | overlap")
+                         f"expected auto | end | overlap | 2bw")
     if pcfg.grad_sync == "overlap" and pcfg.runtime != "stream":
         raise ValueError("grad_sync='overlap' requires runtime='stream' "
                          "(the tick replay has no AR slots)")
+    two_bw = pcfg.grad_sync == "2bw"
+    if two_bw and optimizer is None:
+        raise ValueError("grad_sync='2bw' double-buffers the weight "
+                         "update and needs an optimizer")
+    if pcfg.ar_groups < 1:
+        raise ValueError(f"ar_groups must be >= 1, got {pcfg.ar_groups}")
+    if pcfg.ar_groups > 1 and not (
+            pcfg.runtime == "stream"
+            and pcfg.grad_sync in ("auto", "overlap")):
+        raise ValueError("ar_groups > 1 splits the OVERLAPPED AR buckets; "
+                         "it requires runtime='stream' with "
+                         "grad_sync='overlap' (or 'auto')")
     dp_size = mesh.shape.get("data", 1)
     # layer-grad leaves the in-scan AR covers: replicated over data
     # (fsdp-sharded leaves keep the trailing sync)
@@ -477,10 +504,12 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                         and pcfg.runtime == "stream"))
     overlap_sync = (overlap_sync and dp_size > 1
                     and any(jax.tree.leaves(ar_mask)))
+    ar_groups = pcfg.ar_groups if overlap_sync else 1
     sched = SP.resolve_ring_schedule(pcfg.schedule, V)
     ml = (pcfg.mem_limit or None) if sched == "zb-auto" else None
     plan_ir = SP.build_schedule(sched, M_, S, V, mem_limit=ml,
-                                grad_sync=overlap_sync)
+                                grad_sync=ar_groups if overlap_sync
+                                else False)
     instr = (SP.lower_to_instructions(plan_ir)
              if pcfg.runtime == "stream" else None)
     lowering = instr.ticks if instr else SP.lower_to_ticks(plan_ir)
@@ -719,6 +748,8 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
             carry = lax.switch(jnp.clip(kind_t, 0, len(branches) - 1),
                                branches, carry)
             if plan_ir.has_grad_sync:
+                n_groups = plan_ir.grad_sync_groups or 1
+
                 def ar_fn(c):
                     """One AR slot: reduce-scatter + all-gather this
                     device's retired chunk-``v_t`` layer-grad bucket over
@@ -727,27 +758,48 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                     within one data group all members share a stage ->
                     identical tables -> they sync the same bucket
                     together.  Groups whose device holds no AR here
-                    compute a discarded sum (masked write-back)."""
+                    compute a discarded sum (masked write-back).  With
+                    ``ar_groups > 1`` the AR op's ``m`` field is the
+                    layer-group index: each slot syncs only rows
+                    ``[g * Lc/G, (g+1) * Lc/G)`` of the chunk's grads —
+                    every element still reduced exactly once, so the
+                    result stays bit-equal to the one-bucket sync."""
                     arw = g("kind") == SP.TICK_AR
+                    g_t = g("m")        # AR ops carry the group index
                     dlp_leaves, treedef = jax.tree.flatten(c["dlp"])
                     masks = jax.tree.leaves(ar_mask)
-                    slices = [
+                    chunks = [
                         (i, lax.dynamic_index_in_dim(a, v_t, 0,
                                                      keepdims=False)
                             if V > 1 else a)
                         for i, (a, el) in enumerate(zip(dlp_leaves,
                                                         masks)) if el]
+                    slices = []
+                    for i, ch in chunks:
+                        if n_groups > 1:
+                            rows = ch.shape[0]
+                            if rows % n_groups:
+                                raise ValueError(
+                                    f"ar_groups={n_groups} must divide "
+                                    f"the {rows} layers per chunk "
+                                    f"(leaf {i})")
+                            rg = rows // n_groups
+                            sl = lax.dynamic_slice_in_dim(
+                                ch, g_t * rg, rg, 0)
+                        else:
+                            sl = ch
+                        slices.append((i, ch, sl))
                     # pack per dtype (concat cannot mix), one RS+AG over
                     # data per dtype, unpack; dp=2's single addition per
                     # element keeps the result bit-equal to the trailing
                     # psum it replaces
                     by_dt: dict = {}
-                    for i, sl in slices:
-                        by_dt.setdefault(sl.dtype, []).append((i, sl))
+                    for i, ch, sl in slices:
+                        by_dt.setdefault(sl.dtype, []).append((i, ch, sl))
                     out = dict(enumerate(dlp_leaves))
                     for dt, group in by_dt.items():
                         flat = jnp.concatenate(
-                            [sl.reshape(-1) for _, sl in group])
+                            [sl.reshape(-1) for _, _, sl in group])
                         pad = (-flat.size) % dp_size
                         if pad:
                             flat = jnp.concatenate(
@@ -758,11 +810,15 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
                         full = lax.all_gather(red, "data", axis=0,
                                               tiled=True)
                         off = 0
-                        for i, sl in group:
+                        for i, ch, sl in group:
                             new = full[off:off + sl.size].reshape(
                                 sl.shape)
                             off += sl.size
                             new = jnp.where(arw, new, sl)
+                            if n_groups > 1:
+                                rg = ch.shape[0] // n_groups
+                                new = lax.dynamic_update_slice_in_dim(
+                                    ch, new, g_t * rg, 0)
                             out[i] = (lax.dynamic_update_index_in_dim(
                                 dlp_leaves[i], new, v_t, 0)
                                 if V > 1 else new)
@@ -855,12 +911,43 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, plan: ST.StagePlan,
 
     opt_update = optimizer.make_update(specs, mesh)
 
-    def full_step(params, opt_state, batch):
-        loss, grads = fn(params, batch)
-        params, opt_state = opt_update(params, grads, opt_state)
-        return params, opt_state, dict(loss=loss)
+    if two_bw:
+        def full_step(params, opt_state, batch):
+            # PipeDream-2BW double-buffered weights: compute step k's
+            # grads as usual, but APPLY the stashed step k-1 grads —
+            # the pending collective result isn't consumed until the
+            # next call, giving it a full step of slack (sync-free
+            # steady state).  Step 0 applies its own grads (warmup:
+            # nothing is pending), so the trajectory is the synchronous
+            # one shifted by exactly one step from step 1 on.
+            loss, grads = fn(params, batch)
+            primed = opt_state["primed"]
+            apply_g = jax.tree.map(
+                lambda p, g: jnp.where(primed, p, g),
+                opt_state["pending"], grads)
+            params, inner = opt_update(params, apply_g,
+                                       opt_state["inner"])
+            new_state = dict(inner=inner, pending=grads,
+                             primed=jnp.ones((), jnp.bool_))
+            return params, new_state, dict(loss=loss)
+    else:
+        def full_step(params, opt_state, batch):
+            loss, grads = fn(params, batch)
+            params, opt_state = opt_update(params, grads, opt_state)
+            return params, opt_state, dict(loss=loss)
 
     return jax.jit(full_step, donate_argnums=(0, 1)), specs
+
+
+def init_2bw_state(opt_state, params):
+    """Wrap an optimizer state for ``grad_sync='2bw'`` double-buffered
+    weights: ``pending`` holds the previous step's gradients (zeros
+    until the first step), ``primed`` flips True after step 0 so the
+    warmup step applies its own gradients instead of the zero
+    buffer."""
+    return dict(inner=opt_state,
+                pending=jax.tree.map(jnp.zeros_like, params),
+                primed=jnp.zeros((), jnp.bool_))
 
 
 def state_shardings(mesh: Mesh, specs, opt_state=None):
@@ -872,8 +959,10 @@ def state_shardings(mesh: Mesh, specs, opt_state=None):
     Returns the param sharding tree alone, or — given an ``opt_state``
     skeleton — ``(param_shardings, opt_shardings)`` where any opt-state
     entry whose tree structure mirrors the params (AdamW's ``m``/``v``
-    moments, SGD's momentum) inherits the param shardings and
-    everything else (step counters) is replicated."""
+    moments, SGD's momentum, the 2bw ``pending`` gradient buffer)
+    inherits the param shardings; nested wrappers (the 2bw
+    ``inner``/``pending``/``primed`` dict) recurse, and everything else
+    (step counters, flags) is replicated."""
     param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
     if opt_state is None:
         return param_sh
@@ -883,6 +972,8 @@ def state_shardings(mesh: Mesh, specs, opt_state=None):
     def mirror(sub):
         if jax.tree.structure(sub) == pstruct:
             return param_sh
+        if isinstance(sub, dict):
+            return {k: mirror(v) for k, v in sub.items()}
         return jax.tree.map(lambda _: rep, sub)
 
     return param_sh, {k: mirror(v) for k, v in opt_state.items()}

@@ -375,6 +375,137 @@ def dp_overlap(arch="llama3.2-1b", stages=4, tensor=1,
     print("OK " + " ".join(f"{k}={v:.2e}" for k, v in worsts.items()))
 
 
+def tp_equivalence(arch="llama3.2-1b", stages=2, microbatches=4,
+                   *schedules):
+    """Uniform-TP execution on the real ``tensor`` axis: a tp=2 plan run
+    under BOTH runtimes and the bubble-light ring builders must produce
+    grads equal to the single-device reference (and ticks == stream
+    bit-equal) — the 3D planner's uniform (dp, tp) candidates are
+    executable plans, not just analytic entries."""
+    stream_equivalence(arch, stages, 2, microbatches,
+                       *(schedules or ("1f1b", "zb-h1")))
+
+
+def two_bw(arch="llama3.2-1b", stages=2, microbatches=2, steps=4,
+           schedule="1f1b"):
+    """PipeDream-2BW double-buffered weights: ``grad_sync='2bw'`` must
+    apply stale-by-one exactly — step 0 applies its own gradients
+    (warmup), step k >= 1 applies step k-1's.  Pinned by replaying the
+    run's OWN recorded gradient snapshots (``pending``) through the
+    optimizer on the host with the one-step lag and requiring the
+    parameter trajectory to match tightly; the grads themselves must
+    match the synchronous ``grad_sync='end'`` step, and the trajectory
+    must DIFFER from applying each step's fresh grads (the staleness is
+    pinned semantics, not noise)."""
+    from repro.optim import AdamW
+    data = 8 // stages or 1
+    assert data > 1, "two_bw needs a data axis"
+    cfg, plan, params = _setup(arch, stages, 1)
+    mesh = _mesh(data, stages, 1)
+    opt = AdamW(lr=1e-2)
+
+    def batch_k(k):
+        kt, kl = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(3),
+                                                     k))
+        return dict(tokens=jax.random.randint(kt, (8, 32), 0, cfg.vocab),
+                    labels=jax.random.randint(kl, (8, 32), 0, cfg.vocab))
+
+    pcfg = RT.PipelineConfig(n_microbatches=microbatches, schedule=schedule,
+                             runtime="stream", grad_sync="2bw")
+    step2, _ = RT.make_train_step(cfg, mesh, plan, pcfg, optimizer=opt)
+    p2 = jax.tree.map(lambda a: a.copy(), params)
+    st = RT.init_2bw_state(opt.init(p2), p2)
+    traj, pendings, losses2 = [], [], []
+    host = lambda t: jax.tree.map(np.array, t)   # copy off donated buffers
+    for k in range(steps):
+        p2, st, m = step2(p2, st, batch_k(k))
+        losses2.append(float(m["loss"]))
+        traj.append(host(p2))
+        pendings.append(host(st["pending"]))
+
+    # grads must equal the synchronous step's grads at the same params
+    gstep, _ = RT.make_train_step(cfg, mesh, plan, RT.PipelineConfig(
+        n_microbatches=microbatches, schedule=schedule, runtime="stream",
+        grad_sync="end"))
+    loss0, g0 = gstep(params, batch_k(0))
+    assert abs(float(loss0) - losses2[0]) < 1e-5, (float(loss0), losses2[0])
+    gerr = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.max(np.abs(np.asarray(a) - np.asarray(b)))
+                           / (np.max(np.abs(np.asarray(b))) + 1e-9)),
+        pendings[0], g0)))
+    assert gerr < 1e-4, gerr
+
+    # host replay with the one-step lag must reproduce the trajectory
+    pr, opt_ref = params, opt.init(params)
+    perr = 0.0
+    for k in range(steps):
+        apply_g = pendings[0] if k == 0 else pendings[k - 1]
+        pr, opt_ref = opt.update(pr, apply_g, opt_ref)
+        perr = max(perr, max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(np.max(np.abs(np.asarray(a) - np.asarray(b)))
+                               / (np.max(np.abs(np.asarray(b))) + 1e-9)),
+            traj[k], pr))))
+    assert perr < 1e-6, perr
+
+    # ...and the NON-stale replay (fresh grads each step) must diverge
+    ps, opt_s = params, opt.init(params)
+    for k in range(steps):
+        ps, opt_s = opt.update(ps, pendings[k], opt_s)
+    diverged = any(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b)))) > 1e-6
+        for a, b in zip(jax.tree.leaves(ps), jax.tree.leaves(traj[-1])))
+    assert steps < 2 or diverged, "2bw trajectory identical to synchronous"
+    print(f"OK gerr={gerr:.2e} perr={perr:.2e} stale-by-one pinned")
+
+
+def ar_groups(arch="llama3.2-1b", stages=2, groups=2, microbatches=2,
+              *schedules):
+    """Satellite: per-layer-group AR buckets (``ar_groups=G``, released
+    as each group's W retires mid-drain) must be a pure scheduling
+    change — loss/grads BIT-EQUAL to the one-bucket overlapped sync;
+    every element is still reduced exactly once."""
+    import dataclasses as _dc
+    schedules = schedules or ("1f1b", "zb-h1")
+    data = 8 // stages or 1
+    assert data > 1, "ar_groups needs a data axis"
+    mesh = _mesh(data, stages, 1)
+    worsts = {}
+    for sched in schedules:
+        # each per-stage chunk must split into `groups` layer groups
+        cfg = get_config(arch).reduced(n_layers=max(2, int(groups)) * stages,
+                                       d_model=128)
+        cfg = _dc.replace(cfg, stages=stages, tensor=1)
+        plan = ST.plan_stages(cfg)
+        params = ST.init_stacked_params(cfg, jax.random.PRNGKey(0), plan)
+        batch = _batch(cfg, 8, 32)
+        rp = _ref_params(cfg, params, plan)
+        ref_grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch))(rp)
+        gr = jax.tree.map(np.asarray, ref_grads["layers"])
+        outs = {}
+        for g in (1, int(groups)):
+            pcfg = RT.PipelineConfig(n_microbatches=microbatches,
+                                     schedule=str(sched), runtime="stream",
+                                     grad_sync="overlap", ar_groups=g)
+            step, _ = RT.make_train_step(cfg, mesh, plan, pcfg)
+            loss, grads = step(params, batch)
+            outs[g] = (float(loss), jax.tree.map(np.asarray, grads))
+        l1, g1 = outs[1]
+        lg, gg = outs[int(groups)]
+        assert lg == l1, (sched, lg, l1)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                     gg, g1)
+        gp = jax.tree.map(
+            lambda a: np.asarray(ST.unstack_chunks(a, plan))[:cfg.n_layers],
+            gg["layers"])
+        errs = jax.tree.map(
+            lambda a, b: float(np.max(np.abs(a - b))
+                               / (np.max(np.abs(b)) + 1e-9)), gp, gr)
+        worst = max(jax.tree.leaves(errs))
+        assert worst < 1e-4, (sched, worst)
+        worsts[str(sched)] = worst
+    print("OK " + " ".join(f"{k}={v:.2e}" for k, v in worsts.items()))
+
+
 def pos3_ring(arch="qwen2-vl-7b", stages=4, tensor=1, virtual=1,
               microbatches=4, schedule="auto"):
     """Regression for the latent pos3 defect: per-micro-batch DISTINCT
@@ -683,6 +814,9 @@ if __name__ == "__main__":
      "schedule_equivalence": schedule_equivalence,
      "stream_equivalence": stream_equivalence,
      "dp_overlap": dp_overlap,
+     "tp_equivalence": tp_equivalence,
+     "two_bw": two_bw,
+     "ar_groups": ar_groups,
      "pos3_ring": pos3_ring,
      "prefill_equivalence": prefill_equivalence,
      "interleaved_decode": interleaved_decode,

@@ -149,6 +149,32 @@ def test_dp_overlap_grad_sync_bit_equality(schedules):
              timeout=540)
 
 
+def test_tp_grad_equivalence_both_runtimes():
+    """Uniform-TP execution on the real tensor axis: tp=2 x {ticks,
+    stream} x {1f1b, zb-h1} gradients must equal the single-device
+    reference (ticks == stream bit-equal) — the 3D planner's uniform
+    (dp, tp) candidates are executable plans, not just analytic
+    entries."""
+    run_case("tp_equivalence", "llama3.2-1b", timeout=540)
+
+
+def test_2bw_stale_by_one_weight_updates():
+    """PipeDream-2BW double-buffered weights (grad_sync='2bw'): the
+    parameter trajectory must equal the host-side stale-by-one replay
+    of the run's own gradient snapshots — step 0 applies its own grads,
+    step k applies step k-1's — and must differ from the non-stale
+    replay."""
+    run_case("two_bw", "llama3.2-1b", timeout=540)
+
+
+@pytest.mark.parametrize("groups", ["2", "4"])
+def test_ar_groups_bucket_split_bit_equality(groups):
+    """Finer-grained AR buckets (ar_groups=G, released as each layer
+    group's W retires mid-drain) must leave loss/grads bit-equal to the
+    single-bucket overlapped sync — a pure scheduling change."""
+    run_case("ar_groups", "llama3.2-1b", "2", groups, timeout=540)
+
+
 @pytest.mark.parametrize("virtual", ["1", "2"])
 def test_pos3_rides_the_ppermute_ring(virtual):
     """Regression (pre-seed defect): per-micro-batch DISTINCT M-RoPE
